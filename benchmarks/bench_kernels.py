@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks (interpret mode on CPU — wall numbers are for
+relative comparison between paths; the TPU-relevant numbers are the
+FLOP/byte reductions, which are exact)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core.sparse import bsr_from_mask, bsr_matmul
+from repro.kernels.sasp_gemm import ops as sasp_ops
+
+RNG = np.random.default_rng(0)
+
+
+def bench_kernels() -> List:
+    rows = []
+    print("\n== kernel microbench (CPU; interpret mode) ==")
+    for (M, K, N, bk, bn, sp) in [
+        (128, 512, 512, 64, 64, 0.0),
+        (128, 512, 512, 64, 64, 0.25),
+        (128, 512, 512, 64, 64, 0.5),
+        (128, 512, 512, 64, 64, 0.75),
+    ]:
+        x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+        w = RNG.normal(size=(K, N)).astype(np.float32)
+        mask = RNG.random((K // bk, N // bn)) >= sp
+        dense_t = time_fn(jax.jit(lambda a, b: a @ b), x, jnp.asarray(w))
+
+        bsr = bsr_from_mask(w, mask, bk, bn)
+        bsr_t = time_fn(jax.jit(bsr_matmul), x, bsr)
+
+        wv, kn, _ = sasp_ops.build_kernel_weight(w, mask, bk, bn)
+        kern = lambda xx: sasp_ops.sasp_matmul_packed(xx, wv, kn, n=N)
+        kern_t = time_fn(kern, x)
+
+        flop_frac = mask.mean()
+        print(f"  M{M} K{K} N{N} b{bk} sp={sp:.2f}: dense={dense_t:8.0f}us"
+              f" bsr={bsr_t:8.0f}us pallas(intp)={kern_t:9.0f}us "
+              f" flops x{flop_frac:.2f}")
+        rows.append((f"kern/sasp/sp{sp:.2f}", kern_t,
+                     f"dense_us={dense_t:.0f};bsr_us={bsr_t:.0f};"
+                     f"flop_frac={flop_frac:.3f}"))
+    return rows

@@ -1,0 +1,36 @@
+"""The 40-cell roofline table, read from the dry-run artifacts
+(experiments/dryrun/*.json). See EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import load_dryrun_reports
+
+
+def bench_roofline() -> List:
+    reports = load_dryrun_reports()
+    rows = []
+    print("\n== roofline table (from dry-run artifacts) ==")
+    if not reports:
+        print("  (no dry-run artifacts — run python -m repro.launch.dryrun"
+              " --all)")
+        return rows
+    print(f"  {'arch':26s} {'shape':12s} {'mesh':8s} "
+          f"{'bound':>9s} {'bottleneck':10s} {'useful':>7s} {'fits':>4s}")
+    for r in reports:
+        if r.get("note"):
+            continue                    # variants reported in §Perf
+        print(f"  {r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['bound_s']*1e3:8.2f}ms {r['bottleneck']:10s} "
+              f"{min(r['useful_flops_frac'],9.99):6.1%} "
+              f"{'Y' if r['fits_hbm'] else 'N':>4s}")
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["bound_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};"
+            f"compute_s={r['compute_s']:.5f};"
+            f"memory_s={r['memory_s']:.5f};"
+            f"collective_s={r['collective_s']:.5f};"
+            f"useful={r['useful_flops_frac']:.3f};"
+            f"fits={int(r['fits_hbm'])}"))
+    return rows

@@ -1,0 +1,272 @@
+"""One benchmark per paper table/figure (DESIGN.md §8).
+
+Each function returns a list of CSV rows (name, us_per_call, derived)
+and prints a human-readable block. ``us_per_call`` is the modeled edge
+runtime (µs) where the figure is model-driven, or a measured wall time
+for kernel benches.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import emit, load_qos, measured_qos_fn
+from repro.core.codesign import (
+    best_under_qos,
+    exponential_qos_proxy,
+    pareto_front,
+    speedup_at_fixed_qos,
+    sweep,
+)
+from repro.core.cost_model import (
+    GEMMWork,
+    SystolicConfig,
+    cpu_time_s,
+    encoder_gemms,
+    energy_j,
+    scale_to_t_base,
+    speedup_vs_cpu,
+    workload_time_s,
+)
+
+# paper Table 1 rows (workload = encoder GEMM mix)
+WORKLOADS = {
+    "espnet-asr": dict(num_layers=18, d_model=512, d_ff=2048, seq=512),
+    "espnet2-asr": dict(num_layers=12, d_model=512, d_ff=2048, seq=512),
+    "espnet2-asr-mt": dict(num_layers=24, d_model=320, d_ff=1536,
+                           seq=512),   # ASR+MT cascade (averaged dims)
+}
+
+PAPER_TABLE3 = {
+    # (quant, size): (area mm2, nosasp speedup, nosasp E, prune%, sasp
+    #                 speedup, sasp E)
+    ("fp32", 4): (0.05, 8.42, 1.60, 25, 10.56, 1.27),
+    ("fp32", 8): (0.21, 19.79, 3.09, 25, 25.01, 2.43),
+    ("fp32", 16): (0.83, 35.22, 6.37, 20, 42.21, 5.28),
+    ("fp32", 32): (3.34, 50.95, 15.32, 20, 60.91, 12.70),
+    ("int8", 4): (0.03, 8.03, 1.18, 25, 10.08, 0.99),
+    ("int8", 8): (0.14, 20.18, 2.67, 20, 24.23, 2.21),
+    ("int8", 16): (0.53, 36.53, 4.57, 20, 43.74, 3.79),
+    ("int8", 32): (2.13, 61.33, 10.64, 20, 73.25, 8.82),
+}
+
+
+def _qos_fn():
+    qos = load_qos()
+    if qos is not None:
+        return measured_qos_fn(qos), "measured"
+    return exponential_qos_proxy(), "proxy"
+
+
+def _qos_target(default: float = 5.0) -> float:
+    """Paper target = base WER + 1.5pt headroom (3.5% -> 5%). Our
+    trained model's base TER differs slightly, so the fair target is
+    base + 1.5 (not an absolute 5%)."""
+    qos = load_qos()
+    if qos is not None:
+        return qos["base_ter"] + 1.5
+    return default
+
+
+def _builder(wl: str):
+    kw = WORKLOADS[wl]
+    return lambda s: encoder_gemms(ffn_sparsity=s, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fig 6 — area / power vs array size × quantization
+# ---------------------------------------------------------------------------
+
+
+def fig6_area_power() -> List:
+    print("\n== Fig 6: synthesis (area/power) across array sizes ==")
+    rows = []
+    for size in (4, 8, 16, 32):
+        for quant in ("fp32", "int8"):
+            sa = SystolicConfig(size=size, quant=quant)
+            print(f"  {size:2d}x{size:<2d} {quant}: area={sa.area_mm2:6.3f}"
+                  f" mm2  power={sa.power_w*1e3:8.1f} mW")
+            rows.append((f"fig6/{quant}/{size}x{size}", 0.0,
+                         f"area_mm2={sa.area_mm2:.4f};"
+                         f"power_w={sa.power_w:.4f}"))
+    a_sav = 1 - SystolicConfig(8, "int8").area_mm2 / \
+        SystolicConfig(8, "fp32").area_mm2
+    p_sav = 1 - SystolicConfig(8, "int8").power_w / \
+        SystolicConfig(8, "fp32").power_w
+    print(f"  INT8 savings: area {a_sav:.1%} (paper avg 35.3%), "
+          f"power {p_sav:.1%} (paper avg 19.5%)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 7 — SASP speedup/energy at QoS target, per workload × array size
+# ---------------------------------------------------------------------------
+
+
+def fig7_speedup_energy(qos_target: float = None) -> List:
+    qos_target = qos_target or _qos_target()
+    qos_fn, src = _qos_fn()
+    print(f"\n== Fig 7: SASP gains at QoS<= {qos_target}% ({src} QoS), "
+          f"vs non-pruned INT8 executions ==")
+    rows = []
+    for wl in WORKLOADS:
+        builder = _builder(wl)
+        pts = sweep(builder, qos_fn, quants=("int8",))
+        sel = best_under_qos(pts, qos_target)
+        for size in (4, 8, 16, 32):
+            sa = SystolicConfig(size, "int8")
+            base_t = workload_time_s(sa, builder(0.0))
+            base_e = energy_j(sa, builder(0.0))
+            p = sel.get((size, "int8"))
+            if p is None:
+                continue
+            sp = base_t / (p.time_s / scale_to_t_base(builder(0.0)))
+            en = 1 - p.energy_j / base_e
+            print(f"  {wl:16s} {size:2d}x{size:<2d}: speedup +{sp-1:6.1%} "
+                  f"energy -{en:6.1%} @prune {p.sparsity:.0%}")
+            rows.append((f"fig7/{wl}/{size}", p.time_s * 1e6,
+                         f"speedup_gain={sp-1:.3f};energy_gain={en:.3f};"
+                         f"prune={p.sparsity}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 8 — per-layer runtime after global pruning (trained model)
+# ---------------------------------------------------------------------------
+
+
+def fig8_per_layer() -> List:
+    qos = load_qos()
+    rows = []
+    print("\n== Fig 8: per-FFN-matrix sparsity under a global budget ==")
+    if qos is None:
+        print("  (qos cache missing — run benchmarks.qos_harness)")
+        return rows
+    for rate, per in qos["per_layer"].items():
+        print(f"  global rate {rate}:")
+        for name, sp in sorted(per.items()):
+            short = name.replace("segments/0/", "").replace("/w", "")
+            bar = "#" * int(sp * 40)
+            print(f"    {short:28s} prune={sp:6.1%} |{bar}")
+            rows.append((f"fig8/{rate}/{short}", 0.0,
+                         f"layer_sparsity={sp:.4f};"
+                         f"runtime_share={1-sp:.4f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 9 — QoS vs pruning rate × tile size (trained model)
+# ---------------------------------------------------------------------------
+
+
+def fig9_qos_curves() -> List:
+    qos = load_qos()
+    rows = []
+    print("\n== Fig 9: TER (≙WER) vs SASP rate ==")
+    if qos is None:
+        print("  (qos cache missing)")
+        return rows
+    by = {}
+    for r in qos["records"]:
+        by.setdefault((r["tile"], r["quant"]), []).append(r)
+    for (tile, quant), rs in sorted(by.items()):
+        rs.sort(key=lambda r: r["rate"])
+        curve = " ".join(f"{r['rate']:.1f}:{r['ter']:.2f}" for r in rs)
+        print(f"  tile={tile:2d} {quant}: {curve}")
+        for r in rs:
+            rows.append((f"fig9/{quant}/t{tile}/r{r['rate']}", 0.0,
+                         f"ter={r['ter']:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 10 — speedup × QoS × area-energy trade-off scatter
+# ---------------------------------------------------------------------------
+
+
+def fig10_tradeoff() -> List:
+    qos_fn, src = _qos_fn()
+    print(f"\n== Fig 10: trade-off scatter ({src} QoS) ==")
+    builder = _builder("espnet-asr")
+    pts = sweep(builder, qos_fn)
+    front = pareto_front(pts)
+    rows = []
+    for p in sorted(front, key=lambda p: (p.tile, p.quant, p.sparsity)):
+        print(f"  PARETO tile={p.tile:2d} {p.quant} prune={p.sparsity:.0%}"
+              f" qos={p.qos:5.2f} speedup={p.speedup:6.2f}"
+              f" AE={p.area_energy:8.3f}")
+        rows.append((f"fig10/{p.quant}/t{p.tile}/s{p.sparsity:.2f}",
+                     p.time_s * 1e6,
+                     f"qos={p.qos:.3f};speedup={p.speedup:.2f};"
+                     f"area_energy={p.area_energy:.4f};pareto=1"))
+    print(f"  {len(front)}/{len(pts)} points on the Pareto front")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 11 — sublinear speedup vs array size at fixed QoS
+# ---------------------------------------------------------------------------
+
+
+def fig11_sublinear() -> List:
+    qos_fn, src = _qos_fn()
+    builder = _builder("espnet-asr")
+    pts = sweep(builder, qos_fn)
+    rows = []
+    print(f"\n== Fig 11: speedup vs array size at fixed QoS ({src}) ==")
+    for target in (4.0, 5.0, 7.0):
+        sel = speedup_at_fixed_qos(pts, target, "int8")
+        if len(sel) < 2:
+            continue
+        sizes = sorted(sel)
+        sps = [sel[s] for s in sizes]
+        # sublinearity: speedup ratio grows slower than PE-count ratio
+        ratio = (sps[-1] / sps[0]) / ((sizes[-1] / sizes[0]) ** 2)
+        print(f"  QoS<={target}: " + " ".join(
+            f"{s}x{s}:{v:.1f}" for s, v in sel.items())
+            + f"   (vs quadratic PE growth: {ratio:.2f}x)")
+        for s, v in sel.items():
+            rows.append((f"fig11/q{target}/{s}", 0.0,
+                         f"speedup={v:.2f};sublinearity={ratio:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — reproduction vs paper, cell by cell
+# ---------------------------------------------------------------------------
+
+
+def table3() -> List:
+    qos_fn, src = _qos_fn()
+    builder = _builder("espnet-asr")
+    pts = sweep(builder, qos_fn)
+    sel = best_under_qos(pts, _qos_target())
+    rows = []
+    print(f"\n== Table 3 reproduction ({src} QoS) — ours vs paper ==")
+    print("  cfg          area    speedup(noSASP)   prune%   "
+          "speedup(SASP)")
+    for (quant, size), pap in sorted(PAPER_TABLE3.items()):
+        sa = SystolicConfig(size, quant)
+        no_sp = speedup_vs_cpu(sa, builder(0.0))
+        p = sel.get((size, quant))
+        sp = p.speedup if p else float("nan")
+        pr = p.sparsity * 100 if p else float("nan")
+        print(f"  {quant}@{size:<3d} {sa.area_mm2:5.2f}/{pap[0]:5.2f}  "
+              f"{no_sp:6.2f}/{pap[1]:6.2f}      {pr:3.0f}/{pap[3]:3.0f}  "
+              f"  {sp:6.2f}/{pap[4]:6.2f}")
+        rows.append((f"table3/{quant}/{size}", 0.0,
+                     f"area={sa.area_mm2:.3f};paper_area={pap[0]};"
+                     f"speedup={no_sp:.2f};paper_speedup={pap[1]};"
+                     f"sasp_speedup={sp:.2f};paper_sasp={pap[4]}"))
+    # headline: SASP+quant vs dense fp32 at 32x32
+    base = speedup_vs_cpu(SystolicConfig(32, "fp32"), builder(0.0))
+    p = sel.get((32, "int8"))
+    if p:
+        gain = p.speedup / base - 1
+        print(f"  headline 32x32 SASP+INT8 vs dense FP32: +{gain:.0%} "
+              f"(paper: +44%)")
+        rows.append(("table3/headline", 0.0,
+                     f"system_gain={gain:.3f};paper=0.44"))
+    return rows

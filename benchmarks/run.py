@@ -1,0 +1,32 @@
+"""Benchmark entry point: one function per paper table/figure plus the
+kernel microbenches and the roofline table.
+
+Prints a human-readable block per benchmark followed by machine-readable
+``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, bench_roofline, paper_figures
+
+    rows = []
+    rows += paper_figures.fig6_area_power()
+    rows += paper_figures.fig7_speedup_energy()
+    rows += paper_figures.fig8_per_layer()
+    rows += paper_figures.fig9_qos_curves()
+    rows += paper_figures.fig10_tradeoff()
+    rows += paper_figures.fig11_sublinear()
+    rows += paper_figures.table3()
+    rows += bench_kernels.bench_kernels()
+    rows += bench_roofline.bench_roofline()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's co-design flow (Fig 2) end to end: sweep (tile × rate ×
+quant) with the cost model + measured-or-proxy QoS, pick the best design
+under a QoS budget, print the full trade-off table and the Pareto set.
+
+Run: PYTHONPATH=src python examples/codesign_explore.py [--qos-target X]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import load_qos, measured_qos_fn
+from repro.core.codesign import (
+    best_under_qos,
+    exponential_qos_proxy,
+    pareto_front,
+    sweep,
+)
+from repro.core.cost_model import encoder_gemms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--qos-target", type=float, default=None)
+    args = ap.parse_args()
+
+    qos = load_qos()
+    if qos is not None:
+        qos_fn, src = measured_qos_fn(qos), "measured (trained model)"
+        target = args.qos_target or qos["base_ter"] + 1.5
+    else:
+        qos_fn, src = exponential_qos_proxy(), "proxy (paper-shaped)"
+        target = args.qos_target or 5.0
+
+    builder = lambda s: encoder_gemms(num_layers=18, d_model=512,
+                                      d_ff=2048, seq=512, ffn_sparsity=s)
+    pts = sweep(builder, qos_fn)
+    print(f"QoS source: {src}; target <= {target:.2f}%")
+    print(f"{len(pts)} design points; Pareto front: "
+          f"{len(pareto_front(pts))}")
+
+    print("\nbest design per (tile, quant) under the QoS budget:")
+    sel = best_under_qos(pts, target)
+    for (tile, quant), p in sorted(sel.items()):
+        print(f"  {tile:2d}x{tile:<2d} {quant}: prune {p.sparsity:4.0%} "
+              f"qos {p.qos:5.2f}%  speedup {p.speedup:6.2f}x  "
+              f"E {p.energy_j:6.2f} J  area {p.area_mm2:5.2f} mm2")
+
+    best = max(sel.values(), key=lambda p: p.speedup / p.area_energy)
+    print(f"\nrecommended edge design (speedup per area-energy): "
+          f"{best.tile}x{best.tile} {best.quant} @ {best.sparsity:.0%} "
+          f"pruning -> {best.speedup:.1f}x, {best.energy_j:.2f} J, "
+          f"{best.area_mm2:.2f} mm2, QoS {best.qos:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Batched serving with SASP-deployed weights + int8 KV cache.
+
+Trains nothing — builds a small model, deploys it three ways (dense /
+SASP-masked / SASP+int8-KV) and serves the same request batch through
+the slot-based engine, comparing outputs and reporting per-path step
+timings.
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import SASPConfig, get_config, reduced
+from repro.core.pruning import prune_params
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    sasp = SASPConfig(enabled=True, block_k=16, block_n=16, sparsity=0.25)
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3-32b"), layers=4, d_model=128, vocab=256),
+        sasp=sasp)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 256, size=(n,)).astype(np.int32)
+               for n in (17, 33, 8, 25, 40, 12)]
+
+    def requests():
+        return [Request(rid=i, prompt=p, max_new_tokens=16)
+                for i, p in enumerate(prompts)]
+
+    results = {}
+    for name, (p, c) in {
+        "dense": (params, cfg),
+        "sasp-25%": (prune_params(params, sasp)[0], cfg),
+        "sasp+int8kv": (prune_params(params, sasp)[0],
+                        dataclasses.replace(cfg, kv_quant=True)),
+    }.items():
+        eng = Engine(p, c, batch_slots=4, cache_len=128)
+        t0 = time.time()
+        done = eng.run(requests())
+        dt = time.time() - t0
+        outs = {r.rid: r.out_tokens for r in done}
+        results[name] = outs
+        total_toks = sum(len(v) for v in outs.values())
+        print(f"{name:12s}: {len(done)} requests, {total_toks} tokens in "
+              f"{dt:.1f}s ({dt/total_toks*1e3:.0f} ms/token on CPU)")
+
+    agree = sum(
+        int(results["sasp-25%"][i] == results["sasp+int8kv"][i])
+        for i in results["dense"])
+    diff = sum(
+        int(results["dense"][i] != results["sasp-25%"][i])
+        for i in results["dense"])
+    print(f"\nint8-KV vs fp-KV (same pruned weights): {agree}/"
+          f"{len(prompts)} sequences identical")
+    print(f"pruning changed {diff}/{len(prompts)} sequences "
+          f"(untrained model — the QoS tier quantifies the real effect)")
+    first = results["dense"][0][:8]
+    print(f"sample continuation (dense, req 0): {first}")
+
+
+if __name__ == "__main__":
+    main()

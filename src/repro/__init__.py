@@ -1,0 +1,2 @@
+"""repro — SASP (Systolic-Array Structured Pruning) co-design framework in JAX."""
+__version__ = "1.0.0"

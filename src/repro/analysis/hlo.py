@@ -1,0 +1,183 @@
+"""Post-SPMD HLO text parsing: collective-byte accounting.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+Collectives inside ``while`` bodies (``lax.scan`` over layers / chunks)
+are multiplied by the loop trip count, recovered from the loop-condition
+computation's comparison constant — XLA CPU reports while bodies once,
+both in cost_analysis and in a naive text scan.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY )?(%[\w\.\-]+|[\w\.\-]+) \(.*\) -> .*\{\s*$", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
+_COLL_RE = re.compile(
+    r"= (\([^)]*\)|\w+\[[\d,]*\]\S*) (all-gather|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute)(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def split_computations(hlo_text: str) -> Dict[str, str]:
+    """{computation name: body text}. HLO text format: computations are
+    top-level blocks 'name (params) -> type {' ... '}'."""
+    comps: Dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    cur_name, buf = None, []
+    for ln in lines:
+        m = _COMP_HDR.match(ln)
+        if m:
+            cur_name = m.group(1).lstrip("%")
+            buf = []
+        elif ln.startswith("}"):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(buf)
+            cur_name = None
+        elif cur_name is not None:
+            buf.append(ln)
+    return comps
+
+
+def _trip_count(cond_text: str) -> int:
+    """Scan conditions compare the induction var against a constant;
+    take the max integer constant as the trip count (≥1)."""
+    consts = [int(c) for c in re.findall(r"constant\((\d+)\)", cond_text)]
+    return max(consts) if consts else 1
+
+
+def _direct_collectives(text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for m in _COLL_RE.finditer(text):
+        shape_part, kind, start = m.groups()
+        if shape_part.startswith("("):
+            sizes = [_shape_bytes(sm.group(1), sm.group(2))
+                     for sm in _SHAPE_RE.finditer(shape_part)]
+            total = max(sizes) if sizes else 0      # async: dest buffer
+        else:
+            sm = _SHAPE_RE.search(shape_part)
+            total = _shape_bytes(sm.group(1), sm.group(2)) if sm else 0
+        out[kind] += total
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Trip-count-aware per-kind collective bytes (per device)."""
+    comps = split_computations(hlo_text)
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def comp_cost(name: str) -> Dict[str, int]:
+        name = name.lstrip("%")
+        if name in memo:
+            return memo[name]
+        memo[name] = {}                 # cycle guard
+        text = comps.get(name, "")
+        total = defaultdict(int, _direct_collectives(text))
+        for wm in _WHILE_RE.finditer(text):
+            cond, body = wm.group(1).lstrip("%"), wm.group(2).lstrip("%")
+            trips = _trip_count(comps.get(cond, ""))
+            for k, v in comp_cost(body).items():
+                total[k] += v * trips
+        # non-while calls (fusion computations may hold collectives—rare)
+        memo[name] = dict(total)
+        return memo[name]
+
+    # entry computation: the one named ...main... or the largest
+    entry = None
+    for n in comps:
+        if "main" in n or n.startswith("ENTRY"):
+            entry = n
+            break
+    m = re.search(r"ENTRY (%?[\w\.\-]+)", hlo_text)
+    if m:
+        entry = m.group(1).lstrip("%")
+    if entry is None or entry not in comps:
+        # fall back: flat scan (undercounts loops)
+        return dict(_direct_collectives(hlo_text))
+    return comp_cost(entry)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())
+
+
+def cpu_f32_upcast_bytes(hlo_text: str, min_bytes: int = 1 << 26) -> int:
+    """XLA CPU artifact: bf16 dot operands are upcast to f32 and the
+    convert of whole stacked carry buffers is hoisted out of loops,
+    inflating temp memory vs a native-bf16 TPU compile. Detect large f32
+    tensors whose exact dims also appear as a bf16 tensor and return
+    their total bytes (to subtract from the CPU memory_analysis)."""
+    f32 = set(re.findall(r"f32\[([\d,]+)\]", hlo_text))
+    bf16 = set(re.findall(r"bf16\[([\d,]+)\]", hlo_text))
+    total = 0
+    for dims in f32 & bf16:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total
+
+
+def collective_f32_twin_bytes(hlo_text: str,
+                              min_bytes: int = 1 << 22) -> int:
+    """Bytes of f32 collectives whose dims also exist as bf16 tensors —
+    the CPU-backend upcast artifact applied to TP activation all-reduces
+    (bf16-native on TPU, so half these bytes are accounting inflation).
+    Trip-count aware."""
+    comps = split_computations(hlo_text)
+    bf16_dims = set(re.findall(r"bf16\[([\d,]+)\]", hlo_text))
+    memo: Dict[str, int] = {}
+
+    def comp_cost(name: str) -> int:
+        name = name.lstrip("%")
+        if name in memo:
+            return memo[name]
+        memo[name] = 0
+        text = comps.get(name, "")
+        total = 0
+        for m in _COLL_RE.finditer(text):
+            shape_part = m.group(1)
+            sm = _SHAPE_RE.search(shape_part)
+            if sm and sm.group(1) == "f32" and sm.group(2) in bf16_dims:
+                b = _shape_bytes("f32", sm.group(2))
+                if b >= min_bytes:
+                    total += b
+        for wm in _WHILE_RE.finditer(text):
+            cond, body = wm.group(1).lstrip("%"), wm.group(2).lstrip("%")
+            total += comp_cost(body) * _trip_count(comps.get(cond, ""))
+        memo[name] = total
+        return total
+
+    m = re.search(r"ENTRY (%?[\w\.\-]+)", hlo_text)
+    if not m or m.group(1).lstrip("%") not in comps:
+        return 0
+    return comp_cost(m.group(1))
+
+
+def count_ops(hlo_text: str, *names: str) -> Dict[str, int]:
+    return {n: len(re.findall(rf"\b{re.escape(n)}", hlo_text))
+            for n in names}

@@ -1,0 +1,116 @@
+"""Three-term roofline per (arch × shape × mesh) from the dry-run.
+
+Sources (see DESIGN.md §2 + counters.py docstring):
+  * FLOPs / HBM bytes — analytic counters (XLA CPU cost_analysis counts
+    while bodies once; validated vs cost_analysis on unrolled configs);
+    raw cost_analysis numbers are kept in the report for reference.
+  * collective bytes — parsed from the compiled (post-SPMD) HLO with
+    while-trip multiplication (analysis/hlo.py).
+  * per-device memory — compiled.memory_analysis(), with the CPU-backend
+    f32-upcast artifact subtracted (bf16 is native on TPU).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.analysis.counters import step_costs
+from repro.analysis.hlo import (
+    collective_bytes,
+    collective_f32_twin_bytes,
+    cpu_f32_upcast_bytes,
+)
+from repro.core.tpu_model import (
+    HBM_BYTES,
+    RooflineTerms,
+    model_flops,
+    roofline,
+)
+
+
+@dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                  # analytic, global per step
+    bytes_hbm: float              # analytic, global per step
+    bytes_coll: float             # HLO-parsed, global (= per-device × chips)
+    coll_breakdown: Dict[str, int]
+    peak_memory_per_device: int   # corrected for CPU f32-upcast artifact
+    peak_memory_raw: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound_s: float
+    bottleneck: str
+    model_flops: float            # 6·N_active·D (train) / 2·N·D (serve)
+    useful_flops_frac: float      # MODEL_FLOPS / step FLOPs
+    fits_hbm: bool
+    xla_raw_flops: float = 0.0    # cost_analysis (while-once; reference)
+    xla_raw_bytes: float = 0.0
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze_compiled(arch: str, shape, mesh_name: str, chips: int,
+                     compiled, cfg, note: str = "",
+                     sparsity: float = 0.0,
+                     weight_quant_bytes: int = 0) -> CellReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    # CPU backend upcasts bf16 TP-activation all-reduces to f32; on TPU
+    # they run in bf16 — subtract half of the affected bytes.
+    f32_twin = collective_f32_twin_bytes(hlo)
+    coll_global = (float(sum(coll.values())) - 0.5 * f32_twin) * chips
+
+    ma = compiled.memory_analysis()
+    raw_peak = sum(int(getattr(ma, a, 0) or 0) for a in
+                   ("temp_size_in_bytes", "argument_size_in_bytes",
+                    "output_size_in_bytes"))
+    # donated args alias outputs — don't double count
+    raw_peak -= min(int(getattr(ma, "output_size_in_bytes", 0) or 0),
+                    int(getattr(ma, "argument_size_in_bytes", 0) or 0))
+    upcast = cpu_f32_upcast_bytes(hlo)
+    peak = max(raw_peak - upcast, 0)
+
+    costs = step_costs(cfg, shape, sparsity=sparsity,
+                       weight_quant_bytes=weight_quant_bytes)
+    terms = roofline(costs.flops, costs.bytes_hbm, coll_global, chips)
+    mf = model_flops(cfg, shape)
+    return CellReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops=costs.flops, bytes_hbm=costs.bytes_hbm,
+        bytes_coll=coll_global,
+        coll_breakdown={k: int(v) for k, v in coll.items()},
+        peak_memory_per_device=peak, peak_memory_raw=raw_peak,
+        compute_s=terms.compute_s, memory_s=terms.memory_s,
+        collective_s=terms.collective_s, bound_s=terms.bound_s,
+        bottleneck=terms.bottleneck,
+        model_flops=mf,
+        useful_flops_frac=(mf / costs.flops) if costs.flops else 0.0,
+        fits_hbm=peak <= HBM_BYTES,
+        xla_raw_flops=raw_flops, xla_raw_bytes=raw_bytes,
+        note=note,
+    )
+
+
+def format_row(r: CellReport) -> str:
+    return (f"{r.arch:26s} {r.shape:12s} {r.mesh:8s} "
+            f"cmp={r.compute_s*1e3:9.3f}ms mem={r.memory_s*1e3:9.3f}ms "
+            f"col={r.collective_s*1e3:9.3f}ms [{r.bottleneck:10s}] "
+            f"useful={min(r.useful_flops_frac, 9.99):5.1%} "
+            f"peak={r.peak_memory_per_device/2**30:6.2f}GiB "
+            f"fits={'Y' if r.fits_hbm else 'N'}")

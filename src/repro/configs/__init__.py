@@ -1,0 +1,43 @@
+from repro.configs import archs as _archs  # noqa: F401  (registers archs)
+from repro.configs.archs import ASSIGNED_ARCHS
+from repro.configs.base import (
+    MIXER_ATTN,
+    MIXER_MAMBA,
+    ATTN_GLOBAL,
+    ATTN_LOCAL,
+    FFN_DENSE,
+    FFN_MOE,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    MULTI_POD,
+    SASPConfig,
+    ShapeConfig,
+    SINGLE_POD,
+    SSMConfig,
+    get_config,
+    list_archs,
+    reduced,
+    register,
+    with_sasp,
+)
+from repro.configs.shapes import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    get_shape,
+    shapes_for,
+    skipped_shapes_for,
+)
+
+__all__ = [
+    "ASSIGNED_ARCHS", "ALL_SHAPES", "MeshConfig", "ModelConfig", "MoEConfig",
+    "MULTI_POD", "SASPConfig", "ShapeConfig", "SINGLE_POD", "SSMConfig",
+    "get_config", "get_shape", "list_archs", "reduced", "register",
+    "shapes_for", "skipped_shapes_for", "with_sasp",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "MIXER_ATTN", "MIXER_MAMBA", "ATTN_GLOBAL", "ATTN_LOCAL",
+    "FFN_DENSE", "FFN_MOE",
+]

@@ -1,0 +1,1 @@
+from repro.core import pruning, quantization, sparse  # noqa: F401

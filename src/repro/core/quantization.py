@@ -1,0 +1,136 @@
+"""Weight-only INT8 quantization (paper §3.1/§3.3, the FP32_INT8 setting).
+
+The paper programs sign-magnitude INT8 weights into the array and keeps
+FP32 activations; the hybrid multiplier dequantizes implicitly. The TPU
+analogue: weights live as INT8 (+ per-block fp32 scales) in HBM/VMEM —
+4× fewer weight bytes, exactly the paper's 4-weights-per-bus-word — and
+are dequantized right before the MXU (fused in the Pallas kernel).
+
+Symmetric per-(block_k × block_n) scales; block matched to the SASP tile so
+pruning metadata and quant metadata share a layout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedWeight:
+    """q: int8 (..., K, N); scale: fp32 (..., KB, NB); block is static."""
+
+    def __init__(self, q, scale, block: Tuple[int, int]):
+        self.q = q
+        self.scale = scale
+        self.block = tuple(block)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.block
+
+    @classmethod
+    def tree_unflatten(cls, block, children):
+        q, scale = children
+        return cls(q, scale, block)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def nbytes_weights(self) -> int:
+        return self.q.size  # 1 byte each
+
+    def __repr__(self):
+        return (f"QuantizedWeight(q={getattr(self.q, 'shape', None)}, "
+                f"block={self.block})")
+
+
+def quantize_int8(w: jnp.ndarray, bk: int, bn: int) -> QuantizedWeight:
+    *lead, K, N = w.shape
+    bk, bn = min(bk, K), min(bn, N)
+    KB, NB = K // bk, N // bn
+    wb = w.reshape(*lead, KB, bk, NB, bn).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wb), axis=(-3, -1), keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wb / scale), -127, 127).astype(jnp.int8)
+    return QuantizedWeight(
+        q=q.reshape(*lead, K, N),
+        scale=scale.reshape(*lead, KB, NB),
+        block=(bk, bn),
+    )
+
+
+def dequantize_int8(qw: QuantizedWeight, dtype=jnp.float32) -> jnp.ndarray:
+    bk, bn = qw.block
+    *lead, K, N = qw.q.shape
+    KB, NB = K // bk, N // bn
+    qb = qw.q.reshape(*lead, KB, bk, NB, bn).astype(jnp.float32)
+    wb = qb * qw.scale[..., :, None, :, None]
+    return wb.reshape(*lead, K, N).astype(dtype)
+
+
+def quant_error(w: jnp.ndarray, bk: int, bn: int) -> float:
+    """Relative Frobenius reconstruction error — used by tests and the QoS
+    tier to bound the INT8 degradation independently of pruning."""
+    qw = quantize_int8(w, bk, bn)
+    wd = dequantize_int8(qw)
+    num = jnp.linalg.norm((w.astype(jnp.float32) - wd).reshape(-1))
+    den = jnp.maximum(jnp.linalg.norm(w.astype(jnp.float32).reshape(-1)),
+                      1e-12)
+    return float(num / den)
+
+
+# ---------------------------------------------------------------------------
+# Packing: 4 × int8 per 32-bit word (paper's bus layout). On TPU this is a
+# storage/bandwidth statement — we keep int8 arrays (XLA already stores them
+# at 1 byte) and expose pack/unpack for the cost model + checkpoint format.
+# ---------------------------------------------------------------------------
+
+
+def pack_int8_to_u32(q: jnp.ndarray) -> jnp.ndarray:
+    """int8 (..., N) with N % 4 == 0 -> uint32 (..., N // 4)."""
+    *lead, N = q.shape
+    assert N % 4 == 0, N
+    u = q.astype(jnp.uint8).astype(jnp.uint32).reshape(*lead, N // 4, 4)
+    shifts = jnp.array([0, 8, 16, 24], dtype=jnp.uint32)
+    return jnp.sum(u << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_u32_to_int8(p: jnp.ndarray) -> jnp.ndarray:
+    *lead, M = p.shape
+    shifts = jnp.array([0, 8, 16, 24], dtype=jnp.uint32)
+    u = (p[..., None] >> shifts) & jnp.uint32(0xFF)
+    return u.astype(jnp.uint8).astype(jnp.int8).reshape(*lead, M * 4)
+
+
+# ---------------------------------------------------------------------------
+# int8 with error feedback — reused by optimizer-state quant and gradient
+# compression (beyond-paper: the paper's quantization theme applied to the
+# distributed-training side).
+# ---------------------------------------------------------------------------
+
+
+def quantize_1d_blocks(x: jnp.ndarray, block: int = 256
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat per-block symmetric int8. Returns (q int8 (n,), scale (nb,))."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    fb = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(fb), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(fb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n + pad], scale[:, 0]
+
+
+def dequantize_1d_blocks(q: jnp.ndarray, scale: jnp.ndarray,
+                         shape, block: int = 256) -> jnp.ndarray:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    x = qb * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return x.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,195 @@
+"""SASP ↔ model integration.
+
+Three artifact kinds hang off model params (see models/ffn.py paths):
+
+* ``sasp_masks`` overlays — bool (…, KB, NB) per weight, attached next to
+  the weights they mask. Masks are NOT trainable: they live in a separate
+  overlay pytree and are merged into a *view* of the params inside the loss
+  (so ``jax.grad`` never sees bool leaves).
+* INT8 ``qw`` entries — post-training weight-only quantization.
+* ``sasp_bsr`` containers — block-compressed deployment weights consumed by
+  the gathered-matmul and the Pallas tile-skip kernel.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SASPConfig
+from repro.core.pruning import (
+    compute_sasp_masks,
+    mask_sparsity,
+    scope_predicate,
+)
+from repro.core.quantization import quantize_int8
+from repro.core.sparse import bsr_from_mask
+
+Params = Dict[str, Any]
+
+
+def _path_keys(path: Tuple) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def masks_to_overlay(masks: Dict[Tuple, jnp.ndarray]) -> Params:
+    """{path-to-'w'-leaf: mask} -> nested overlay dict where each mask sits
+    at (..., parent, 'sasp_masks', <matrix-name>). E.g. the mask for
+    ``.../ffn/w1/w`` lands at ``.../ffn/sasp_masks/w1``."""
+    overlay: Params = {}
+    for path, mask in masks.items():
+        keys = _path_keys(path)
+        assert keys[-1] == "w", keys
+        *parent, mat, _ = keys
+        node = overlay
+        for k in parent:
+            node = node.setdefault(k, {})
+        node.setdefault("sasp_masks", {})[mat] = mask
+    return overlay
+
+
+def merge_overlay(params: Params, overlay: Params) -> Params:
+    """Recursively merge ``overlay`` into a shallow-copied view of params.
+    Tuples (segment lists) are merged element-wise by index key."""
+    if overlay is None:
+        return params
+    if isinstance(params, tuple):
+        out = list(params)
+        for k, v in overlay.items():
+            i = int(k)
+            out[i] = merge_overlay(out[i], v)
+        return tuple(out)
+    if isinstance(params, dict):
+        out = dict(params)
+        for k, v in overlay.items():
+            if k in out and isinstance(v, dict) and isinstance(
+                    out[k], (dict, tuple)):
+                out[k] = merge_overlay(out[k], v)
+            else:
+                out[k] = v
+        return out
+    return overlay
+
+
+def build_sasp_overlay(params: Params, sasp: SASPConfig,
+                       is_prunable: Optional[Callable] = None
+                       ) -> Tuple[Params, float]:
+    """Global-L1 tile selection on the live params -> (overlay, achieved
+    sparsity). Attach with ``merge_overlay(params, overlay)`` inside the
+    loss (training) or bake permanently with ``prune_params`` (deploy)."""
+    masks = compute_sasp_masks(params, sasp, is_prunable)
+    return masks_to_overlay(masks), mask_sparsity(masks)
+
+
+# ---------------------------------------------------------------------------
+# Post-training INT8 (weight-only) — deployment params
+# ---------------------------------------------------------------------------
+
+
+def quantize_params(params: Params, sasp: SASPConfig,
+                    is_quantizable: Optional[Callable] = None) -> Params:
+    """Replace {'w': dense} with {'qw': QuantizedWeight} for every weight in
+    scope. Biases/norms/embeddings stay fp."""
+    pred = is_quantizable or scope_predicate(sasp)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    target_parents = set()
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        if keys[-1] == "w" and getattr(leaf, "ndim", 0) >= 2 and pred(path):
+            target_parents.add(keys[:-1])
+
+    # ffn._materialize expects p[name] == {"qw": QuantizedWeight}; the
+    # matrix dict itself is replaced.
+    def rebuild2(node, prefix):
+        if isinstance(node, tuple):
+            return tuple(rebuild2(v, prefix + (str(i),))
+                         for i, v in enumerate(node))
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                child_prefix = prefix + (k,)
+                if isinstance(v, dict) and child_prefix in target_parents \
+                        and "w" in v:
+                    qw = quantize_int8(v["w"], sasp.block_k, sasp.block_n)
+                    nv = {kk: vv for kk, vv in v.items() if kk != "w"}
+                    nv["qw"] = qw
+                    out[k] = nv
+                else:
+                    out[k] = rebuild2(v, child_prefix)
+            return out
+        return node
+
+    return rebuild2(params, ())
+
+
+# ---------------------------------------------------------------------------
+# BSR deployment conversion (offline; numpy)
+# ---------------------------------------------------------------------------
+
+
+def bsr_overlay_from_masks(params: Params, masks: Dict[Tuple, jnp.ndarray],
+                           sasp: SASPConfig) -> Params:
+    """Build {..., 'sasp_bsr': {matrix: BlockSparseWeight}} overlays.
+
+    2-D weights get a single container; 3-D layer stacks (L, K, N) — the
+    scan-over-layers layout — get per-layer BSRs padded to a shared k_max
+    and stacked so ``lax.scan`` slices them per layer. ≥4-D stacks (MoE
+    expert grids) stay on the masked-dense path.
+    """
+    from repro.core.sparse import stack_bsr
+
+    flat = dict(jax.tree_util.tree_flatten_with_path(params)[0])
+    overlay: Params = {}
+    for path, mask in masks.items():
+        w = np.asarray(flat[path], np.float32)
+        m = np.asarray(mask)
+        keys = _path_keys(path)
+        *parent, mat, _ = keys
+        K, N = w.shape[-2:]
+        KB, NB = m.shape[-2:]
+        bk, bn = K // KB, N // NB
+        if w.ndim == 2:
+            bsr = bsr_from_mask(w, m, bk, bn, quantize=sasp.quantize)
+        elif w.ndim == 3:
+            k_max = max(1, int(m.sum(axis=-2).max()))
+            bsr = stack_bsr([
+                bsr_from_mask(w[i], m[i], bk, bn, quantize=sasp.quantize,
+                              k_max=k_max)
+                for i in range(w.shape[0])
+            ])
+        else:
+            continue                     # MoE expert stacks: masked path
+        node = overlay
+        for k in parent:
+            node = node.setdefault(k, {})
+        node.setdefault("sasp_bsr", {})[mat] = bsr
+    return overlay
+
+
+def sasp_summary(overlay: Params) -> Dict[str, float]:
+    masks = []
+
+    def collect(node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "sasp_masks":
+                    masks.extend(v.values())
+                else:
+                    collect(v)
+        elif isinstance(node, tuple):
+            for v in node:
+                collect(v)
+
+    collect(overlay)
+    total = sum(int(np.prod(m.shape)) for m in masks)
+    kept = sum(int(jnp.sum(m)) for m in masks)
+    return {
+        "n_masked_matrices": len(masks),
+        "total_tiles": total,
+        "kept_tiles": kept,
+        "sparsity": 1.0 - kept / max(total, 1),
+    }

@@ -1,0 +1,191 @@
+"""Block-compressed weight container (BSR-style) for the SASP "skip" paths.
+
+Built offline from a concrete pruning mask (masks are static by deployment
+time — pruning happens before the serving graph is jitted), so all shapes
+below are static. Two consumers:
+
+* the pure-jnp gathered matmul (`bsr_matmul`) — FLOPs/bytes drop ∝ sparsity
+  *inside the compiled HLO*, which is how the dry-run roofline exhibits the
+  paper's saving without real hardware;
+* the Pallas tile-skip kernel (kernels/sasp_gemm) — consumes the flat
+  (k, n) block list + values.
+
+Layout: per output-column-block list of surviving K-blocks, padded to the
+per-matrix max (`k_max`). Padding entries point at block 0 with zero values,
+so no masking is needed in the inner loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BlockSparseWeight:
+    """vals: (k_max, NB, bk, bn) blocks (padded); idx: (k_max, NB) int32
+    source K-block index; shape/block are static aux data. Optional int8:
+    vals int8 + scale (k_max, NB) fp32."""
+
+    def __init__(self, vals, idx, shape: Tuple[int, int],
+                 block: Tuple[int, int], scale=None):
+        self.vals = vals
+        self.idx = idx
+        self.shape = tuple(shape)
+        self.block = tuple(block)
+        self.scale = scale
+
+    def tree_flatten(self):
+        return (self.vals, self.idx, self.scale), (self.shape, self.block)
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("vals"), self.vals), (ga("idx"), self.idx),
+                (ga("scale"), self.scale)), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vals, idx, scale = children
+        shape, block = aux
+        return cls(vals, idx, shape, block, scale)
+
+    def __repr__(self):
+        return (f"BlockSparseWeight(shape={self.shape}, "
+                f"block={self.block}, k_max={self.k_max})")
+
+    @property
+    def k_max(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def density(self) -> float:
+        K, N = self.shape
+        bk, bn = self.block
+        return self.k_max / (K // bk)   # upper bound incl. padding
+
+    def nbytes(self) -> int:
+        b = self.vals.size * self.vals.dtype.itemsize + self.idx.size * 4
+        if self.scale is not None:
+            b += self.scale.size * 4
+        return b
+
+
+jax.tree_util.register_pytree_with_keys(
+    BlockSparseWeight,
+    lambda b: b.tree_flatten_with_keys(),
+    lambda aux, ch: BlockSparseWeight.tree_unflatten(aux, ch),
+    flatten_func=lambda b: b.tree_flatten(),
+)
+
+
+def bsr_from_mask(w: np.ndarray, mask: np.ndarray, bk: int, bn: int,
+                  *, quantize: bool = False,
+                  k_max: Optional[int] = None) -> BlockSparseWeight:
+    """w: (K, N); mask: (KB, NB) bool (True = keep). Offline (numpy).
+    ``k_max`` forces the padded depth (stacked per-layer BSRs must share
+    one k_max so ``lax.scan`` can slice them)."""
+    K, N = w.shape
+    KB, NB = K // bk, N // bn
+    assert mask.shape == (KB, NB), (mask.shape, (KB, NB))
+    w = np.asarray(w, dtype=np.float32)
+    mask = np.asarray(mask, dtype=bool)
+
+    counts = mask.sum(axis=0)                       # kept K-blocks per col
+    needed = int(counts.max()) if counts.size else 0
+    k_max = max(needed, 1) if k_max is None else k_max
+    assert k_max >= needed, (k_max, needed)
+
+    vals = np.zeros((k_max, NB, bk, bn), dtype=np.float32)
+    idx = np.zeros((k_max, NB), dtype=np.int32)
+    wb = w.reshape(KB, bk, NB, bn)
+    for n in range(NB):
+        kept = np.nonzero(mask[:, n])[0]
+        for j, kb in enumerate(kept):
+            vals[j, n] = wb[kb, :, n, :]
+            idx[j, n] = kb
+
+    scale = None
+    if quantize:
+        amax = np.abs(vals).max(axis=(2, 3))        # (k_max, NB)
+        scale = np.maximum(amax, 1e-12) / 127.0
+        vals = np.clip(np.round(vals / scale[:, :, None, None]),
+                       -127, 127).astype(np.int8)
+
+    return BlockSparseWeight(
+        vals=jnp.asarray(vals), idx=jnp.asarray(idx), shape=(K, N),
+        block=(bk, bn),
+        scale=None if scale is None else jnp.asarray(scale),
+    )
+
+
+def stack_bsr(bsrs) -> BlockSparseWeight:
+    """Stack per-layer BSRs (same shape/block/k_max) along a new leading
+    axis — the scan-over-layers layout."""
+    b0 = bsrs[0]
+    return BlockSparseWeight(
+        vals=jnp.stack([b.vals for b in bsrs]),
+        idx=jnp.stack([b.idx for b in bsrs]),
+        shape=b0.shape, block=b0.block,
+        scale=None if b0.scale is None else
+        jnp.stack([b.scale for b in bsrs]),
+    )
+
+
+def flat_block_list(mask: np.ndarray) -> np.ndarray:
+    """(nnz, 2) [k_block, n_block] pairs sorted by (n, k) — the visit order
+    of the Pallas tile-skip kernel (accumulator re-inits when n changes)."""
+    mask = np.asarray(mask, dtype=bool)
+    ks, ns = np.nonzero(mask)
+    order = np.lexsort((ks, ns))
+    return np.stack([ks[order], ns[order]], axis=1).astype(np.int32)
+
+
+def bsr_matmul(x: jnp.ndarray, w: BlockSparseWeight,
+               *, compute_dtype=None) -> jnp.ndarray:
+    """x: (M, K) @ block-sparse (K, N) -> (M, N), skipping pruned tiles.
+
+    scan over k_max steps; each step gathers one K-block of x per output
+    column-block and does a batched (M, bk) @ (bk, bn) — total FLOPs
+    = 2·M·bk·bn·NB·k_max, i.e. dense FLOPs × (k_max / KB).
+    """
+    K, N = w.shape
+    bk, bn = w.block
+    KB, NB = K // bk, N // bn
+    M = x.shape[0]
+    dt = compute_dtype or x.dtype
+    xb = jnp.moveaxis(x.reshape(M, KB, bk), 1, 0).astype(dt)   # (KB, M, bk)
+
+    vals = w.vals
+    if w.scale is not None:
+        # fused dequant: int8 blocks × per-block scale
+        vals = vals.astype(jnp.float32) * w.scale[:, :, None, None]
+    vals = vals.astype(dt)
+
+    def body(acc, step):
+        v_j, idx_j = step                      # (NB, bk, bn), (NB,)
+        xg = xb[idx_j]                         # (NB, M, bk)
+        acc = acc + jnp.einsum("nmk,nkb->nmb", xg, v_j,
+                               preferred_element_type=jnp.float32)
+        return acc, None
+
+    acc0 = jnp.zeros((NB, M, bn), dtype=jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (vals, w.idx))
+    return jnp.moveaxis(acc, 0, 1).reshape(M, N).astype(x.dtype)
+
+
+def bsr_to_dense(w: BlockSparseWeight) -> jnp.ndarray:
+    """Reference reconstruction (tests)."""
+    K, N = w.shape
+    bk, bn = w.block
+    KB, NB = K // bk, N // bn
+    vals = w.vals
+    if w.scale is not None:
+        vals = vals.astype(jnp.float32) * w.scale[:, :, None, None]
+    dense = jnp.zeros((KB, bk, NB, bn), dtype=jnp.float32)
+    # padding entries have zero vals, so scatter-add is safe
+    nb = jnp.arange(NB)
+    for j in range(w.k_max):
+        dense = dense.at[w.idx[j], :, nb, :].add(
+            vals[j].astype(jnp.float32))
+    return dense.reshape(K, N)

@@ -1,0 +1,88 @@
+"""TPU v5e hardware constants + roofline terms (deployment tier).
+
+The three-term roofline (system prompt §ROOFLINE):
+    compute    = HLO_FLOPs      / (chips × PEAK_FLOPS)
+    memory     = HLO_bytes      / (chips × HBM_BW)
+    collective = collective_B   / (chips × ICI_BW)
+Derived from the compiled dry-run artifact, not measured (CPU container).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_BF16_FLOPS = 197e12      # per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link (≈ per chip for ring traffic)
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB HBM per v5e chip
+CHIPS_PER_POD = 256
+# constant-power approximation for the energy axis (v5e chip ~200 W board
+# power under load; used only for relative J comparisons)
+CHIP_POWER_W = 200.0
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_hbm: float
+    bytes_coll: float
+    chips: int
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        """Upper bound: no overlap at all."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def mfu(self) -> float:
+        """FLOP-roofline fraction if the step ran at bound_s."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.compute_s / self.bound_s
+
+    def energy_j(self) -> float:
+        return self.bound_s * self.chips * CHIP_POWER_W
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound_s": self.bound_s,
+            "bottleneck": self.bottleneck, "flops": self.flops,
+            "bytes_hbm": self.bytes_hbm, "bytes_coll": self.bytes_coll,
+        }
+
+
+def roofline(flops: float, bytes_hbm: float, bytes_coll: float,
+             chips: int) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / (chips * PEAK_BF16_FLOPS),
+        memory_s=bytes_hbm / (chips * HBM_BW),
+        collective_s=bytes_coll / (chips * ICI_BW),
+        flops=flops, bytes_hbm=bytes_hbm, bytes_coll=bytes_coll,
+        chips=chips,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for a train step;
+    2·N·D for forward-only (prefill); 2·N_active per decoded token."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,205 @@
+"""Expert-parallel MoE: per-shard routing + all_to_all dispatch.
+
+Experts are sharded over the ``data`` axis (EP) and each expert's d_ff
+over ``model`` (TP); tokens are sharded over (pod, data). Every
+(pod, data, model) shard routes ITS tokens locally (local top-k + sort —
+no global argsort, which under plain GSPMD becomes a catastrophic global
+sort, see EXPERIMENTS.md §Perf iteration log), then a pair of
+``all_to_all`` collectives over ``data`` carries tokens to their experts
+and back. Pods route to their own expert replicas; gradients for the
+replicated expert weights sum across pods in the backward all-reduce.
+
+Per-source-shard per-expert capacity:
+    C = ceil(n_local · top_k · capacity_factor / E)
+so the dispatch buffers are (E, C, d) on the source and
+(E_local, ep · C, d) on the expert shard. Overflow drops (standard GShard
+semantics) now apply per (source-shard, expert) pair — slightly stricter
+than the global-batch capacity of the local path; tests bound the
+difference.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.pruning import apply_block_mask
+from repro.models.modules import act_fn
+
+
+def _local_route(x2, wr, cfg: ModelConfig, C: int):
+    """Local top-k routing + capacity positions (same math as
+    models.moe.route but per shard)."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    N = x2.shape[0]
+    logits = x2.astype(jnp.float32) @ wr
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_idx = jax.lax.top_k(probs, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    f_e = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0) / (N * k)
+    aux = E * jnp.sum(f_e * probs.mean(0)) * m.router_aux_weight
+
+    flat_e = expert_idx.reshape(-1)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)
+    return expert_idx, gate_w, aux, sort_idx, sorted_e, pos_c
+
+
+def can_use_ep(cfg: ModelConfig, x_shape, mesh: Optional[Mesh]) -> bool:
+    if mesh is None or cfg.moe is None or "data" not in mesh.axis_names:
+        return False
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_total = _axis(mesh, dp)
+    ep = mesh.shape["data"]
+    B, S = x_shape[0], x_shape[1]
+    f_ok = cfg.d_ff % mesh.shape.get("model", 1) == 0
+    return (ep > 1 and cfg.moe.num_experts % ep == 0
+            and (B * S) % dp_total == 0 and B >= dp_total and f_ok)
+
+
+def moe_ffn_ep(p: Dict, cfg: ModelConfig, x: jnp.ndarray, mesh: Mesh
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) sharded P(dp, None, None). Returns (y, aux)."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    d = cfg.d_model
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    ep = mesh.shape["data"]
+    E_loc = E // ep
+    assert E % ep == 0, (E, ep)
+
+    B, S, _ = x.shape
+    n_local = (B * S) // _axis(mesh, dp)
+    C = max(1, -(-n_local * k * int(100 * m.capacity_factor) // (100 * E)))
+
+    w1, w3, w2 = p["w1"]["w"], p.get("w3", {}).get("w"), p["w2"]["w"]
+    masks = p.get("sasp_masks", {})
+
+    def body(x_loc, wr, w1_l, w3_l, w2_l, m1, m3, m2):
+        # x_loc: (b, S, d); w*_l: (E_loc, d, f_loc) / (E_loc, f_loc, d)
+        x2 = x_loc.reshape(-1, d)
+        expert_idx, gate_w, aux, sort_idx, sorted_e, pos_c = \
+            _local_route(x2, wr, cfg, C)
+        tok = sort_idx // k
+        buf = jnp.zeros((E, C + 1, d), x2.dtype)
+        buf = buf.at[sorted_e, pos_c].set(
+            x2[tok], indices_are_sorted=True, unique_indices=True,
+            mode="drop")[:, :C]                               # (E, C, d)
+
+        # ---- dispatch: source-major -> expert-major over 'data' ----
+        send = buf.reshape(ep, E_loc, C, d)
+        recv = jax.lax.all_to_all(send, "data", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        xe = jnp.moveaxis(recv, 0, 1).reshape(E_loc, ep * C, d)
+
+        def emm(w, mask, h):
+            if mask is not None:
+                w = apply_block_mask(w, mask)
+            return jnp.einsum("ecd,edf->ecf", h, w.astype(h.dtype),
+                              preferred_element_type=jnp.float32
+                              ).astype(h.dtype)
+
+        h = emm(w1_l, m1, xe)
+        if cfg.ffn_gated:
+            h = act_fn(cfg.act)(h) * emm(w3_l, m3, xe)
+        else:
+            h = act_fn(cfg.act)(h)
+        ye = emm(w2_l, m2, h)                                # partial (f TP)
+        if "model" in mesh.axis_names:
+            ye = jax.lax.psum(ye, "model")
+
+        # ---- return path ----
+        back = jnp.moveaxis(ye.reshape(E_loc, ep, C, d), 1, 0)
+        out = jax.lax.all_to_all(back, "data", split_axis=0,
+                                 concat_axis=0, tiled=False)
+        out = out.reshape(E, C, d)
+        out_pad = jnp.concatenate([out, jnp.zeros((E, 1, d), out.dtype)],
+                                  axis=1)
+        y_slots = out_pad[sorted_e, pos_c]
+        inv = jnp.argsort(sort_idx, stable=True)
+        y = (y_slots[inv].reshape(-1, k, d)
+             * gate_w[..., None].astype(out.dtype)).sum(axis=1)
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return y.reshape(x_loc.shape), aux
+
+    in_specs = (
+        P(dp, None, None),                 # x
+        P(None, None),                     # router (replicated)
+        P("data", None, "model"),          # w1
+        P("data", None, "model"),          # w3
+        P("data", "model", None),          # w2
+        P("data", None, None),             # masks (E, KB, NB) or dummy
+        P("data", None, None),
+        P("data", None, None),
+    )
+    out_specs = (P(dp, None, None), P())
+
+    def mask_or_dummy(name):
+        mk = masks.get(name)
+        if mk is not None:
+            return mk
+        return jnp.zeros((E, 1, 1), jnp.int8)      # placeholder
+
+    has = {n: (n in masks) for n in ("w1", "w3", "w2")}
+
+    def body_wrap(x_loc, wr, w1_l, w3_l, w2_l, d1, d3, d2):
+        return body(x_loc, wr, w1_l, w3_l, w2_l,
+                    d1 if has["w1"] else None,
+                    d3 if has["w3"] else None,
+                    d2 if has["w2"] else None)
+
+    fn = jax.shard_map(body_wrap, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    y, aux = fn(x, p["router"]["w"].astype(jnp.float32),
+                w1, w3 if w3 is not None else jnp.zeros_like(w1),
+                w2, mask_or_dummy("w1"), mask_or_dummy("w3"),
+                mask_or_dummy("w2"))
+
+    if "shared" in p:
+        from repro.models.ffn import ffn_apply
+        y = y + ffn_apply(p["shared"], cfg, x)
+    return y, aux
+
+
+def moe_ffn_dp(p: Dict, cfg: ModelConfig, x: jnp.ndarray, mesh: Mesh
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-DP MoE: weights replicated, tokens sharded over EVERY mesh
+    axis, per-shard local dispatch (shard_map stops GSPMD from turning
+    the routing argsort into a global sort). The small-model profile."""
+    from repro.models.moe import moe_ffn_local
+
+    axes = tuple(mesh.axis_names)
+    B = x.shape[0]
+    if B % _axis(mesh, axes) != 0:
+        return moe_ffn_local(p, cfg, x)
+
+    def body(x_loc, p_loc):
+        y, aux = moe_ffn_local(p_loc, cfg, x_loc)
+        return y, jax.lax.pmean(aux, axes)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes, None, None), P()),
+        out_specs=(P(axes, None, None), P()),
+        check_vma=False)
+    return fn(x, p)
+
+
+def _axis(mesh: Mesh, names) -> int:
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,1 @@
+from repro.kernels import sasp_gemm, int8_gemm, flash_attn  # noqa: F401

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def flash_attention_ref(q, k, v, q_pos, kv_pos, *, window: int):
+    """Dense masked softmax attention. q: (H, Sq, D); k/v: (H, Sk, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    delta = q_pos[:, None] - kv_pos[None, :]
+    mask = (delta >= 0) & (delta < window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None], p, 0.0)
+    return jnp.einsum("hqk,hkd->hqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the dense weight-INT8 GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_gemm_ref(x: jnp.ndarray, w_q: jnp.ndarray,
+                  scale: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize-then-matmul reference. x: (M, K); w_q: (K, N) int8;
+    scale: (KB, NB)."""
+    K, N = w_q.shape
+    KB, NB = scale.shape
+    bk, bn = K // KB, N // NB
+    wq = w_q.reshape(KB, bk, NB, bn).astype(jnp.float32)
+    w = (wq * scale[:, None, :, None]).reshape(K, N)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,192 @@
+"""SASP tile-skip GEMM — the paper's systolic-array tile skipping (Fig 3)
+as a TPU Pallas kernel.
+
+TPU adaptation (DESIGN.md §2): instead of skipping weight-programming +
+streaming on an edge array, the kernel's grid enumerates ONLY the surviving
+weight blocks. The grid is (M-blocks × nnz): scalar-prefetched (k, n) block
+coordinates drive the BlockSpec index maps, so pruned blocks are never
+DMA'd from HBM and never enter the MXU — both the FLOP term and the
+weight-byte term drop ∝ sparsity, exactly the paper's saving.
+
+Visit order is sorted by (n, k) (see ops.kernel_block_list): all surviving
+K-blocks of an output column-block are consecutive, so the output block
+stays VMEM-resident; a float32 VMEM scratch accumulator re-initializes
+when the n-coordinate changes and flushes on its last visit. Output
+column-blocks with zero surviving weight blocks get one zero-valued
+padding entry so every output block is written.
+
+Variants:
+  * fp32/bf16 values (``_sasp_kernel``);
+  * fused INT8 dequant (``_sasp_kernel_int8``): int8 blocks ride HBM→VMEM
+    at 1 byte/weight (the paper's 4-per-bus-word), and the per-block scale
+    is applied as an epilogue after the MXU dot — the TPU analogue of the
+    paper's hybrid FP32×INT8 multiplier (§3.3).
+
+Block shapes default to MXU-aligned 128 multiples; validated with
+``interpret=True`` against ref.py on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flags(kn_ref, nnz: int):
+    s = pl.program_id(1)
+    n_cur = kn_ref[1, s]
+    n_prev = kn_ref[1, jnp.maximum(s, 1) - 1]
+    first = jnp.logical_or(s == 0, n_cur != n_prev)
+    n_next = kn_ref[1, jnp.minimum(s + 1, nnz - 1)]
+    last = jnp.logical_or(s == nnz - 1, n_cur != n_next)
+    return first, last
+
+
+def _sasp_kernel(kn_ref, x_ref, w_ref, o_ref, acc_ref, *, nnz: int):
+    first, last = _flags(kn_ref, nnz)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[0].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _sasp_kernel_int8(kn_ref, x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                      nnz: int):
+    first, last = _flags(kn_ref, nnz)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)          # int8 magnitude -> f32
+    part = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc_ref[...] += part * s_ref[0]           # dequant epilogue
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sasp_gemm(x: jnp.ndarray, w_vals: jnp.ndarray, block_kn: jnp.ndarray,
+              *, n: int, block_m: int = 128,
+              scales: Optional[jnp.ndarray] = None,
+              out_dtype=None, interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K) @ block-sparse weight -> (M, n), skipping pruned tiles.
+
+    w_vals: (nnz, bk, bn) surviving blocks (fp, or int8 with ``scales``);
+    block_kn: (2, nnz) int32 [k_block; n_block] sorted by (n, k), every
+    n-block present ≥ once (ops.kernel_block_list guarantees this);
+    scales: (nnz,) fp32 per-block dequant scales for the int8 variant.
+    """
+    M, K = x.shape
+    nnz, bk, bn = w_vals.shape
+    assert n % bn == 0 and K % bk == 0, (K, n, bk, bn)
+    bm = min(block_m, M)
+    while M % bm:
+        bm -= 1
+    grid = (M // bm, nnz)
+    out_dtype = out_dtype or x.dtype
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, s, kn: (i, kn[0, s]))
+    w_spec = pl.BlockSpec((1, bk, bn), lambda i, s, kn: (s, 0, 0))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, s, kn: (i, kn[1, s]))
+
+    if scales is None:
+        return pl.pallas_call(
+            functools.partial(_sasp_kernel, nnz=nnz),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=grid,
+                in_specs=[x_spec, w_spec],
+                out_specs=o_spec,
+                scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((M, n), out_dtype),
+            interpret=interpret,
+        )(block_kn, x, w_vals)
+
+    s_spec = pl.BlockSpec((1,), lambda i, s, kn: (s,))
+    return pl.pallas_call(
+        functools.partial(_sasp_kernel_int8, nnz=nnz),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[x_spec, w_spec, s_spec],
+            out_specs=o_spec,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, n), out_dtype),
+        interpret=interpret,
+    )(block_kn, x, w_vals, scales)
+
+
+# ---------------------------------------------------------------------------
+# Dense-grid masked variant (ablation): visits every (k, n) block and
+# predicates the MXU issue on the mask — saves FLOPs but not DMA bytes,
+# mirroring clock-gating designs the paper cites ([18]) as the inferior
+# alternative to full tile skipping.
+# ---------------------------------------------------------------------------
+
+
+def _masked_kernel(mask_ref, x_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = pl.program_id(1)
+
+    @pl.when(mask_ref[k, j] > 0)
+    def _mac():
+        x = x_ref[...]
+        acc_ref[...] += jnp.dot(x, w_ref[...].astype(x.dtype),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sasp_gemm_masked(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray,
+                     *, block_m: int = 128, block_k: int = 128,
+                     block_n: int = 128, out_dtype=None,
+                     interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K) @ w (K, N) with mask (KB, NB) int32; compute-skip only."""
+    M, K = x.shape
+    K2, N = w.shape
+    KB, NB = mask.shape
+    bk, bn = K // KB, N // NB
+    bm = min(block_m, M)
+    while M % bm:
+        bm -= 1
+    out_dtype = out_dtype or x.dtype
+    return pl.pallas_call(
+        _masked_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(M // bm, NB, KB),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k, m: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k, m: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, m: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+    )(mask.astype(jnp.int32), x, w)

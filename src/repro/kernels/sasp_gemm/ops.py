@@ -1,0 +1,146 @@
+"""Jit'd wrappers + block-list builders for the SASP tile-skip kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BlockSparseWeight
+from repro.kernels.sasp_gemm.kernel import sasp_gemm, sasp_gemm_masked
+
+
+def kernel_block_list(mask: np.ndarray) -> np.ndarray:
+    """(2, nnz') visit list sorted by (n, k). Output column-blocks with no
+    surviving weight block get one zero-value padding entry (k=0) so every
+    output block is initialized; callers must zero the corresponding
+    w_vals entry (``build_kernel_weight`` does)."""
+    mask = np.asarray(mask, dtype=bool)
+    KB, NB = mask.shape
+    ks, ns = np.nonzero(mask)
+    empty_cols = np.setdiff1d(np.arange(NB), np.unique(ns))
+    if empty_cols.size:
+        ks = np.concatenate([ks, np.zeros_like(empty_cols)])
+        ns = np.concatenate([ns, empty_cols])
+    order = np.lexsort((ks, ns))
+    return np.stack([ks[order], ns[order]]).astype(np.int32)
+
+
+def build_kernel_weight(w: np.ndarray, mask: np.ndarray, bk: int, bn: int,
+                        *, quantize: bool = False):
+    """Offline packing: (w_vals, block_kn[, scales]) for ``sasp_matmul``.
+    Padding entries (empty output columns) carry zero blocks."""
+    w = np.asarray(w, np.float32)
+    mask = np.asarray(mask, bool)
+    K, N = w.shape
+    KB, NB = K // bk, N // bn
+    kn = kernel_block_list(mask)
+    wb = w.reshape(KB, bk, NB, bn)
+    vals = np.stack([
+        wb[k, :, n, :] if mask[k, n] else np.zeros((bk, bn), np.float32)
+        for k, n in kn.T
+    ]) if kn.shape[1] else np.zeros((1, bk, bn), np.float32)
+
+    if not quantize:
+        return jnp.asarray(vals), jnp.asarray(kn), None
+    amax = np.abs(vals).max(axis=(1, 2))
+    scales = (np.maximum(amax, 1e-12) / 127.0).astype(np.float32)
+    q = np.clip(np.round(vals / scales[:, None, None]), -127, 127
+                ).astype(np.int8)
+    return jnp.asarray(q), jnp.asarray(kn), jnp.asarray(scales)
+
+
+def _kn_from_bsr(w: BlockSparseWeight) -> Tuple:
+    """Flatten a BSR container to the kernel's flat-block-list form."""
+    K, N = w.shape
+    bk, bn = w.block
+    KB, NB = K // bk, N // bn
+    idx = np.asarray(w.idx)                       # (k_max, NB)
+    vals = np.asarray(w.vals)                     # (k_max, NB, bk, bn)
+    scale = None if w.scale is None else np.asarray(w.scale)
+    kn_list, v_list, s_list = [], [], []
+    for n in range(NB):
+        seen = set()
+        wrote = False
+        for j in range(w.k_max):
+            k = int(idx[j, n])
+            vb = vals[j, n]
+            if (k in seen) and not np.any(vb):
+                continue                          # padding duplicate
+            seen.add(k)
+            kn_list.append((k, n))
+            v_list.append(vb)
+            s_list.append(1.0 if scale is None else float(scale[j, n]))
+            wrote = True
+        if not wrote:
+            kn_list.append((0, n))
+            v_list.append(np.zeros_like(vals[0, 0]))
+            s_list.append(1.0)
+    kn = np.asarray(kn_list, np.int32).T
+    v = np.stack(v_list)
+    s = None if scale is None else np.asarray(s_list, np.float32)
+    return jnp.asarray(v), jnp.asarray(kn), \
+        None if s is None else jnp.asarray(s)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_m", "interpret"))
+def _sasp_matmul_jit(x, w_vals, block_kn, scales, *, n, block_m,
+                     interpret):
+    return sasp_gemm(x, w_vals, block_kn, n=n, block_m=block_m,
+                     scales=scales, interpret=interpret)
+
+
+def _kn_from_bsr_traced(w: BlockSparseWeight):
+    """Trace-compatible BSR→flat-list: every padded (j, n) slot becomes a
+    visit in n-major order (consecutive visits share the output block, as
+    the kernel requires); padding slots carry zero values and contribute
+    nothing. nnz = k_max × NB is static; the coordinates are runtime
+    arrays (scalar-prefetch operands may be traced)."""
+    K, N = w.shape
+    bk, bn = w.block
+    k_max, NB = w.idx.shape
+    vals = jnp.moveaxis(w.vals, 0, 1).reshape(k_max * NB, bk, bn)
+    kn = jnp.stack([
+        jnp.moveaxis(w.idx, 0, 1).reshape(-1),
+        jnp.repeat(jnp.arange(NB, dtype=jnp.int32), k_max),
+    ]).astype(jnp.int32)
+    scales = None
+    if w.scale is not None:
+        scales = jnp.moveaxis(w.scale, 0, 1).reshape(-1)
+    return vals, kn, scales
+
+
+def sasp_matmul(x: jnp.ndarray, w: BlockSparseWeight, *,
+                block_m: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """(…, K) @ BSR weight -> (…, N) through the Pallas tile-skip kernel.
+    Works under tracing (scan-over-layers) via the padded flat list;
+    serving engines should pre-pack the compact form with
+    ``build_kernel_weight`` + ``sasp_matmul_packed``."""
+    *lead, K = x.shape
+    x2 = x.reshape(-1, K)
+    w_vals, block_kn, scales = _kn_from_bsr_traced(w)
+    y = _sasp_matmul_jit(x2, w_vals, block_kn, scales, n=w.shape[1],
+                         block_m=block_m, interpret=interpret)
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def sasp_matmul_packed(x: jnp.ndarray, w_vals, block_kn, scales=None, *,
+                       n: int, block_m: int = 128,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Pre-packed fast path (serving): inputs from build_kernel_weight."""
+    *lead, K = x.shape
+    y = _sasp_matmul_jit(x.reshape(-1, K), w_vals, block_kn, scales,
+                         n=n, block_m=block_m, interpret=interpret)
+    return y.reshape(*lead, n).astype(x.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_k", "block_n",
+                                    "interpret"))
+def masked_matmul(x, w, mask, *, block_m: int = 128, block_k: int = 128,
+                  block_n: int = 128, interpret: bool = True):
+    """Dense-grid compute-skip variant (ablation)."""
+    return sasp_gemm_masked(x, w, mask, block_m=block_m, block_k=block_k,
+                            block_n=block_n, interpret=interpret)

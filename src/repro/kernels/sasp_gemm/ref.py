@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SASP tile-skip GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_dense_ref(x: jnp.ndarray, w: jnp.ndarray,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K); w: (K, N); mask: (KB, NB) bool -> (M, N) with pruned
+    tiles zeroed. THE semantic ground truth for every SASP path."""
+    K, N = w.shape
+    KB, NB = mask.shape
+    bk, bn = K // KB, N // NB
+    wb = w.reshape(KB, bk, NB, bn) * mask[:, None, :, None].astype(w.dtype)
+    return x @ wb.reshape(K, N)
+
+
+def block_list_ref(x: jnp.ndarray, w_vals, block_kn, n: int,
+                   scales=None) -> jnp.ndarray:
+    """Oracle consuming the kernel's own inputs (blocks + coordinates):
+    reconstruct the dense masked weight, then one dense matmul."""
+    M, K = x.shape
+    nnz, bk, bn = w_vals.shape
+    KB, NB = K // bk, n // bn
+    wd = np.zeros((KB, bk, NB, bn), dtype=np.float32)
+    vals = np.asarray(w_vals, dtype=np.float32)
+    if scales is not None:
+        vals = vals * np.asarray(scales)[:, None, None]
+    kn = np.asarray(block_kn)
+    for s in range(nnz):
+        wd[kn[0, s], :, kn[1, s], :] += vals[s]
+    return (np.asarray(x, np.float32) @ wd.reshape(K, n))

@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and record memory/cost/roofline analysis.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above executes before any other import pulls in jax,
+because jax locks the device count on first init. Do NOT import this
+module from test/bench processes that want 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+  python -m repro.launch.dryrun --arch jamba-1.5-large-398b --all-shapes
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             sasp_bsr_sparsity: float = 0.0, remat: str = "full",
+             quant_weights: bool = False, n_microbatches: int = 1,
+             profile: str = "tp", kv_quant: bool = False,
+             tp_comm: str = "ar",
+             out_dir: str = None, verbose: bool = True):
+    """Lower + compile one (arch × shape × mesh) cell; return CellReport."""
+    from repro.analysis.roofline import analyze_compiled, format_row
+    from repro.configs import get_config, get_shape
+    from repro.distribution import sharding as shd
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = get_config(arch)
+    # pad vocab to a TP-shardable multiple (real deployments pad the
+    # embedding; unpadded 50280-style vocabs force replicated logits)
+    vpad = -(-cfg.vocab_size // 2048) * 2048
+    cfg = dataclasses.replace(cfg, param_dtype="bfloat16",
+                              compute_dtype="bfloat16", remat=remat,
+                              vocab_size=vpad, kv_quant=kv_quant,
+                              tp_comm=tp_comm)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+
+    from repro.distribution import context as dctx
+
+    t0 = time.time()
+    with mesh, dctx.use_mesh(mesh, profile=profile):
+        params_shape = S.abstract_params(cfg)
+        if sasp_bsr_sparsity > 0.0 or quant_weights:
+            from repro.launch.sasp_abstract import abstract_bsr_params
+            params_shape, cfg = abstract_bsr_params(
+                params_shape, cfg, sasp_bsr_sparsity,
+                quantize=quant_weights)
+        param_sh = shd.param_shardings(cfg, params_shape, mesh,
+                                       profile=profile)
+
+        inputs = S.input_specs(cfg, shape)
+        in_sh = S.input_shardings(cfg, shape, mesh, inputs,
+                                  profile=profile)
+        step = S.make_step_fn(cfg, shape)
+
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(quantized=True)
+            from repro.launch.specs import abstract_opt_state
+            opt_shape = abstract_opt_state(cfg, opt_cfg, params_shape)
+            from repro.train.optimizer import opt_state_shardings
+            opt_sh = opt_state_shardings(cfg, params_shape, mesh, opt_cfg,
+                                         param_sh)
+            step = S.make_step_fn(cfg, shape, opt_cfg=opt_cfg,
+                                  n_microbatches=n_microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, in_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, inputs)
+        else:
+            out_cache_sh = in_sh.get("caches")
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, in_sh),
+                out_shardings=(None, out_cache_sh)
+                if shape.kind == "decode" else None,
+                donate_argnums=(1,) if shape.kind == "decode" else (),
+            )
+            lowered = jitted.lower(params_shape, inputs)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    notes = []
+    if sasp_bsr_sparsity:
+        notes.append(f"sasp_bsr={sasp_bsr_sparsity}")
+    if quant_weights:
+        notes.append("int8")
+    if n_microbatches > 1:
+        notes.append(f"mb={n_microbatches}")
+    if profile != "tp":
+        notes.append(profile)
+    if kv_quant:
+        notes.append("kv8")
+    if tp_comm != "ar":
+        notes.append(tp_comm)
+    rep = analyze_compiled(arch, shape, mesh_name, chips, compiled, cfg,
+                           note=";".join(notes),
+                           sparsity=sasp_bsr_sparsity,
+                           weight_quant_bytes=1 if quant_weights else 0)
+    if verbose:
+        print(format_row(rep) + f"  lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s", flush=True)
+        ma = compiled.memory_analysis()
+        print(f"    memory_analysis: args="
+              f"{ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"(per device)", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_name}"
+        if sasp_bsr_sparsity:
+            tag += f"_sasp{int(sasp_bsr_sparsity*100)}"
+        if quant_weights:
+            tag += "_int8"
+        if n_microbatches > 1:
+            tag += f"_mb{n_microbatches}"
+        if profile != "tp":
+            tag += f"_{profile}"
+        if kv_quant:
+            tag += "_kv8"
+        if tp_comm != "ar":
+            tag += f"_{tp_comm}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            f.write(rep.to_json())
+    return rep
+
+
+def run_all(multi_pod: bool, out_dir: str, archs=None):
+    from repro.configs import ASSIGNED_ARCHS, get_config, shapes_for, \
+        skipped_shapes_for
+
+    reports, failures = [], []
+    for arch in archs or ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for sh in shapes_for(cfg):
+            try:
+                reports.append(run_cell(arch, sh.name, multi_pod=multi_pod,
+                                        out_dir=out_dir))
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, sh.name, repr(e)))
+        for sk in skipped_shapes_for(cfg):
+            print(f"{arch:26s} {sk:12s} SKIP (full-attention arch; "
+                  f"see DESIGN.md §5)", flush=True)
+    print(f"\n{len(reports)} cells compiled, {len(failures)} failures")
+    for f in failures:
+        print("FAIL:", f)
+    return reports, failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-shapes", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sasp", type=float, default=0.0,
+                    help="SASP BSR sparsity variant (hillclimb)")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--quant", action="store_true")
+    ap.add_argument("--profile", default="tp")
+    ap.add_argument("--kvquant", action="store_true")
+    ap.add_argument("--tp-comm", default="ar")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        _, failures = run_all(args.multi_pod, args.out)
+        sys.exit(1 if failures else 0)
+    if args.all_shapes:
+        from repro.configs import get_config, shapes_for
+        for sh in shapes_for(get_config(args.arch)):
+            run_cell(args.arch, sh.name, multi_pod=args.multi_pod,
+                     sasp_bsr_sparsity=args.sasp, remat=args.remat,
+                     out_dir=args.out)
+        return
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+             sasp_bsr_sparsity=args.sasp, remat=args.remat,
+             n_microbatches=args.microbatches, quant_weights=args.quant,
+             profile=args.profile, kv_quant=args.kvquant,
+             tp_comm=args.tp_comm, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

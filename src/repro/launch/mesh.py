@@ -1,0 +1,26 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def make_test_mesh(n_devices: int = None, model: int = 2):
+    """Small mesh over however many (possibly fake) devices exist — used
+    by the subprocess multi-device tests."""
+    n = n_devices or len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

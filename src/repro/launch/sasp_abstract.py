@@ -1,0 +1,92 @@
+"""Abstract SASP-BSR params for the dry-run hillclimb variant.
+
+Replaces each FFN weight's dense entry in the *abstract* params pytree
+with a BlockSparseWeight of ShapeDtypeStructs whose k_max equals
+round((1 - sparsity) · KB): the compiled HLO then carries the tile-skip
+FLOP/byte savings without any real weights existing. Mirrors what a
+deployment would produce offline via core.sasp.bsr_overlay_from_masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse import BlockSparseWeight
+
+
+def _abstract_bsr(shape: Tuple[int, ...], bk: int, bn: int,
+                  sparsity: float, dtype) -> BlockSparseWeight:
+    *lead, K, N = shape
+    bk, bn = min(bk, K), min(bn, N)
+    KB, NB = K // bk, N // bn
+    k_max = max(1, round((1.0 - sparsity) * KB))
+    sds = jax.ShapeDtypeStruct
+    return BlockSparseWeight(
+        vals=sds((*lead, k_max, NB, bk, bn), dtype),
+        idx=sds((*lead, k_max, NB), jnp.int32),
+        shape=(K, N), block=(bk, bn), scale=None,
+    )
+
+
+def _pick_bn(N: int, model_size: int, prefer: int = 128) -> int:
+    """Largest MXU-friendly block_n (multiple of 64, ≤ 2×prefer) whose
+    block count divides the TP axis — otherwise the BSR value tensor
+    can't shard over 'model' and replicates (found the hard way on
+    qwen2.5's d_ff=27648: NB=216 ∤ 16 → 27 GB/device; §Perf A iter 2)."""
+    for bn in (prefer, 256, 192, 64, 512, 320):
+        if N % bn == 0 and (N // bn) % model_size == 0:
+            return bn
+    for bn in (prefer, 64):
+        if N % bn == 0:
+            return bn
+    return N
+
+
+def abstract_bsr_params(params_shape: Any, cfg: ModelConfig,
+                        sparsity: float, quantize: bool = False,
+                        model_axis: int = 16):
+    """Returns (new abstract params, cfg with sasp.path='bsr'). With
+    ``quantize``: int8 block values + per-block fp32 scales (weight HBM
+    bytes ÷4 — the paper's FP32_INT8 setting)."""
+    sasp = dataclasses.replace(cfg.sasp, enabled=True, sparsity=sparsity,
+                               path="bsr", quantize=quantize)
+    cfg2 = dataclasses.replace(cfg, sasp=sasp)
+    bk = sasp.block_k
+
+    def rewrite(node):
+        if isinstance(node, tuple):
+            return tuple(rewrite(v) for v in node)
+        if isinstance(node, dict):
+            out = {}
+            if ("w1" in node and "w2" in node and "router" not in node
+                    and isinstance(node.get("w1"), dict)
+                    and "w" in node.get("w1", {})
+                    and getattr(node["w1"]["w"], "ndim", 0) == 3):
+                # dense FFN stack (L, K, N): swap to BSR containers
+                out = {k: v for k, v in node.items()}
+                bsr = {}
+                for mat in ("w1", "w2", "w3"):
+                    if mat in node:
+                        w = node[mat]["w"]
+                        L, K, N = w.shape
+                        bn = _pick_bn(N, model_axis, sasp.block_n)
+                        b = _abstract_bsr((K, N), bk, bn, sparsity, w.dtype)
+                        sds = jax.ShapeDtypeStruct
+                        vdt = jnp.int8 if quantize else w.dtype
+                        scale = (sds((L,) + b.idx.shape, jnp.float32)
+                                 if quantize else None)
+                        bsr[mat] = BlockSparseWeight(
+                            vals=sds((L,) + b.vals.shape, vdt),
+                            idx=sds((L,) + b.idx.shape, jnp.int32),
+                            shape=b.shape, block=b.block, scale=scale)
+                        out[mat] = {"w": sds((L, 1, 1), w.dtype)}  # stub
+                out["sasp_bsr"] = bsr
+                return out
+            return {k: rewrite(v) for k, v in node.items()}
+        return node
+
+    return rewrite(params_shape), cfg2

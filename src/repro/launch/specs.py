@@ -1,0 +1,122 @@
+"""Abstract input/param/state specs for the dry-run — ShapeDtypeStruct
+stand-ins only, weak-type-correct, shardable, no device allocation."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distribution import sharding as shd
+from repro.models import lm
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                       params_shape=None):
+    ps = params_shape or abstract_params(cfg)
+    return jax.eval_shape(partial_adamw_init(opt_cfg), ps)
+
+
+def partial_adamw_init(opt_cfg: AdamWConfig):
+    from repro.train.optimizer import adamw_init
+
+    def fn(params):
+        return adamw_init(params, opt_cfg)
+
+    return fn
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                decode_cache_len: Optional[int] = None) -> Dict[str, Any]:
+    """Model inputs for one step of the given shape kind.
+
+    train / prefill: {tokens (B, S) int32 [, embeds (B, S, d)]}
+    decode:          {tokens (B, 1) int32 [, embeds], pos (B,), caches}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.frontend != "none":
+            out["embeds"] = sds((B, S, cfg.d_model), cdt)
+        return out
+    # decode: one new token against a cache of size seq_len
+    cache_len = decode_cache_len or S
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(None, cfg, B, cache_len))
+    out = {"tokens": sds((B, 1), jnp.int32),
+           "pos": sds((B,), jnp.int32),
+           "caches": caches}
+    if cfg.frontend != "none":
+        out["embeds"] = sds((B, 1, cfg.d_model), cdt)
+    return out
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    inputs: Dict[str, Any],
+                    profile: str = "tp") -> Dict[str, Any]:
+    B = shape.global_batch
+    dp = shd.dp_axes(mesh, profile)
+    ok = B % shd.axis_size(mesh, dp) == 0 and B > 1
+    bspec = P(dp) if ok else P()
+    out: Dict[str, Any] = {}
+    for k, v in inputs.items():
+        if k == "caches":
+            out[k] = shd.cache_shardings(cfg, mesh, B, v)
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, bspec)
+        else:
+            nd = len(v.shape)
+            out[k] = NamedSharding(
+                mesh, P(*(tuple(bspec) + (None,) * (nd - 1))) if ok
+                else P(*(None,) * nd))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step functions per shape kind (what the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_step_fn(cfg: ModelConfig, shape: ShapeConfig,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 overlay=None, n_microbatches: int = 1):
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig(quantized=True)
+        tstep = make_train_step(cfg, opt_cfg, overlay=overlay,
+                                n_microbatches=n_microbatches)
+
+        def train_step(params, opt_state, batch):
+            return tstep(params, opt_state, batch)
+
+        return train_step
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches = lm.prefill(
+                params, cfg, tokens=batch["tokens"],
+                embeds=batch.get("embeds"))
+            # serving returns greedy next-token ids + the cache
+            return jnp.argmax(logits, axis=-1), caches
+
+        return prefill_step
+
+    def serve_step(params, batch):
+        logits, caches = lm.decode_step(
+            params, cfg, batch["tokens"], batch["pos"], batch["caches"],
+            embeds=batch.get("embeds"))
+        return jnp.argmax(logits, axis=-1), caches
+
+    return serve_step

@@ -1,0 +1,140 @@
+"""Training launcher CLI.
+
+Local mode (default) trains a reduced config on this host — the smoke
+path. ``--mesh single|multi`` selects the production meshes (requires
+real devices or forced host devices; the dry-run driver covers the
+no-hardware case).
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+      --reduce --steps 100 --batch 8 --seq 256 --sasp 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SASPConfig, get_config, reduced
+from repro.core.pruning import cubic_sparsity_schedule
+from repro.core.sasp import build_sasp_overlay
+from repro.data.pipeline import DataConfig, DataState, Pipeline
+from repro.distribution import context as dctx
+from repro.distribution import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig, adamw_init, \
+    opt_state_shardings
+from repro.train.schedule import PreemptionHook, StragglerWatchdog, \
+    warmup_cosine
+from repro.train.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--reduce", action="store_true",
+                    help="family-preserving reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sasp", type=float, default=0.0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "single", "multi"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg, layers=4, d_model=128, vocab=512)
+    if args.sasp:
+        cfg = dataclasses.replace(
+            cfg, sasp=SASPConfig(enabled=True, block_k=32, block_n=32,
+                                 sparsity=args.sasp))
+
+    mesh = None
+    if args.mesh != "local":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    pipe = Pipeline(dcfg, kind="lm")
+    opt_cfg = AdamWConfig(lr=args.lr)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    hook = PreemptionHook()
+    wd = StragglerWatchdog()
+    sched = warmup_cosine(min(30, args.steps // 10 + 1), args.steps)
+
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params, opt_cfg)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        like = jax.eval_shape(lambda: {"params": params, "opt": opt})
+        state, extra = mgr.restore(like)
+        params, opt = state["params"], state["opt"]
+        pipe = Pipeline(dcfg, kind="lm",
+                        state=DataState.from_dict(extra))
+        start = mgr.latest_step()
+        print(f"resumed from step {start}")
+
+    overlay = None
+    if args.sasp:
+        overlay, got = build_sasp_overlay(params, cfg.sasp)
+        print(f"SASP masks: {got:.1%} sparsity "
+              f"(tile {cfg.sasp.block_k}x{cfg.sasp.block_n})")
+    step_fn = make_train_step(cfg, opt_cfg, overlay=overlay,
+                              lr_schedule=sched,
+                              n_microbatches=args.microbatches)
+
+    ctx = dctx.use_mesh(mesh) if mesh is not None else \
+        dctx.use_mesh(None)
+    with ctx:
+        if mesh is not None:
+            psh = shd.param_shardings(
+                cfg, jax.eval_shape(lambda: params), mesh)
+            osh = opt_state_shardings(
+                cfg, jax.eval_shape(lambda: params), mesh, opt_cfg, psh)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            bsh = {"tokens": NamedSharding(
+                mesh, P(shd.dp_axes(mesh), None))}
+            jstep = jax.jit(step_fn, in_shardings=(psh, osh, bsh),
+                            out_shardings=(psh, osh, None),
+                            donate_argnums=(0, 1))
+            params = jax.device_put(params, psh)
+            opt = jax.device_put(opt, osh)
+        else:
+            jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+            t0 = time.time()
+            params, opt, m = jstep(params, opt, batch)
+            slow = wd.observe(time.time() - t0)
+            if (i + 1) % 10 == 0:
+                print(f"step {i+1:5d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f}"
+                      f"{'  [SLOW]' if slow else ''}", flush=True)
+            if (i + 1) % wd.checkpoint_every(args.ckpt_every) == 0 \
+                    or hook.requested:
+                mgr.wait()
+                mgr.save_async(i + 1, {"params": params, "opt": opt},
+                               extra=pipe.state.to_dict())
+                if hook.requested:
+                    print("preemption requested — checkpointed, exiting")
+                    mgr.wait()
+                    return
+    mgr.wait()
+    mgr.save(args.steps, {"params": params, "opt": opt},
+             extra=pipe.state.to_dict())
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

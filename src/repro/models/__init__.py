@@ -1,0 +1,10 @@
+from repro.models import attention, ffn, lm, moe, modules, ssm  # noqa: F401
+from repro.models.lm import (  # noqa: F401
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill,
+    segment_plan,
+)

@@ -1,0 +1,353 @@
+"""Attention: GQA + RoPE + optional qk-norm / QKV-bias / sliding window.
+
+Full-sequence attention (train/prefill) is a two-level chunked online-softmax
+(flash-attention structure in pure jnp): outer ``lax.scan`` over query chunks,
+inner ``lax.scan`` over KV chunks carrying (m, l, acc). Memory is
+O(q_chunk × kv_chunk) per step instead of O(S²), which is what lets the
+32k-prefill cells lower without S² score buffers.
+
+Local (sliding-window) vs global layers share one code path: the window is a
+traced scalar (per-layer scan input), so hybrid local:global stacks (gemma3
+5:1) stay a single homogeneous ``lax.scan`` over layers.
+
+Decode uses a ring-buffer KV cache with an absolute-position side array —
+rings make the local-window cache O(window) instead of O(S) and make cache
+semantics uniform between local and global layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.modules import (
+    apply_rope,
+    as_dtype,
+    dense_apply,
+    dense_init,
+    fold_rng,
+    qknorm_apply,
+    softcap,
+)
+
+NEG_INF = -1.0e30
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache for one attention layer.
+
+    k, v: (B, C, KH, D); pos: (B, C) absolute position of each slot, -1 if
+    empty. C is the ring capacity (window for local layers, max context for
+    global ones).
+
+    INT8 variant (cfg.kv_quant — beyond-paper: the paper's weight-quant
+    theme applied to the decode bottleneck): k/v are int8 with per-
+    (slot, head) fp32 scales; decode reads dequantize in-register, so the
+    HBM KV term halves vs bf16 (and quarters vs fp32).
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+    kscale: Optional[jnp.ndarray] = None    # (B, C, KH) fp32
+    vscale: Optional[jnp.ndarray] = None
+
+
+def init_kv_cache(batch: int, capacity: int, num_kv_heads: int,
+                  head_dim: int, dtype, quant: bool = False) -> KVCache:
+    shape = (batch, capacity, num_kv_heads, head_dim)
+    if quant:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8),
+            v=jnp.zeros(shape, jnp.int8),
+            pos=jnp.full((batch, capacity), -1, jnp.int32),
+            kscale=jnp.zeros((batch, capacity, num_kv_heads),
+                             jnp.float32),
+            vscale=jnp.zeros((batch, capacity, num_kv_heads),
+                             jnp.float32),
+        )
+    return KVCache(
+        k=jnp.zeros(shape, dtype=dtype),
+        v=jnp.zeros(shape, dtype=dtype),
+        pos=jnp.full((batch, capacity), -1, dtype=jnp.int32),
+    )
+
+
+def _quant_heads(x: jnp.ndarray):
+    """x: (..., KH, D) -> int8 values + per-head scale (...)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig) -> Dict:
+    dt = as_dtype(cfg.param_dtype)
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.attn_head_dim
+    ks = jax.random.split(key, 4)
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype=dt, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, kvh * hd, dtype=dt, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, kvh * hd, dtype=dt, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], h * hd, d, dtype=dt, scale=out_scale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype=dt)
+        p["k_norm"] = jnp.ones((hd,), dtype=dt)
+    return p
+
+
+def _project_qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions):
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,KH,D), RoPE'd + qk-normed."""
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
+    dt = x.dtype
+    from repro.distribution import context as dctx
+    dp = dctx.dp_axes()
+    q = dense_apply(p["wq"], x).reshape(B, S, h, hd)
+    k = dense_apply(p["wk"], x).reshape(B, S, kvh, hd)
+    v = dense_apply(p["wv"], x).reshape(B, S, kvh, hd)
+    if dp and S > 1:
+        tp = dctx.axis_size("model")
+        if tp > 1 and (h % tp or kvh % tp):
+            # GQA/TP mismatch: head counts that don't divide the model
+            # axis let XLA invent shardings with per-chunk all-reduces
+            # inside SDPA (hundreds of GB/device — EXPERIMENTS.md §Perf
+            # B iter 2). Pin SDPA replicated over 'model': redundant
+            # attention compute (counted honestly in analysis/counters
+            # via the same divisibility rule) in exchange for zero SDPA
+            # collectives. Cheap for windowed/short-context attention.
+            q = dctx.maybe_shard(q, dp, None, None, None)
+            k = dctx.maybe_shard(k, dp, None, None, None)
+            v = dctx.maybe_shard(v, dp, None, None, None)
+        else:
+            q = dctx.maybe_shard(q, dp, None, "model", None)
+            k = dctx.maybe_shard(k, dp, None, "model", None)
+            v = dctx.maybe_shard(v, dp, None, "model", None)
+    if cfg.qk_norm:
+        q = qknorm_apply(p["q_norm"], q, eps=cfg.norm_eps)
+        k = qknorm_apply(p["k_norm"], k, eps=cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q.astype(dt), k.astype(dt), v.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def attend_chunked(q, k, v, q_pos, kv_pos, *, window, cap: float = 0.0,
+                   q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
+    """Causal (optionally windowed) attention.
+
+    q: (B, Sq, KH, G, D); k, v: (B, Sk, KH, D); q_pos (Sq,), kv_pos (Sk,)
+    absolute positions; window: traced or static scalar — key j attends iff
+    0 <= q_pos - kv_pos < window (global layers pass window >= S).
+    Returns (B, Sq, KH, G, D).
+    """
+    B, Sq, KH, G, D = q.shape
+    Sk = k.shape[1]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // qc, Sk // kc
+    scale = D ** -0.5
+
+    q = (q * scale).reshape(B, nq, qc, KH, G, D)
+    q_pos = q_pos.reshape(nq, qc)
+    k = k.reshape(B, nk, kc, KH, D)
+    v = v.reshape(B, nk, kc, KH, D)
+    kv_pos = kv_pos.reshape(nk, kc)
+    win = jnp.asarray(window, dtype=jnp.int32)
+
+    def q_body(_, qi):
+        qb, qp = qi                                  # (B,qc,KH,G,D), (qc,)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kb, vb, kp = ki
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32)
+            if cap:
+                s = softcap(s, cap)
+            delta = qp[:, None] - kp[None, :]        # (qc, kc)
+            mask = (delta >= 0) & (delta < win)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), dtype=jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qc, D), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (
+            jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), kv_pos))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, jnp.moveaxis(out, 3, 1)         # (B, qc, KH, G, D)
+
+    _, ys = jax.lax.scan(jax.checkpoint(q_body), None,
+                         (jnp.moveaxis(q, 1, 0), q_pos))
+    # ys: (nq, B, qc, KH, G, D) -> (B, Sq, KH, G, D)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, Sq, KH, G, D)
+
+
+def _attend_maybe_sharded(qg, k, v, positions, window, cap):
+    """SDPA under an active mesh runs inside shard_map: batch over the DP
+    axes, kv-heads over 'model' when they divide it, otherwise replicated
+    over 'model' (GQA/TP mismatch — redundant attention compute, charged
+    honestly in analysis/counters, in exchange for ZERO SDPA collectives;
+    XLA left to its own devices invents shardings with per-chunk
+    all-reduces here — EXPERIMENTS.md §Perf B)."""
+    from functools import partial as _partial
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution import context as dctx
+
+    mesh = dctx.active_mesh()
+    B, Sq, KH = qg.shape[0], qg.shape[1], qg.shape[2]
+    fn = _partial(attend_chunked, window=window, cap=cap)
+    if mesh is None or Sq <= 1:
+        return fn(qg, k, v, positions, positions)
+    dp = dctx.dp_axes()
+    tp = dctx.axis_size("model")
+    bax = dp if (dp and B % dctx.axis_size(dp) == 0 and B > 1) else None
+    hax = "model" if (tp > 1 and KH % tp == 0
+                      and "model" not in (dp or ())) else None
+    q_spec = P(bax, None, hax, None, None)
+    kv_spec = P(bax, None, hax, None)
+
+    def body(qq, kk, vv, pos):
+        return fn(qq, kk, vv, pos, pos)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, P(None)),
+        out_specs=q_spec, check_vma=False,
+    )(qg, k, v, positions)
+
+
+def attn_apply_full(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, window) -> Tuple[jnp.ndarray,
+                                                             Tuple]:
+    """Train/prefill path. Returns (y, (k, v)) — k/v are handed to the
+    caller for cache construction during prefill."""
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
+    q, k, v = _project_qkv(p, cfg, x, positions[None, :])
+    qg = q.reshape(B, S, kvh, h // kvh, hd)
+    out = _attend_maybe_sharded(qg, k, v, positions, window,
+                                cfg.logit_softcap)
+    out = out.reshape(B, S, h * hd).astype(x.dtype)
+    y = dense_apply(p["wo"], out)
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a ring cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_apply_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                      pos: jnp.ndarray, cache: KVCache,
+                      window) -> Tuple[jnp.ndarray, KVCache]:
+    """x: (B, 1, d); pos: (B,) absolute position of the new token."""
+    B = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
+    C = cache.k.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos[:, None])
+
+    slot = (pos % C).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    if cache.kscale is not None:
+        kq, ks = _quant_heads(k_new[:, 0])
+        vq, vs = _quant_heads(v_new[:, 0])
+        cache = KVCache(
+            k=cache.k.at[bidx, slot].set(kq),
+            v=cache.v.at[bidx, slot].set(vq),
+            pos=cache.pos.at[bidx, slot].set(pos.astype(jnp.int32)),
+            kscale=cache.kscale.at[bidx, slot].set(ks),
+            vscale=cache.vscale.at[bidx, slot].set(vs),
+        )
+    else:
+        cache = KVCache(
+            k=cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype)),
+            v=cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype)),
+            pos=cache.pos.at[bidx, slot].set(pos.astype(jnp.int32)),
+        )
+
+    qg = q.reshape(B, kvh, h // kvh, hd) * (hd ** -0.5)
+    if cache.kscale is not None:
+        k_read = _dequant(cache.k, cache.kscale, qg.dtype)
+        v_read = _dequant(cache.v, cache.vscale, qg.dtype)
+    else:
+        k_read, v_read = cache.k.astype(qg.dtype), cache.v
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_read,
+                   preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        s = softcap(s, cfg.logit_softcap)
+    delta = pos[:, None] - cache.pos                  # (B, C)
+    win = jnp.asarray(window, dtype=jnp.int32)
+    mask = (cache.pos >= 0) & (delta >= 0) & (delta < win)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w.astype(qg.dtype),
+                     v_read.astype(qg.dtype),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, h * hd).astype(x.dtype)
+    return dense_apply(p["wo"], out), cache
+
+
+def build_cache_from_prefill(k: jnp.ndarray, v: jnp.ndarray,
+                             capacity: int, quant: bool = False
+                             ) -> KVCache:
+    """Arrange prefill K/V (B, S, KH, D) into a ring cache of ``capacity``."""
+    B, S, KH, D = k.shape
+    cache = init_kv_cache(B, capacity, KH, D, k.dtype, quant=quant)
+    n = min(S, capacity)
+    src = jnp.arange(S - n, S)
+    slots = src % capacity
+    pos = cache.pos.at[:, slots].set(
+        jnp.broadcast_to(src, (B, n)).astype(jnp.int32))
+    if quant:
+        kq, ks = _quant_heads(k[:, src])
+        vq, vs = _quant_heads(v[:, src])
+        return KVCache(
+            k=cache.k.at[:, slots].set(kq),
+            v=cache.v.at[:, slots].set(vq),
+            pos=pos,
+            kscale=cache.kscale.at[:, slots].set(ks),
+            vscale=cache.vscale.at[:, slots].set(vs),
+        )
+    return KVCache(
+        k=cache.k.at[:, slots].set(k[:, src]),
+        v=cache.v.at[:, slots].set(v[:, src]),
+        pos=pos,
+    )

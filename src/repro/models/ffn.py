@@ -1,0 +1,196 @@
+"""Feed-forward layers — the paper's primary SASP surface.
+
+Execution paths (DESIGN.md §4):
+  * dense              — no SASP.
+  * masked-dense       — params carry per-matrix block masks ("sasp_masks");
+                         tiles are zeroed but the matmul stays dense. Used
+                         in training and as the numerical reference.
+  * bsr                — params carry BlockSparseWeight containers
+                         ("sasp_bsr"); pruned tiles are *skipped*
+                         (gathered-matmul), FLOPs/bytes ∝ (1 - sparsity).
+  * kernel             — Pallas tile-skip kernel (TPU-native), same
+                         container.
+  * quant              — weight-only INT8 (+ per-block scales); composes
+                         with any of the above.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pruning import apply_block_mask
+from repro.core.quantization import QuantizedWeight
+import jax
+from repro.core.sparse import BlockSparseWeight, bsr_matmul
+from repro.models.modules import act_fn, as_dtype, dense_init
+
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    dt = as_dtype(cfg.param_dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    p = {
+        "w1": dense_init(ks[0], d, f, dtype=dt),
+        "w2": dense_init(ks[1], f, d, dtype=dt, scale=out_scale),
+    }
+    if cfg.ffn_gated:
+        p["w3"] = dense_init(ks[2], d, f, dtype=dt)
+    return p
+
+
+def _materialize(p: Dict, name: str, dtype) -> jnp.ndarray:
+    """Resolve one weight matrix through the masked/quantized views."""
+    entry = p[name]
+    if isinstance(entry, dict) and "qw" in entry:       # int8 weight-only
+        qw: QuantizedWeight = entry["qw"]
+        bk, bn = qw.block
+        K, N = qw.q.shape[-2:]
+        KB, NB = K // bk, N // bn
+        qb = qw.q.reshape(*qw.q.shape[:-2], KB, bk, NB, bn).astype(
+            jnp.float32)
+        w = (qb * qw.scale[..., :, None, :, None]).reshape(qw.q.shape)
+    else:
+        w = entry["w"]
+    masks = p.get("sasp_masks")
+    if masks is not None and name in masks:
+        w = apply_block_mask(w, masks[name])
+    return w.astype(dtype)
+
+
+def _bsr_mm_sharded(x2d, w, cfg, kernel: bool):
+    """Block-sparse matmul under an active mesh: shard_map over 'model'
+    (each shard owns its NB-slice of blocks and computes its output
+    columns locally — no gather collectives; the jnp gather path under
+    plain GSPMD all-gathers x per k_max step, see EXPERIMENTS.md §Perf
+    A iter 5)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution import context as dctx
+
+    mesh = dctx.active_mesh()
+    NB = w.idx.shape[-1]
+    tp = dctx.axis_size("model")
+
+    def compute(xx, ww):
+        if kernel:
+            from repro.kernels.sasp_gemm.ops import sasp_matmul
+            return sasp_matmul(xx, ww)
+        return bsr_matmul(xx, ww)
+
+    if mesh is None or tp <= 1 or NB % tp:
+        return compute(x2d, w)
+    dp = dctx.dp_axes()
+    M = x2d.shape[0]
+    bax = dp if (dp and M % dctx.axis_size(dp) == 0 and M > 1) else None
+    wspec = BlockSparseWeight(
+        vals=P(None, "model", None, None), idx=P(None, "model"),
+        shape=w.shape, block=w.block,
+        scale=None if w.scale is None else P(None, "model"))
+
+    def body(xx, ww):
+        # local slice: same (K, sliced N) semantics
+        w_loc = BlockSparseWeight(ww.vals, ww.idx,
+                                  (w.shape[0], w.shape[1] // tp),
+                                  w.block, ww.scale)
+        return compute(xx, w_loc)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bax, None), wspec),
+        out_specs=P(bax, "model"), check_vma=False)(x2d, w)
+
+
+def _mm(p: Dict, name: str, x2d: jnp.ndarray, cfg: ModelConfig
+        ) -> jnp.ndarray:
+    """(M, K) @ weight[name] with whatever SASP view is attached."""
+    bsr = p.get("sasp_bsr")
+    if bsr is not None and name in bsr:
+        w: BlockSparseWeight = bsr[name]
+        return _bsr_mm_sharded(x2d, w, cfg, cfg.sasp.path == "kernel")
+    w = _materialize(p, name, x2d.dtype)
+    return x2d @ w
+
+
+def _ffn_tp_rs_ag_int8(p: Dict, cfg: ModelConfig, x2: jnp.ndarray):
+    """Dense FFN with the TP output reduction done as reduce-scatter
+    (bf16) + INT8 all-gather of the reduced shards (per-row scales) —
+    3 B/elem on the wire vs 4 B/elem for a ring all-reduce (0.75×), and
+    the paper's quantization theme applied to the TP activation traffic
+    that dominates dense-transformer training at TP=16 (§Roofline)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution import context as dctx
+
+    mesh = dctx.active_mesh()
+    dp = dctx.dp_axes()
+    tp = dctx.axis_size("model")
+    M, d = x2.shape
+    f = p["w1"]["w"].shape[-1]
+    bax = dp if (dp and M % dctx.axis_size(dp) == 0 and M > 1) else None
+
+    def body(xx, w1, w2, w3):
+        h = xx @ w1
+        if cfg.ffn_gated:
+            h = act_fn(cfg.act)(h) * (xx @ w3)
+        else:
+            h = act_fn(cfg.act)(h)
+        y_part = h @ w2                          # (M, d) partial over tp
+        y_rs = jax.lax.psum_scatter(y_part, "model", scatter_dimension=1,
+                                    tiled=True)  # (M, d/tp) reduced
+        # int8 the REDUCED shard (safe: no further accumulation), then
+        # all-gather the int8 payload + per-row scales
+        amax = jnp.max(jnp.abs(y_rs.astype(jnp.float32)), axis=1,
+                       keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(y_rs.astype(jnp.float32) / scale), -127,
+                     127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, "model", axis=1, tiled=True)
+        sg = jax.lax.all_gather(scale, "model", axis=1, tiled=True)
+        seg = jnp.repeat(sg, d // tp, axis=1)
+        return (qg.astype(jnp.float32) * seg).astype(xx.dtype)
+
+    w3 = p["w3"]["w"] if cfg.ffn_gated else p["w1"]["w"]
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bax, None), P(None, "model"), P("model", None),
+                  P(None, "model")),
+        out_specs=P(bax, None), check_vma=False,
+    )(x2, p["w1"]["w"], p["w2"]["w"], w3)
+
+
+def _can_rs_ag(p: Dict, cfg: ModelConfig, x2) -> bool:
+    from repro.distribution import context as dctx
+
+    if cfg.tp_comm != "rs_ag_int8" or cfg.moe is not None:
+        return False
+    mesh = dctx.active_mesh()
+    if mesh is None:
+        return False
+    tp = dctx.axis_size("model")
+    d = x2.shape[-1]
+    f = p["w1"]["w"].shape[-1]
+    return (tp > 1 and d % tp == 0 and f % tp == 0
+            and "sasp_bsr" not in p and "sasp_masks" not in p
+            and isinstance(p["w1"], dict) and "w" in p["w1"])
+
+
+def ffn_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    *lead, d = x.shape
+    x2 = x.reshape(-1, d)
+    if _can_rs_ag(p, cfg, x2):
+        y = _ffn_tp_rs_ag_int8(p, cfg, x2)
+        return y.reshape(*lead, d).astype(x.dtype)
+    act = act_fn(cfg.act)
+    h = _mm(p, "w1", x2, cfg)
+    if cfg.ffn_gated:
+        h = act(h) * _mm(p, "w3", x2, cfg)
+    else:
+        h = act(h)
+    y = _mm(p, "w2", h, cfg)
+    if "b" in p.get("w2", {}):
+        y = y + p["w2"]["b"].astype(y.dtype)
+    return y.reshape(*lead, d).astype(x.dtype)

@@ -1,0 +1,117 @@
+"""Functional parameter/module helpers.
+
+Params are nested dicts of jnp arrays; every layer is an (init, apply) pair
+of pure functions. Layer stacks are built by vmapping init over a leading
+layer axis and running apply under ``lax.scan`` (see lm.py) — this keeps
+compile time flat in depth, which matters both on the 1-core container and
+for the 70+ dry-run lowers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def as_dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, *, dtype, scale: float = None,
+               bias: bool = False) -> Params:
+    scale = 0.02 if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jnp.ndarray, *, dtype=None) -> jnp.ndarray:
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, *, dtype) -> Params:
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"emb": w.astype(dtype)}
+
+
+def embedding_apply(p: Params, tokens: jnp.ndarray, *, dtype) -> jnp.ndarray:
+    return jnp.take(p["emb"].astype(dtype), tokens, axis=0)
+
+
+def act_fn(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, *, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, *, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def qknorm_apply(scale: jnp.ndarray, x: jnp.ndarray, *, eps: float):
+    """Per-head RMS norm over head_dim (qwen3/chameleon style)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def fold_rng(key, *idx: int):
+    for i in idx:
+        key = jax.random.fold_in(key, i)
+    return key

@@ -1,0 +1,141 @@
+"""Top-k MoE with capacity-bounded sort-based dispatch.
+
+`moe_ffn_local` is the single-shard math: tokens are routed with a stable
+sort by expert id (no (N, E, C) one-hot dispatch tensors — those would show
+up as fake-dense FLOPs in the roofline), gathered into a capacity-padded
+(E, C, d) buffer, pushed through batched expert GEMMs, and combined with
+gate weights. Overflow tokens are dropped (standard GShard capacity
+semantics); the residual stream carries them unchanged.
+
+The expert-parallel (EP) version — per-shard dispatch + all_to_all over the
+`data` axis with experts sharded across it — lives in
+``repro.distribution.moe_ep`` and reuses this file's routing helpers.
+
+SASP: per-expert weights are (E, d_ff-shaped) stacks; block masks with a
+leading E dim compose transparently via ``apply_block_mask`` (the paper's
+technique extended to MoE — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pruning import apply_block_mask
+from repro.models.modules import act_fn, as_dtype, dense_init
+
+
+class Routing(NamedTuple):
+    expert_idx: jnp.ndarray    # (N, k) int32
+    gate_w: jnp.ndarray        # (N, k) float — normalized top-k gates
+    aux_loss: jnp.ndarray      # scalar load-balance loss
+    # sorted dispatch order over the flattened (N*k,) assignment slots:
+    sort_idx: jnp.ndarray      # (N*k,) permutation (stable by expert)
+    pos_in_expert: jnp.ndarray  # (N*k,) position within expert, sorted order
+
+
+def moe_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    dt = as_dtype(cfg.param_dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    E = cfg.moe.num_experts
+    ks = jax.random.split(key, 5)
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+
+    def stack(k, din, dout, scale=0.02):
+        w = jax.random.normal(k, (E, din, dout), jnp.float32) * scale
+        return {"w": w.astype(dt)}
+
+    p = {
+        "router": dense_init(ks[0], d, E, dtype=jnp.float32),
+        "w1": stack(ks[1], d, f),
+        "w2": stack(ks[2], f, d, out_scale),
+    }
+    if cfg.ffn_gated:
+        p["w3"] = stack(ks[3], d, f)
+    if cfg.moe.num_shared_experts:
+        from repro.models.ffn import ffn_init
+        p["shared"] = ffn_init(ks[4], cfg, d_ff=f * cfg.moe.num_shared_experts)
+    return p
+
+
+def route(p: Dict, cfg: ModelConfig, x2: jnp.ndarray) -> Routing:
+    """x2: (N, d) -> routing decision."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    logits = (x2.astype(jnp.float32) @ p["router"]["w"])       # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_idx = jax.lax.top_k(probs, k)               # (N, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # GShard aux loss: E * sum_e f_e * P_e
+    N = x2.shape[0]
+    f_e = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0) / (N * k)
+    P_e = probs.mean(axis=0)
+    aux = E * jnp.sum(f_e * P_e) * m.router_aux_weight
+
+    flat_e = expert_idx.reshape(-1)                            # (N*k,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                       # exclusive
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e]
+    return Routing(expert_idx, gate_w.astype(x2.dtype), aux, sort_idx, pos)
+
+
+def _expert_mm(p: Dict, name: str, h: jnp.ndarray) -> jnp.ndarray:
+    """h: (E, C, din) @ stacked expert weights (E, din, dout)."""
+    w = p[name]["w"]
+    masks = p.get("sasp_masks")
+    if masks is not None and name in masks:
+        w = apply_block_mask(w, masks[name])
+    return jnp.einsum("ecd,edf->ecf", h, w.astype(h.dtype),
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def moe_ffn_local(p: Dict, cfg: ModelConfig, x: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Single-shard dispatch."""
+    *lead, d = x.shape
+    x2 = x.reshape(-1, d)
+    N = x2.shape[0]
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    C = max(1, int(-(-N * k * m.capacity_factor // E)))        # ceil
+
+    r = route(p, cfg, x2)
+    token_of_slot = r.sort_idx // k                            # (N*k,)
+    sorted_e = r.expert_idx.reshape(-1)[r.sort_idx]
+    keep = r.pos_in_expert < C
+    # dropped slots write to a scratch row (capacity C is row C of C+1)
+    pos_c = jnp.where(keep, r.pos_in_expert, C)
+
+    buf = jnp.zeros((E, C + 1, d), dtype=x2.dtype)
+    buf = buf.at[sorted_e, pos_c].set(
+        x2[token_of_slot], indices_are_sorted=True, unique_indices=True,
+        mode="drop")
+    buf = buf[:, :C]
+
+    h = _expert_mm(p, "w1", buf)
+    if cfg.ffn_gated:
+        h = act_fn(cfg.act)(h) * _expert_mm(p, "w3", buf)
+    else:
+        h = act_fn(cfg.act)(h)
+    out = _expert_mm(p, "w2", h)                               # (E, C, d)
+
+    # combine: gather expert outputs back to (N*k, d) slots, weight, sum
+    out_pad = jnp.concatenate(
+        [out, jnp.zeros((E, 1, d), out.dtype)], axis=1)        # dropped -> 0
+    y_slots = out_pad[sorted_e, pos_c]                         # sorted order
+    inv = jnp.argsort(r.sort_idx, stable=True)
+    y_flat = y_slots[inv].reshape(N, k, d)
+    gates = r.gate_w[..., None].astype(y_flat.dtype)
+    y = jnp.sum(y_flat * gates, axis=1)
+
+    if "shared" in p:
+        from repro.models.ffn import ffn_apply
+        y = y + ffn_apply(p["shared"], cfg, x2)
+
+    return y.reshape(*lead, d).astype(x.dtype), r.aux_loss

@@ -1,0 +1,236 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Train/prefill run the chunked SSD algorithm: ``lax.scan`` over chunks of
+``chunk_size`` carrying the (B, H, P, N) inter-chunk state; within a chunk
+the quadratic "attention-like" form is used (Q×Q decay-masked C·Bᵀ), which
+maps onto the MXU. Decode is the O(1) recurrence on the same state.
+
+Layer structure (Mamba-2 block): RMSNorm → in_proj → [z | xBC | dt] →
+causal depthwise conv(k) on xBC → SiLU → split x, B, C → SSD →
+gated RMSNorm(y ⊙ SiLU(z)) → out_proj.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.modules import as_dtype, dense_apply, dense_init, \
+    rmsnorm_apply
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, P, N)
+    conv: jnp.ndarray       # (B, K-1, conv_dim) trailing inputs
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.num_heads(d)
+    G, N, P, K = s.ngroups, s.state_dim, s.head_dim, s.conv_kernel
+    conv_dim = di + 2 * G * N
+    return d, di, H, G, N, P, K, conv_dim
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    _, di, H, G, N, P, K, conv_dim = _dims(cfg)
+    return SSMCache(
+        state=jnp.zeros((batch, H, P, N), dtype=jnp.float32),
+        conv=jnp.zeros((batch, K - 1, conv_dim), dtype=dtype),
+    )
+
+
+def ssm_init(key, cfg: ModelConfig) -> Dict:
+    dt = as_dtype(cfg.param_dtype)
+    d, di, H, G, N, P, K, conv_dim = _dims(cfg)
+    s = cfg.ssm
+    ks = jax.random.split(key, 4)
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    # dt bias ~ inverse softplus of dt in [dt_min, dt_max]
+    u = jax.random.uniform(ks[2], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min)) +
+                  math.log(s.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    kz, kx, kd = jax.random.split(ks[0], 3)
+    return {
+        # separate projections (≡ one concatenated in_proj) so each output
+        # dim TP-shards cleanly over 'model' (DESIGN.md §6)
+        "in_z": dense_init(kz, d, di, dtype=dt),
+        "in_xbc": dense_init(kx, d, conv_dim, dtype=dt),
+        "in_dt": dense_init(kd, d, H, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32)
+                   * (1.0 / math.sqrt(K * 1.0))).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.ones((di,), dtype=dt),
+        "out_proj": dense_init(ks[3], di, d, dtype=dt, scale=out_scale),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """xbc: (B, S, C); w: (K, C) depthwise causal."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, shape=xbc.shape).astype(jnp.float32)
+    for i in range(K):                       # tiny K (=4): unrolled taps
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum_decay(a_cum: jnp.ndarray) -> jnp.ndarray:
+    """a_cum: (..., Q) inclusive cumsum of log-decay -> (..., Q, Q) matrix
+    exp(cum[q] - cum[s]) for s <= q, else 0."""
+    Q = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, h0, chunk: int):
+    """SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) negative; Bm/Cm: (B, S, G, N);
+    D: (H,); h0: (B, H, P, N) initial state. Returns (y (B,S,H,P), h_final).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    a = dt.astype(jnp.float32) * A                     # (B, S, H) log decay
+
+    def reshape_c(t, feat_shape):
+        return jnp.moveaxis(t.reshape(Bsz, nc, Q, *feat_shape), 1, 0)
+
+    xc = reshape_c(xdt, (H, P))                        # (nc, B, Q, H, P)
+    ac = reshape_c(a, (H,))                            # (nc, B, Q, H)
+    bc = reshape_c(Bm.astype(jnp.float32), (G, N))
+    cc = reshape_c(Cm.astype(jnp.float32), (G, N))
+
+    def body(h, inp):
+        xq, aq, bq, cq = inp                           # per-chunk slices
+        cum = jnp.cumsum(aq, axis=1)                   # (B, Q, H) inclusive
+        # ---- intra-chunk (quadratic within Q) ----
+        cb = jnp.einsum("bqgn,bsgn->bgqs", cq, bq)     # (B, G, Q, Q)
+        Lmat = _segsum_decay(jnp.moveaxis(cum, 1, 2))  # (B, H, Q, Q)
+        cb_h = jnp.repeat(cb, rep, axis=1)             # (B, H, Q, Q)
+        y_intra = jnp.einsum("bhqs,bshp->bqhp", cb_h * Lmat, xq)
+        # ---- inter-chunk: contribution of carried state ----
+        c_h = jnp.repeat(cq, rep, axis=2)              # (B, Q, H, N)
+        decay_q = jnp.exp(cum)                         # (B, Q, H)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", c_h * decay_q[..., None], h)
+        # ---- state update ----
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)     # (B, Q, H)
+        b_h = jnp.repeat(bq, rep, axis=2)              # (B, Q, H, N)
+        s_new = jnp.einsum("bqhp,bqhn->bhpn", xq * decay_tail[..., None],
+                           b_h)
+        h_new = h * jnp.exp(cum[:, -1])[..., None, None].transpose(
+            0, 1, 2, 3) + s_new
+        return h_new, y_intra + y_inter
+
+    # reshape exp(cum[-1]) to (B, H, 1, 1): do it inside body via transpose
+    h_final, ys = jax.lax.scan(body, h0.astype(jnp.float32),
+                               (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, h_final
+
+
+def ssm_apply_full(p: Dict, cfg: ModelConfig, xin: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, SSMCache]:
+    """Train/prefill. xin: (B, S, d) -> (y, final cache)."""
+    d, di, H, G, N, P, K, conv_dim = _dims(cfg)
+    Bsz, S, _ = xin.shape
+    s = cfg.ssm
+
+    z = dense_apply(p["in_z"], xin)
+    xbc = dense_apply(p["in_xbc"], xin)
+    dt = dense_apply(p["in_dt"], xin)
+    xbc_conv = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x, Bm, Cm = jnp.split(xbc_conv, [di, di + G * N], axis=-1)
+
+    from repro.distribution import context as dctx
+    dp = dctx.dp_axes()
+    x = x.reshape(Bsz, S, H, P)
+    Bm = Bm.reshape(Bsz, S, G, N)
+    Cm = Cm.reshape(Bsz, S, G, N)
+    if dp:
+        # pin SSD activations: batch over DP, heads over TP (stops XLA
+        # from inventing shardings inside the chunk scan)
+        x = dctx.maybe_shard(x, dp, None, "model", None)
+        Bm = dctx.maybe_shard(Bm, dp, None, None, None)
+        Cm = dctx.maybe_shard(Cm, dp, None, None, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    if dp:
+        h0 = dctx.maybe_shard(h0, dp, "model", None, None)
+    y, h_final = ssd_chunked(x, dt, A, Bm, Cm, p["D"], h0, s.chunk_size)
+
+    y = y.reshape(Bsz, S, di).astype(xin.dtype)
+    y = rmsnorm_apply({"scale": p["norm"]}, y * jax.nn.silu(z),
+                      eps=cfg.norm_eps)
+    out = dense_apply(p["out_proj"], y)
+
+    conv_tail = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))[:, S:S + K - 1]
+    if S >= K - 1:
+        conv_tail = xbc[:, S - (K - 1):]
+    cache = SSMCache(state=h_final, conv=conv_tail)
+    return out, cache
+
+
+def ssm_apply_decode(p: Dict, cfg: ModelConfig, xin: jnp.ndarray,
+                     cache: SSMCache) -> Tuple[jnp.ndarray, SSMCache]:
+    """Single-token recurrence. xin: (B, 1, d)."""
+    d, di, H, G, N, P, K, conv_dim = _dims(cfg)
+    Bsz = xin.shape[0]
+
+    x0 = xin[:, 0]                                     # (B, d)
+    z = dense_apply(p["in_z"], x0)
+    xbc = dense_apply(p["in_xbc"], x0)
+    dt = dense_apply(p["in_dt"], x0)
+
+    # conv over [cached K-1 inputs, current]
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc_conv = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    x, Bm, Cm = jnp.split(xbc_conv.astype(xin.dtype), [di, di + G * N],
+                          axis=-1)
+    x = x.reshape(Bsz, H, P)
+    Bm = Bm.reshape(Bsz, G, N)
+    Cm = Cm.reshape(Bsz, G, N)
+    rep = H // G
+
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A)                                       # (B, H)
+    b_h = jnp.repeat(Bm, rep, axis=1)                              # (B, H, N)
+    c_h = jnp.repeat(Cm, rep, axis=1)
+    xdt = x.astype(jnp.float32) * dt1[..., None]                   # (B, H, P)
+
+    state = cache.state * decay[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xdt, b_h)
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h) + \
+        x.astype(jnp.float32) * p["D"][None, :, None]
+
+    y = y.reshape(Bsz, 1, di).astype(xin.dtype)
+    y = rmsnorm_apply({"scale": p["norm"]}, y * jax.nn.silu(z[:, None]),
+                      eps=cfg.norm_eps)
+    out = dense_apply(p["out_proj"], y)
+    return out, SSMCache(state=state, conv=window[:, 1:].astype(
+        cache.conv.dtype))

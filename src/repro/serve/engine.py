@@ -1,0 +1,120 @@
+"""Batched serving engine: prefill + greedy/temperature decode over a
+fixed ring-cache budget, with slot-based continuous batching.
+
+The engine keeps B slots. Each slot holds one sequence (its own cache
+rows — caches are batched pytrees, so slot i is index i of every cache
+leaf). Finished sequences free their slot; queued requests prefill into
+free slots. Decode steps run over the full batch every iteration (idle
+slots are masked). SASP-deployed weights (masked / BSR / kernel paths)
+serve through the same code — the paper's tile-skip savings apply to
+every decode GEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
+                 cache_len: int = 512, rng_seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.cache_len = cache_len
+        self.caches = lm.init_caches(params, cfg, batch_slots, cache_len)
+        self.pos = np.zeros((batch_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.rng = np.random.default_rng(rng_seed)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: lm.decode_step(p, cfg, t, pos, c))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        """Single-sequence prefill; its cache rows are written into the
+        batch caches at ``slot``."""
+        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, caches1 = lm.prefill(self.params, self.cfg, tokens=toks,
+                                     cache_len=self.cache_len)
+
+        def put(batch_leaf, one_leaf):
+            return batch_leaf.at[:, slot].set(one_leaf[:, 0])
+
+        self.caches = jax.tree.map(put, self.caches, caches1)
+        self.pos[slot] = len(req.prompt)
+        nxt = self._sample(np.asarray(logits)[0, 0], req)
+        req.out_tokens.append(int(nxt))
+        self.slot_req[slot] = req
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / req.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit queued requests, run one decode step, retire finished.
+        Returns completed requests."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._prefill_into_slot(slot, self.queue.pop(0))
+
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        finished: List[Request] = []
+        if not active:
+            return finished
+
+        last = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slot_req[i].out_tokens[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(last),
+            jnp.asarray(self.pos, jnp.int32), self.caches)
+        logits = np.asarray(logits)
+
+        for i in active:
+            req = self.slot_req[i]
+            self.pos[i] += 1
+            nxt = self._sample(logits[i, 0], req)
+            req.out_tokens.append(nxt)
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slot_req[i] = None
+        return finished
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        done: List[Request] = []
+        while len(done) < len(requests):
+            done.extend(self.step())
+        return done

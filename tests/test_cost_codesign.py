@@ -1,0 +1,100 @@
+"""Cost-model fidelity vs paper Table 3 + codesign explorer invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codesign import (
+    best_under_qos,
+    exponential_qos_proxy,
+    pareto_front,
+    speedup_at_fixed_qos,
+    sweep,
+)
+from repro.core.cost_model import (
+    GEMMWork,
+    SystolicConfig,
+    encoder_gemms,
+    energy_j,
+    gemm_cycles,
+    speedup_vs_cpu,
+)
+
+PAPER_NOSASP = {("fp32", 4): 8.42, ("fp32", 8): 19.79,
+                ("fp32", 16): 35.22, ("fp32", 32): 50.95,
+                ("int8", 4): 8.03, ("int8", 8): 20.18,
+                ("int8", 16): 36.53, ("int8", 32): 61.33}
+
+GEMMS = encoder_gemms(num_layers=18, d_model=512, d_ff=2048, seq=512)
+
+
+@pytest.mark.parametrize("quant,size", list(PAPER_NOSASP))
+def test_fit_within_5pct_of_paper_table3(quant, size):
+    sp = speedup_vs_cpu(SystolicConfig(size, quant), GEMMS)
+    assert abs(sp / PAPER_NOSASP[(quant, size)] - 1) < 0.05
+
+
+def test_area_matches_paper():
+    assert abs(SystolicConfig(32, "fp32").area_mm2 - 3.34) < 0.1
+    assert abs(SystolicConfig(8, "fp32").area_mm2 - 0.21) < 0.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(s1=st.floats(0.0, 0.4), s2=st.floats(0.4, 0.8),
+       size=st.sampled_from([4, 8, 16, 32]))
+def test_speedup_monotone_in_sparsity(s1, s2, size):
+    sa = SystolicConfig(size, "int8")
+    g1 = encoder_gemms(num_layers=4, d_model=256, d_ff=1024, seq=128,
+                       ffn_sparsity=s1)
+    g2 = encoder_gemms(num_layers=4, d_model=256, d_ff=1024, seq=128,
+                       ffn_sparsity=s2)
+    assert speedup_vs_cpu(sa, g2) >= speedup_vs_cpu(sa, g1)
+
+
+def test_int8_reduces_energy_and_weight_load_time():
+    g = GEMMS
+    for size in (8, 16, 32):
+        e_f = energy_j(SystolicConfig(size, "fp32"), g)
+        e_i = energy_j(SystolicConfig(size, "int8"), g)
+        assert e_i < e_f
+    # weight programming cycles drop 4x with int8 bus packing
+    w = GEMMWork(1, 512, 512)      # M=1 isolates programming cost
+    c_f = gemm_cycles(SystolicConfig(32, "fp32"), w)
+    c_i = gemm_cycles(SystolicConfig(32, "int8"), w)
+    assert c_i < c_f
+
+
+def test_sublinear_speedup_at_fixed_qos():
+    pts = sweep(lambda s: encoder_gemms(num_layers=18, d_model=512,
+                                        d_ff=2048, seq=512,
+                                        ffn_sparsity=s),
+                exponential_qos_proxy())
+    sel = speedup_at_fixed_qos(pts, 5.0, "int8")
+    sizes = sorted(sel)
+    assert len(sizes) >= 3
+    # PE count grows 64x from 4->32; speedup must grow much less
+    assert sel[sizes[-1]] / sel[sizes[0]] < (sizes[-1] / sizes[0]) ** 2 / 3
+
+
+def test_best_under_qos_respects_target():
+    pts = sweep(lambda s: encoder_gemms(num_layers=4, d_model=256,
+                                        d_ff=1024, seq=128,
+                                        ffn_sparsity=s),
+                exponential_qos_proxy())
+    sel = best_under_qos(pts, 5.0)
+    assert sel and all(p.qos <= 5.0 for p in sel.values())
+
+
+def test_pareto_front_is_nondominated():
+    pts = sweep(lambda s: encoder_gemms(num_layers=4, d_model=256,
+                                        d_ff=1024, seq=128,
+                                        ffn_sparsity=s),
+                exponential_qos_proxy(), tiles=(4, 8))
+    front = pareto_front(pts)
+    assert 0 < len(front) < len(pts)
+    for p in front:
+        for o in pts:
+            dominates = (o.qos <= p.qos and o.time_s <= p.time_s
+                         and o.area_energy <= p.area_energy
+                         and (o.qos < p.qos or o.time_s < p.time_s
+                              or o.area_energy < p.area_energy))
+            assert not dominates

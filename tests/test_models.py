@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced configs) + decode consistency.
+
+Every assigned architecture instantiates a REDUCED config of the same
+family and runs one forward + one train step on CPU, asserting output
+shapes and the absence of NaNs. The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.models import lm
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reduced(arch):
+    return reduced(get_config(arch), layers=4, d_model=64, vocab=128)
+
+
+def _batch(cfg, B=2, S=32):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    b = {"tokens": toks}
+    if cfg.frontend != "none":
+        b["embeds"] = jax.random.normal(jax.random.PRNGKey(2),
+                                        (B, S, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = _reduced(arch)
+    params = lm.init_params(KEY, cfg)
+    b = _batch(cfg)
+    logits = lm.forward(params, cfg, b["tokens"],
+                        embeds=b.get("embeds"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = _reduced(arch)
+    params = lm.init_params(KEY, cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    step = make_train_step(cfg, opt_cfg)
+    b = _batch(cfg)
+    p2, o2, metrics = step(params, opt, b)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l))), jax.tree.map(
+            lambda a, b2: (a.astype(jnp.float32)
+                           - b2.astype(jnp.float32)), params, p2), 0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "gemma3-4b", "mamba2-780m",
+                                  "jamba-1.5-large-398b",
+                                  "granite-moe-1b-a400m"])
+def test_decode_matches_forward(arch):
+    cfg = _reduced(arch)
+    params = lm.init_params(KEY, cfg)
+    B, S, S0 = 2, 24, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full = lm.forward(params, cfg, toks)
+    logits, caches = lm.prefill(params, cfg, toks[:, :S0], cache_len=S)
+    errs = [float(jnp.max(jnp.abs(logits[:, 0] - full[:, S0 - 1])))]
+    for t in range(S0, S):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, caches = lm.decode_step(params, cfg, toks[:, t:t + 1],
+                                        pos, caches)
+        errs.append(float(jnp.max(jnp.abs(logits[:, 0] - full[:, t]))))
+    # fp32 tolerance: chunked-SSD prefill vs per-token recurrence differ
+    # by reassociated exp/cumsum ordering; MoE capacity drops are
+    # context-length-dependent (prefill routes 16 tokens, the full
+    # forward routes 24 — different overflow sets), so MoE archs get a
+    # wider bound.
+    bound = 2.5e-2 if cfg.moe is not None else 5e-3
+    assert max(errs) < bound, errs
+
+
+def test_segment_plan_covers_exact_layer_count():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        plan = lm.segment_plan(cfg)
+        total = sum(len(pattern) * repeat for pattern, repeat in plan)
+        assert total == cfg.num_layers, (arch, plan)
+
+
+def test_jamba_plan_structure():
+    cfg = get_config("jamba-1.5-large-398b")
+    plan = lm.segment_plan(cfg)
+    assert len(plan) == 1
+    pattern, repeat = plan[0]
+    assert repeat == 9 and len(pattern) == 8
+    from repro.configs import MIXER_ATTN
+    attn_slots = [i for i, s in enumerate(pattern) if s[0] == MIXER_ATTN]
+    assert attn_slots == [4]          # 1 attn per 8, offset 4
+    moe_slots = [i for i, s in enumerate(pattern) if s[2] == 1]
+    assert moe_slots == [1, 3, 5, 7]  # alternating MoE
+
+
+def test_gemma_plan_structure():
+    cfg = get_config("gemma3-4b")
+    plan = lm.segment_plan(cfg)
+    total = sum(len(p) * r for p, r in plan)
+    assert total == 34
+    from repro.configs import ATTN_GLOBAL, ATTN_LOCAL
+    pattern, repeat = plan[0]
+    assert repeat == 5 and len(pattern) == 6
+    assert [s[1] for s in pattern] == [ATTN_LOCAL] * 5 + [ATTN_GLOBAL]
+    # remainder: 4 local layers
+    assert plan[1][1] * len(plan[1][0]) == 4
+
+
+def test_microbatched_step_matches_full_batch():
+    cfg = _reduced("qwen3-32b")
+    params = lm.init_params(KEY, cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    b = _batch(cfg, B=4, S=32)
+    s1 = make_train_step(cfg, opt_cfg)
+    s2 = make_train_step(cfg, opt_cfg, n_microbatches=2)
+    p1, _, m1 = s1(params, adamw_init(params, opt_cfg), b)
+    p2, _, m2 = s2(params, adamw_init(params, opt_cfg), b)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - c.astype(jnp.float32))))
+               for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert diff < 1e-4

@@ -1,0 +1,131 @@
+"""SASP pruning invariants — unit + hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SASPConfig
+from repro.core import pruning as P
+
+RNG = np.random.default_rng(0)
+
+
+def _params(shapes):
+    return {f"ffn{i}": {"w1": {"w": jnp.asarray(
+        RNG.normal(size=s).astype(np.float32))}}
+        for i, s in enumerate(shapes)}
+
+
+def test_tile_l1_matches_manual():
+    w = jnp.asarray(RNG.normal(size=(8, 12)).astype(np.float32))
+    t = P.tile_l1(w, 4, 4)
+    assert t.shape == (2, 3)
+    manual = np.abs(np.asarray(w)).reshape(2, 4, 3, 4).sum((1, 3))
+    np.testing.assert_allclose(np.asarray(t), manual, rtol=1e-6)
+
+
+def test_apply_block_mask_equals_upsample():
+    w = jnp.asarray(RNG.normal(size=(16, 24)).astype(np.float32))
+    mask = jnp.asarray(RNG.random((4, 3)) > 0.5)
+    a = P.apply_block_mask(w, mask)
+    b = w * P.upsample_mask(mask, 4, 8).astype(w.dtype)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(sparsity=st.floats(0.0, 0.95),
+       kb=st.integers(2, 6), nb=st.integers(2, 6),
+       nmats=st.integers(1, 4))
+def test_global_budget_exact(sparsity, kb, nb, nmats):
+    """Exactly floor(sparsity × total_tiles) tiles pruned model-wide."""
+    bk = bn = 4
+    params = _params([(kb * bk, nb * bn)] * nmats)
+    sasp = SASPConfig(enabled=True, block_k=bk, block_n=bn,
+                      sparsity=sparsity)
+    masks = P.compute_sasp_masks(params, sasp,
+                                 is_prunable=lambda p: True)
+    total = sum(m.size for m in masks.values())
+    pruned = sum(int((~m).sum()) for m in masks.values())
+    assert total == kb * nb * nmats
+    assert pruned == int(np.floor(sparsity * total))
+
+
+def test_lowest_l1_tiles_pruned_first():
+    bk = bn = 4
+    w = np.ones((8, 8), np.float32)
+    w[:4, :4] = 0.001                  # tile (0,0) has lowest L1
+    params = {"ffn": {"w1": {"w": jnp.asarray(w)}}}
+    sasp = SASPConfig(enabled=True, block_k=bk, block_n=bn, sparsity=0.25)
+    masks = P.compute_sasp_masks(params, sasp, is_prunable=lambda p: True)
+    m = np.asarray(list(masks.values())[0])
+    assert not m[0, 0] and m.sum() == 3
+
+
+def test_heterogeneous_per_layer_rates():
+    """Global selection prunes low-magnitude layers harder (paper Fig 8)."""
+    bk = bn = 4
+    small = RNG.normal(size=(16, 16)).astype(np.float32) * 0.01
+    large = RNG.normal(size=(16, 16)).astype(np.float32) * 1.0
+    params = {"a": {"w1": {"w": jnp.asarray(small)}},
+              "b": {"w1": {"w": jnp.asarray(large)}}}
+    sasp = SASPConfig(enabled=True, block_k=bk, block_n=bn, sparsity=0.5)
+    masks = P.compute_sasp_masks(params, sasp, is_prunable=lambda p: True)
+    per = P.per_matrix_sparsity(masks)
+    a = [v for k, v in per.items() if k.startswith("a")][0]
+    b = [v for k, v in per.items() if k.startswith("b")][0]
+    assert a > 0.9 and b < 0.1
+
+
+def test_prune_params_zeroes_exactly_masked_tiles():
+    params = _params([(16, 16)])
+    sasp = SASPConfig(enabled=True, block_k=4, block_n=4, sparsity=0.4)
+    pruned, masks = P.prune_params(params, sasp,
+                                   is_prunable=lambda p: True)
+    (path, mask), = masks.items()
+    w0 = np.asarray(params["ffn0"]["w1"]["w"])
+    w1 = np.asarray(pruned["ffn0"]["w1"]["w"])
+    m = np.asarray(mask)
+    up = np.repeat(np.repeat(m, 4, 0), 4, 1)
+    np.testing.assert_allclose(w1, w0 * up)
+
+
+def test_scope_ffn_excludes_attention():
+    sasp = SASPConfig(enabled=True, scope="ffn")
+    pred = P.scope_predicate(sasp)
+
+    class K:
+        def __init__(self, key):
+            self.key = key
+
+    assert pred((K("segments"), K("0"), K("slot0"), K("ffn"), K("w1"),
+                 K("w")))
+    assert not pred((K("segments"), K("0"), K("slot0"), K("mixer"),
+                     K("wq"), K("w")))
+
+
+def test_effective_blocks_clamped_to_small_experts():
+    # 512-wide expert with 512-block => whole-matrix granularity
+    assert P.effective_blocks((512, 128), 512, 512) == (512, 128)
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 2000))
+def test_cubic_schedule_monotone_bounded(step):
+    s = P.cubic_sparsity_schedule(step, start_step=100, end_step=1000,
+                                  final_sparsity=0.4)
+    s2 = P.cubic_sparsity_schedule(step + 1, start_step=100,
+                                   end_step=1000, final_sparsity=0.4)
+    assert 0.0 <= s <= 0.4 and s2 >= s - 1e-12
+
+
+def test_moe_expert_stack_masks():
+    """Leading expert dims flow through scoring + masking."""
+    w = jnp.asarray(RNG.normal(size=(4, 16, 16)).astype(np.float32))
+    params = {"moe": {"w1": {"w": w}}}
+    sasp = SASPConfig(enabled=True, block_k=4, block_n=4, sparsity=0.5)
+    masks = P.compute_sasp_masks(params, sasp, is_prunable=lambda p: True)
+    (_, mask), = masks.items()
+    assert mask.shape == (4, 4, 4)
+    pruned, _ = P.prune_params(params, sasp, is_prunable=lambda p: True)
+    assert pruned["moe"]["w1"]["w"].shape == (4, 16, 16)

@@ -1,0 +1,127 @@
+"""Quantization + block-sparse container tests (unit + property)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+from repro.core.sparse import (
+    BlockSparseWeight,
+    bsr_from_mask,
+    bsr_matmul,
+    bsr_to_dense,
+    flat_block_list,
+    stack_bsr,
+)
+
+RNG = np.random.default_rng(1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kb=st.integers(1, 4), nb=st.integers(1, 4),
+       scale=st.floats(1e-3, 1e3))
+def test_int8_roundtrip_error_bound(kb, nb, scale):
+    w = jnp.asarray(RNG.normal(size=(kb * 8, nb * 8)).astype(np.float32)
+                    * scale)
+    qw = Q.quantize_int8(w, 8, 8)
+    wd = Q.dequantize_int8(qw)
+    # per-block max error <= scale/2 = amax/254
+    err = np.abs(np.asarray(w) - np.asarray(wd))
+    amax = np.abs(np.asarray(w)).reshape(kb, 8, nb, 8).max((1, 3))
+    bound = np.repeat(np.repeat(amax, 8, 0), 8, 1) / 127.0 * 0.5 + 1e-7
+    assert (err <= bound + 1e-6 * amax.max()).all()
+
+
+def test_int8_rel_error_typical():
+    w = jnp.asarray(RNG.normal(size=(64, 64)).astype(np.float32))
+    assert Q.quant_error(w, 16, 16) < 0.01
+
+
+def test_pack_unpack_exact():
+    q = jnp.asarray(RNG.integers(-127, 128, size=(4, 16)), jnp.int8)
+    p = Q.pack_int8_to_u32(q)
+    assert p.shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(Q.unpack_u32_to_int8(p)),
+                                  np.asarray(q))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 700))
+def test_1d_block_quant_roundtrip(n):
+    x = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
+    q, s = Q.quantize_1d_blocks(x)
+    y = Q.dequantize_1d_blocks(q, s, (n,))
+    amax = float(jnp.max(jnp.abs(x))) + 1e-9
+    assert float(jnp.max(jnp.abs(x - y))) <= amax / 127.0 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+
+
+def _mask(KB, NB, density=0.5, ensure_nonempty=False):
+    m = RNG.random((KB, NB)) < density
+    if ensure_nonempty and not m.any():
+        m[0, 0] = True
+    return m
+
+
+@pytest.mark.parametrize("K,N,bk,bn,density", [
+    (32, 32, 8, 8, 0.5), (64, 128, 16, 32, 0.2), (48, 48, 16, 16, 1.0),
+    (32, 32, 8, 8, 0.02),
+])
+def test_bsr_roundtrip_and_matmul(K, N, bk, bn, density):
+    w = RNG.normal(size=(K, N)).astype(np.float32)
+    mask = _mask(K // bk, N // bn, density, ensure_nonempty=True)
+    bsr = bsr_from_mask(w, mask, bk, bn)
+    dense = np.asarray(bsr_to_dense(bsr))
+    expect = w * np.repeat(np.repeat(mask, bk, 0), bn, 1)
+    np.testing.assert_allclose(dense, expect, rtol=1e-6)
+    x = jnp.asarray(RNG.normal(size=(8, K)).astype(np.float32))
+    y = bsr_matmul(x, bsr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ expect,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_quantized_matmul_close():
+    K, N, bk, bn = 64, 64, 16, 16
+    w = RNG.normal(size=(K, N)).astype(np.float32)
+    mask = _mask(4, 4, 0.6, True)
+    bsr = bsr_from_mask(w, mask, bk, bn, quantize=True)
+    x = jnp.asarray(RNG.normal(size=(8, K)).astype(np.float32))
+    y = np.asarray(bsr_matmul(x, bsr))
+    expect = np.asarray(x) @ (w * np.repeat(np.repeat(mask, bk, 0), bn, 1))
+    denom = np.abs(expect).max() + 1e-9
+    assert np.abs(y - expect).max() / denom < 2e-2
+
+
+def test_stack_bsr_scan_layout():
+    K, N, bk, bn = 32, 32, 8, 8
+    masks = [_mask(4, 4, 0.5, True) for _ in range(3)]
+    k_max = max(int(m.sum(0).max()) for m in masks)
+    bsrs = [bsr_from_mask(RNG.normal(size=(K, N)).astype(np.float32),
+                          m, bk, bn, k_max=k_max) for m in masks]
+    stacked = stack_bsr(bsrs)
+    assert stacked.vals.shape == (3, k_max, 4, 8, 8)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(stacked.vals[i]),
+                                   np.asarray(bsrs[i].vals))
+
+
+def test_flat_block_list_sorted_by_column():
+    mask = _mask(5, 4, 0.5, True)
+    kn = flat_block_list(mask)
+    ns = kn[:, 1]
+    assert (np.diff(ns) >= 0).all()
+    assert len(kn) == int(mask.sum())
+
+
+def test_bsr_pytree_static_aux():
+    import jax
+    w = RNG.normal(size=(16, 16)).astype(np.float32)
+    bsr = bsr_from_mask(w, _mask(2, 2, 1.0), 8, 8)
+    leaves = jax.tree_util.tree_leaves(bsr)
+    # only arrays are leaves; shape/block are static aux
+    assert all(hasattr(l, "shape") for l in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(bsr), leaves)
+    assert rebuilt.block == (8, 8) and rebuilt.shape == (16, 16)

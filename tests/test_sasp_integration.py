@@ -1,0 +1,128 @@
+"""SASP ↔ model integration: overlay merge, path equivalence, PTQ, and
+train-through-masks."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SASPConfig, get_config, reduced
+from repro.core.pruning import compute_sasp_masks, prune_params
+from repro.core.sasp import (
+    bsr_overlay_from_masks,
+    build_sasp_overlay,
+    merge_overlay,
+    quantize_params,
+    sasp_summary,
+)
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(0)
+SASP = SASPConfig(enabled=True, block_k=16, block_n=16, sparsity=0.4)
+
+
+def _setup(arch="qwen3-32b"):
+    cfg = dataclasses.replace(
+        reduced(get_config(arch), layers=2, d_model=64, vocab=128),
+        sasp=SASP)
+    params = lm.init_params(KEY, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 128)
+    return cfg, params, {"tokens": toks}
+
+
+def test_masked_view_changes_loss_but_not_params():
+    cfg, params, batch = _setup()
+    overlay, sp = build_sasp_overlay(params, SASP)
+    assert 0.35 < sp < 0.45
+    l_dense = float(lm.loss_fn(params, cfg, batch)[0])
+    l_masked = float(lm.loss_fn(merge_overlay(params, overlay), cfg,
+                                batch)[0])
+    assert l_dense != l_masked
+    # original params untouched
+    l_again = float(lm.loss_fn(params, cfg, batch)[0])
+    assert l_again == l_dense
+
+
+def test_bsr_path_matches_masked_path():
+    cfg, params, batch = _setup()
+    masks = compute_sasp_masks(params, SASP)
+    pruned, _ = prune_params(params, SASP)
+    bov = bsr_overlay_from_masks(params, masks, SASP)
+    cfg_bsr = dataclasses.replace(
+        cfg, sasp=dataclasses.replace(SASP, path="bsr"))
+    l_masked = float(lm.loss_fn(pruned, cfg, batch)[0])
+    l_bsr = float(lm.loss_fn(merge_overlay(params, bov), cfg_bsr,
+                             batch)[0])
+    assert abs(l_masked - l_bsr) < 1e-4
+
+
+def test_kernel_path_matches_masked_path():
+    cfg, params, batch = _setup()
+    masks = compute_sasp_masks(params, SASP)
+    pruned, _ = prune_params(params, SASP)
+    bov = bsr_overlay_from_masks(params, masks, SASP)
+    cfg_k = dataclasses.replace(
+        cfg, sasp=dataclasses.replace(SASP, path="kernel"))
+    l_masked = float(lm.loss_fn(pruned, cfg, batch)[0])
+    l_kernel = float(lm.loss_fn(merge_overlay(params, bov), cfg_k,
+                                batch)[0])
+    assert abs(l_masked - l_kernel) < 2e-3
+
+
+def test_ptq_int8_close_to_dense():
+    cfg, params, batch = _setup()
+    pq = quantize_params(params, SASP)
+    l_dense = float(lm.loss_fn(params, cfg, batch)[0])
+    l_q = float(lm.loss_fn(pq, cfg, batch)[0])
+    assert abs(l_dense - l_q) < 0.05
+
+
+def test_grad_flows_only_through_kept_tiles():
+    cfg, params, batch = _setup()
+    # scope pruning to w1 only: with untrained scaled-init weights,
+    # global-L1 across all matrices can prune the (small-init) w2
+    # entirely, zeroing the whole FFN path and every FFN grad — a
+    # legitimate selection outcome that would vacuously pass/fail this
+    # gradient-masking check.
+    from repro.core.pruning import compute_sasp_masks
+    from repro.core.sasp import masks_to_overlay
+
+    def w1_only(path):
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        return keys.endswith("ffn/w1/w")
+
+    masks = compute_sasp_masks(params, SASP, is_prunable=w1_only)
+    overlay = masks_to_overlay(masks)
+
+    def loss(p):
+        return lm.loss_fn(merge_overlay(p, overlay), cfg, batch)[0]
+
+    g = jax.grad(loss)(params)
+    # find one masked ffn weight and its mask
+    seg = g["segments"][0]
+    gm = np.asarray(seg["slot0"]["ffn"]["w1"]["w"])[0]   # layer 0
+    ov_seg = overlay["segments"]["0"]["slot0"]["ffn"]["sasp_masks"]["w1"]
+    mask = np.asarray(ov_seg)[0]
+    KB, NB = mask.shape
+    bk, bn = gm.shape[0] // KB, gm.shape[1] // NB
+    gb = np.abs(gm).reshape(KB, bk, NB, bn).sum((1, 3))
+    assert (gb[~mask] == 0).all()
+    assert (gb[mask] > 0).any()
+
+
+def test_sasp_summary_counts():
+    cfg, params, _ = _setup()
+    overlay, sp = build_sasp_overlay(params, SASP)
+    s = sasp_summary(overlay)
+    assert s["n_masked_matrices"] >= 2      # stacked w1/w3/w2
+    assert abs(s["sparsity"] - sp) < 1e-9
+
+
+def test_moe_sasp_masked_loss_changes():
+    cfg, params, batch = _setup("granite-moe-1b-a400m")
+    overlay, sp = build_sasp_overlay(params, SASP)
+    assert sp > 0.3
+    l0 = float(lm.loss_fn(params, cfg, batch)[0])
+    l1 = float(lm.loss_fn(merge_overlay(params, overlay), cfg, batch)[0])
+    assert l0 != l1

@@ -1,0 +1,81 @@
+"""Serving engine: continuous batching semantics + decode fidelity +
+int8-KV path."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(kv_quant=False):
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    params = lm.init_params(KEY, cfg)
+    return cfg, params
+
+
+def test_engine_matches_manual_decode():
+    cfg, params = _setup()
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = Engine(params, cfg, batch_slots=2, cache_len=64)
+    (done,) = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=6)])
+
+    # manual greedy loop
+    logits, caches = lm.prefill(params, cfg, jnp.asarray(prompt[None]),
+                                cache_len=64)
+    toks = [int(jnp.argmax(logits[0, 0]))]
+    pos = len(prompt)
+    for _ in range(5):
+        l, caches = lm.decode_step(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), caches)
+        toks.append(int(jnp.argmax(l[0, 0])))
+        pos += 1
+    assert done.out_tokens == toks
+
+
+def test_continuous_batching_more_requests_than_slots():
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(5 + i,))
+                    .astype(np.int32), max_new_tokens=4)
+            for i in range(5)]
+    eng = Engine(params, cfg, batch_slots=2, cache_len=32)
+    done = eng.run(list(reqs))
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_slot_isolation():
+    """A sequence's output must not depend on its slot neighbors."""
+    cfg, params = _setup()
+    p1 = np.arange(1, 7, dtype=np.int32)
+    p2 = np.arange(30, 40, dtype=np.int32)
+    solo = Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=p1, max_new_tokens=5)])[0].out_tokens
+    together = Engine(params, cfg, batch_slots=2, cache_len=64).run(
+        [Request(rid=0, prompt=p1, max_new_tokens=5),
+         Request(rid=1, prompt=p2, max_new_tokens=5)])
+    got = [r.out_tokens for r in together if r.rid == 0][0]
+    assert got == solo
+
+
+def test_int8_kv_engine_agrees_on_greedy_tokens():
+    cfg, params = _setup()
+    cfg8 = dataclasses.replace(cfg, kv_quant=True)
+    prompt = np.arange(2, 12, dtype=np.int32)
+    a = Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=prompt, max_new_tokens=8)])[0].out_tokens
+    b = Engine(params, cfg8, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=prompt, max_new_tokens=8)])[0].out_tokens
+    # int8 KV: logits differ at ~1e-3; greedy tokens should rarely flip
+    agree = sum(int(x == y) for x, y in zip(a, b)) / len(a)
+    assert agree >= 0.75

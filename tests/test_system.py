@@ -1,0 +1,135 @@
+"""End-to-end behaviour tests for the paper's system: the full
+train → prune (schedule) → deploy (BSR/int8) → QoS-check loop on a tiny
+model, plus the headline qualitative claims on live (not cached) runs."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SASPConfig, get_config, reduced
+from repro.core.pruning import compute_sasp_masks, \
+    cubic_sparsity_schedule, prune_params
+from repro.core.sasp import (
+    bsr_overlay_from_masks,
+    build_sasp_overlay,
+    merge_overlay,
+    quantize_params,
+)
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import lm
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+VOCAB, SEQ, BATCH, NOISE = 32, 32, 8, 2.0
+
+
+def _shift(b):
+    """lm.loss_fn is next-token CE (logits[t] -> token[t+1]); shifting
+    the acoustic features left by one aligns it with the per-position
+    transcription task (feature of token[t+1] arrives at position t)."""
+    e = np.roll(b["embeds"], -1, axis=1)
+    return {"tokens": jnp.asarray(b["tokens"]), "embeds": jnp.asarray(e)}
+
+
+def _cfg():
+    c = reduced(get_config("paper-espnet2-mt"), layers=2, d_model=64,
+                vocab=VOCAB)
+    return dataclasses.replace(
+        c, sasp=SASPConfig(enabled=True, block_k=8, block_n=8,
+                           sparsity=0.3))
+
+
+def _train(cfg, steps=120, sasp_from=None):
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=SEQ, global_batch=BATCH)
+    pipe = Pipeline(dcfg, kind="asr", d_model=cfg.d_model, noise=NOISE)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=2e-3)
+    opt = adamw_init(params, opt_cfg)
+    overlay = None
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    losses = []
+    for i in range(steps):
+        if sasp_from is not None and i >= sasp_from and overlay is None:
+            sasp = dataclasses.replace(cfg.sasp, sparsity=0.3)
+            overlay, _ = build_sasp_overlay(params, sasp)
+            step = jax.jit(make_train_step(cfg, opt_cfg,
+                                           overlay=overlay))
+        b = _shift(pipe.next())
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    return params, losses, overlay
+
+
+def _ter(params, cfg, overlay=None, n=3):
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=SEQ, global_batch=BATCH,
+                      seed=77)
+    pipe = Pipeline(dcfg, kind="asr", d_model=cfg.d_model, noise=NOISE)
+    pv = merge_overlay(params, overlay) if overlay is not None else params
+    errs = tot = 0
+    for _ in range(n):
+        b = _shift(pipe.next())
+        logits = lm.forward(pv, cfg, b["tokens"], embeds=b["embeds"])
+        pred = np.asarray(jnp.argmax(logits, -1))[:, :-1]
+        tgt = np.asarray(b["tokens"])[:, 1:]
+        errs += int((pred != tgt).sum())
+        tot += tgt.size
+    return errs / tot
+
+
+def test_full_sasp_lifecycle():
+    """Train dense -> prune mid-training (straight-through) -> deploy to
+    BSR + INT8 -> QoS within budget and deployment paths agree."""
+    cfg = _cfg()
+    params, losses, overlay = _train(cfg, steps=140, sasp_from=70)
+    assert losses[-1] < losses[0] * 0.5, "did not learn"
+    assert overlay is not None
+
+    ter_pruned = _ter(params, cfg, overlay)
+    assert ter_pruned < 0.30, f"pruned TER too high: {ter_pruned}"
+
+    sasp = dataclasses.replace(cfg.sasp, sparsity=0.3)
+    masks = compute_sasp_masks(params, sasp)
+    baked, _ = prune_params(params, sasp)
+    bsr = bsr_overlay_from_masks(params, masks, sasp)
+    cfg_bsr = dataclasses.replace(
+        cfg, sasp=dataclasses.replace(sasp, path="bsr"))
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=SEQ, global_batch=BATCH,
+                      seed=77)
+    b = Pipeline(dcfg, kind="asr", d_model=cfg.d_model,
+                 noise=NOISE).next()
+    b = _shift(b)
+    l_masked = lm.forward(baked, cfg, b["tokens"], embeds=b["embeds"])
+    l_bsr = lm.forward(merge_overlay(params, bsr), cfg_bsr,
+                       b["tokens"], embeds=b["embeds"])
+    np.testing.assert_allclose(np.asarray(l_masked), np.asarray(l_bsr),
+                               rtol=2e-3, atol=2e-3)
+
+    pq = quantize_params(baked, sasp)
+    l_q = lm.forward(pq, cfg, b["tokens"], embeds=b["embeds"])
+    denom = float(jnp.abs(l_masked).max())
+    assert float(jnp.abs(l_q - l_masked).max()) / denom < 0.05
+
+
+def test_large_tile_brittleness_live():
+    """Live (uncached) check of paper §4.4 on a freshly trained model:
+    at a fixed rate, bigger tiles hurt at least as much."""
+    cfg = _cfg()
+    params, losses, _ = _train(cfg, steps=120)
+    ters = {}
+    for tile in (4, 16):
+        sasp = SASPConfig(enabled=True, block_k=tile, block_n=tile,
+                          sparsity=0.5)
+        overlay, _ = build_sasp_overlay(params, sasp)
+        ters[tile] = _ter(params, cfg, overlay)
+    base = _ter(params, cfg)
+    assert ters[4] >= base - 1e-9
+    assert ters[16] >= ters[4] - 0.02, (base, ters)
+
+
+def test_cubic_schedule_reaches_target():
+    xs = [cubic_sparsity_schedule(i, start_step=10, end_step=50,
+                                  final_sparsity=0.4) for i in range(60)]
+    assert xs[9] == 0.0 and abs(xs[-1] - 0.4) < 1e-9
+    assert all(b >= a - 1e-12 for a, b in zip(xs, xs[1:]))
