@@ -1,8 +1,12 @@
 """Benchmark entry point: one function per paper table/figure plus the
-kernel microbenches and the roofline table.
+kernel microbenches, the serving-engine path comparison, and the
+roofline table.
 
 Prints a human-readable block per benchmark followed by machine-readable
-``name,us_per_call,derived`` CSV lines.
+``name,us_per_call,derived`` CSV lines, and writes two JSON artifacts —
+``BENCH_kernels.json`` (kernel + figure + roofline rows) and
+``BENCH_engine.json`` (serving-engine rows) — so the perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
@@ -10,7 +14,12 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import bench_kernels, bench_roofline, paper_figures
+    from benchmarks import (
+        bench_engine,
+        bench_kernels,
+        bench_roofline,
+        paper_figures,
+    )
 
     rows = []
     rows += paper_figures.fig6_area_power()
@@ -22,10 +31,14 @@ def main() -> None:
     rows += paper_figures.table3()
     rows += bench_kernels.bench_kernels()
     rows += bench_roofline.bench_roofline()
+    engine_rows = bench_engine.bench_engine()
 
     print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
+    for name, us, derived in rows + engine_rows:
         print(f"{name},{us:.2f},{derived}")
+
+    bench_engine.rows_to_json(rows, "BENCH_kernels.json")
+    bench_engine.rows_to_json(engine_rows, "BENCH_engine.json")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,363 @@
+"""Packed SASP deployment pipeline (DESIGN.md §9).
+
+``deploy_packed`` is the single load-time conversion entry point for
+serving: it walks a (pruned, optionally INT8) param tree and attaches
+compact kernel-ready containers so that NO per-call repacking happens on
+the serving path:
+
+* per-matrix :class:`~repro.core.sparse.PackedSASPWeight` — the sorted
+  (nnz, bk, bn) block list ``kernels.sasp_gemm`` consumes directly, with
+  bias and activation folded into the kernel's flush epilogue. Attached
+  under ``sasp_packed`` next to the weights (FFN w1/w2/w3 and, for
+  ``scope="all"``, attention wq/wk/wv/wo).
+* whole-FFN :class:`~repro.core.sparse.PackedFFN` — the fused gated-FFN
+  schedule (single kernel launch, no HBM (M, d_ff) intermediate),
+  attached under ``sasp_fused``.
+
+Layer stacks (the ``lax.scan``-over-layers layout, leading ``repeat``
+axis) are packed per layer and padded to one shared static nnz/nv so the
+containers slice under scan exactly like every other stacked param
+(padding = duplicated last visit with zero values; see
+``kernels.sasp_gemm.ops.pad_block_list``).
+
+Masks are recovered from the nonzero tile structure of the (already
+pruned) weights, so the conversion needs nothing beyond the deployed
+params themselves — pruning is static by deployment time (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse import PackedFFN, PackedSASPWeight
+from repro.kernels.sasp_gemm import ops as sasp_ops
+
+Params = Dict[str, Any]
+
+_ATTN_MATS = ("wq", "wk", "wv", "wo")
+_FFN_MATS = ("w1", "w2", "w3")
+
+
+def _fit_block(dim: int, want: int) -> int:
+    """Largest block ≤ ``want`` that divides ``dim`` (mask granularity is
+    free at deploy time — nonzero-tile detection is correct at any tile
+    size, so we pick the best-fitting one)."""
+    b = min(max(1, want), dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _dense_weight(entry: Params) -> Optional[np.ndarray]:
+    """Materialize one matrix dict {w}|{qw} to dense fp32 (numpy)."""
+    if not isinstance(entry, dict):
+        return None
+    if "w" in entry:
+        return np.asarray(entry["w"], np.float32)
+    if "qw" in entry:
+        qw = entry["qw"]
+        bk, bn = qw.block
+        q = np.asarray(qw.q, np.float32)
+        sc = np.asarray(qw.scale, np.float32)
+        K, N = q.shape[-2:]
+        KB, NB = K // bk, N // bn
+        qb = q.reshape(*q.shape[:-2], KB, bk, NB, bn)
+        qb = qb * sc[..., :, None, :, None]
+        return qb.reshape(q.shape)
+    return None
+
+
+def pack_weight(w: np.ndarray, *, block_k: int, block_n: int,
+                bias: Optional[np.ndarray] = None,
+                act: Optional[str] = None,
+                quantize: bool = False) -> PackedSASPWeight:
+    """(K, N) or layer-stacked (L, K, N) dense weight (pruned tiles
+    already zeroed) -> PackedSASPWeight. Stacked inputs are packed per
+    layer and padded to a shared nnz (dup-last-visit zero padding)."""
+    w = np.asarray(w, np.float32)
+    if w.ndim == 2:
+        w = w[None]
+        bias = None if bias is None else np.asarray(bias)[None]
+        squeeze = True
+    else:
+        squeeze = False
+    L, K, N = w.shape
+    bk = _fit_block(K, block_k)
+    bn = _fit_block(N, block_n)
+    KB, NB = K // bk, N // bn
+
+    packs = []
+    for i in range(L):
+        m = np.any(
+            w[i].reshape(KB, bk, NB, bn), axis=(1, 3))      # nonzero tiles
+        packs.append(sasp_ops.build_kernel_weight(
+            w[i], m, bk, bn, quantize=quantize))
+    nnz = max(np.asarray(p[0]).shape[0] for p in packs)
+    vs, ks, ss = [], [], []
+    for v, kn, sc in packs:
+        v, kn, sc = sasp_ops.pad_block_list(
+            np.asarray(v), np.asarray(kn),
+            None if sc is None else np.asarray(sc), nnz)
+        vs.append(v)
+        ks.append(kn)
+        ss.append(sc)
+    vals = jnp.asarray(np.stack(vs))
+    kn = jnp.asarray(np.stack(ks))
+    scale = None if ss[0] is None else jnp.asarray(
+        np.stack(ss).astype(np.float32))
+    b = None if bias is None else jnp.asarray(
+        np.asarray(bias, np.float32))
+    if squeeze:
+        vals, kn = vals[0], kn[0]
+        scale = None if scale is None else scale[0]
+        b = None if b is None else b[0]
+    return PackedSASPWeight(vals, kn, (K, N), (bk, bn), scale=scale,
+                            bias=b, act=act)
+
+
+def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
+             block_f: int, act: str,
+             b1: Optional[np.ndarray] = None,
+             b3: Optional[np.ndarray] = None,
+             b2: Optional[np.ndarray] = None,
+             quantize: bool = False) -> PackedFFN:
+    """Gated-FFN triple (each (d, F)/(F, d) or layer-stacked with a
+    leading L axis) -> PackedFFN for the fused kernel."""
+    w1 = np.asarray(w1, np.float32)
+    squeeze = w1.ndim == 2
+
+    def _lift(a):
+        return None if a is None else np.asarray(a, np.float32)[
+            None] if squeeze else np.asarray(a, np.float32)
+
+    if squeeze:
+        w1 = w1[None]
+    w3 = _lift(w3)
+    w2 = _lift(w2)
+    b1, b3, b2 = _lift(b1), _lift(b3), _lift(b2)
+    L, d, F = w1.shape
+    bf = _fit_block(F, block_f)
+
+    packs = [sasp_ops.build_fused_ffn(
+        w1[i], w3[i], w2[i], block_f=bf,
+        b1=None if b1 is None else b1[i],
+        b3=None if b3 is None else b3[i],
+        b2=None if b2 is None else b2[i],
+        quantize=quantize) for i in range(L)]
+    nv = max(np.asarray(p[0]).shape[0] for p in packs)
+
+    def _pad_visits(p):
+        """Append zero visits up to the shared nv (zero w2v => padded
+        visits contribute exactly nothing) — pack once, pad in place."""
+        w1v, w3v, w2v, b1v, b3v, b2v, sc = [np.asarray(a) if a is not
+                                            None and not isinstance(
+                                                a, tuple) else a
+                                            for a in p]
+        pad = nv - w1v.shape[0]
+        if pad:
+            def z(a):
+                return np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+            w1v, w3v, w2v = z(w1v), z(w3v), z(w2v)
+            b1v, b3v = z(b1v), z(b3v)
+            if sc is not None:
+                sc = tuple(z(np.asarray(s)) for s in sc)
+        return w1v, w3v, w2v, b1v, b3v, b2v, sc
+
+    repacked = [_pad_visits(p) for p in packs]
+
+    def _stack(idx):
+        return jnp.asarray(np.stack([np.asarray(p[idx]) for p in
+                                     repacked]))
+
+    w1v, w3v, w2v = _stack(0), _stack(1), _stack(2)
+    b1v, b3v, b2v = _stack(3), _stack(4), _stack(5)
+    if repacked[0][6] is None:
+        s1 = s3 = s2 = None
+    else:
+        s1 = jnp.asarray(np.stack([np.asarray(p[6][0]) for p in repacked]))
+        s3 = jnp.asarray(np.stack([np.asarray(p[6][1]) for p in repacked]))
+        s2 = jnp.asarray(np.stack([np.asarray(p[6][2]) for p in repacked]))
+    if squeeze:
+        w1v, w3v, w2v = w1v[0], w3v[0], w2v[0]
+        b1v, b3v, b2v = b1v[0], b3v[0], b2v[0]
+        s1 = None if s1 is None else s1[0]
+        s3 = None if s3 is None else s3[0]
+        s2 = None if s2 is None else s2[0]
+    return PackedFFN(w1v, w3v, w2v, b1v, b3v, b2v, d_model=d, d_ff=F,
+                     block_f=bf, act=act, s1=s1, s3=s3, s2=s2)
+
+
+# ---------------------------------------------------------------------------
+# Apply (serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def packed_matmul(x: jnp.ndarray, pw: PackedSASPWeight, *,
+                  block_m: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """(…, K) @ packed weight -> (…, N) through the tile-skip kernel,
+    bias + activation fused into the flush. Zero per-call repacking."""
+    scales = None if pw.scale is None else pw.scale
+    return sasp_ops.sasp_matmul_packed(
+        x, pw.vals, pw.kn, scales, n=pw.shape[1], block_m=block_m,
+        bias=pw.bias, act=pw.act, interpret=interpret)
+
+
+def packed_ffn_apply(x: jnp.ndarray, pf: PackedFFN, *,
+                     block_m: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Whole gated FFN in one fused kernel launch."""
+    scales = None if pf.s1 is None else (pf.s1, pf.s3, pf.s2)
+    return sasp_ops.fused_ffn_matmul(
+        x, pf.w1v, pf.w3v, pf.w2v, pf.b1, pf.b3, pf.b2, scales=scales,
+        act=pf.act, block_m=block_m, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# deploy_packed — the load-time conversion entry point
+# ---------------------------------------------------------------------------
+
+
+def _pack_matrix_group(node: Params, names, cfg: ModelConfig,
+                       quantize: bool, act_for: Dict[str, Optional[str]]
+                       ) -> Optional[Dict[str, PackedSASPWeight]]:
+    out = {}
+    for name in names:
+        entry = node.get(name)
+        w = None if entry is None else _dense_weight(entry)
+        if w is None:
+            continue
+        if w.ndim not in (2, 3):        # MoE expert grids etc.
+            return None
+        bias = None
+        if isinstance(entry, dict) and "b" in entry:
+            bias = np.asarray(entry["b"], np.float32)
+        out[name] = pack_weight(
+            w, block_k=cfg.sasp.block_k, block_n=cfg.sasp.block_n,
+            bias=bias, act=act_for.get(name), quantize=quantize)
+    return out or None
+
+
+def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
+                 fuse_ffn: bool, attn: bool) -> Params:
+    slot = dict(slot)
+
+    ffn = slot.get("ffn")
+    if (isinstance(ffn, dict) and "w1" in ffn and "w2" in ffn
+            and "router" not in ffn):       # MoE expert grids: masked path
+        ffn = {k: v for k, v in ffn.items()
+               if k not in ("sasp_bsr",)}      # packed replaces BSR
+        gated = "w3" in ffn
+        w1 = _dense_weight(ffn.get("w1"))
+        w2 = _dense_weight(ffn.get("w2"))
+        w3 = _dense_weight(ffn.get("w3")) if gated else None
+        if w1 is not None and w2 is not None and w1.ndim in (2, 3):
+            b2 = ffn["w2"].get("b") if isinstance(ffn["w2"], dict) \
+                else None
+            if gated and fuse_ffn and w3 is not None:
+                ffn["sasp_fused"] = pack_ffn(
+                    w1, w3, w2, block_f=cfg.sasp.block_n, act=cfg.act,
+                    b1=ffn["w1"].get("b"), b3=ffn["w3"].get("b"),
+                    b2=b2, quantize=quantize)
+            else:
+                # per-matrix packed: act folds into w1's flush epilogue,
+                # the gate product (if any) stays in jnp (models/ffn.py)
+                act_for = {"w1": cfg.act}
+                packed = _pack_matrix_group(
+                    ffn, _FFN_MATS, cfg, quantize, act_for)
+                if packed is not None:
+                    ffn["sasp_packed"] = packed
+            slot["ffn"] = ffn
+
+    mixer = slot.get("mixer")
+    if attn and isinstance(mixer, dict) and all(
+            m in mixer for m in _ATTN_MATS):
+        mixer = dict(mixer)
+        packed = _pack_matrix_group(mixer, _ATTN_MATS, cfg, quantize, {})
+        if packed is not None:
+            mixer["sasp_packed"] = packed
+            slot["mixer"] = mixer
+
+    return slot
+
+
+def deploy_packed(params: Params, cfg: ModelConfig, *,
+                  quantize: Optional[bool] = None,
+                  fuse_ffn: bool = True,
+                  attn: Optional[bool] = None) -> Tuple[Params,
+                                                        ModelConfig]:
+    """Convert a (pruned) param tree into packed serving form.
+
+    Returns ``(params', cfg')`` where every dense/MoE-free FFN (and, for
+    ``scope="all"`` or ``attn=True``, every attention projection) carries
+    a kernel-ready packed container, and ``cfg'`` has
+    ``sasp.path="kernel"`` so the model routes through them. Dense
+    weights stay in the tree as the source of truth (XLA dead-code
+    eliminates them from the serving graph); ``sasp_bsr`` overlays are
+    dropped — the compact block list replaces the padded k_max × NB
+    trace-time list.
+
+    quantize: pack values as int8 + per-block scales (default: follow
+    ``cfg.sasp.quantize``). fuse_ffn: use the whole-FFN fused container
+    for gated FFNs (False = per-matrix packed GEMMs).
+    """
+    quantize = cfg.sasp.quantize if quantize is None else quantize
+    attn = (cfg.sasp.scope == "all") if attn is None else attn
+
+    out = dict(params)
+    segs = []
+    for seg in params.get("segments", ()):
+        new_seg = {}
+        for slot_name, slot in seg.items():
+            new_seg[slot_name] = _deploy_slot(
+                slot, cfg, quantize=quantize, fuse_ffn=fuse_ffn,
+                attn=attn)
+        segs.append(new_seg)
+    out["segments"] = tuple(segs)
+    cfg = dataclasses.replace(
+        cfg, sasp=dataclasses.replace(cfg.sasp, enabled=True,
+                                      path="kernel"))
+    return out, cfg
+
+
+def packed_summary(params: Params) -> Dict[str, float]:
+    """Deployment report: container counts + compression vs dense."""
+    n_packed = n_fused = 0
+    packed_bytes = dense_bytes = 0
+
+    def visit(node):
+        nonlocal n_packed, n_fused, packed_bytes, dense_bytes
+        if isinstance(node, PackedSASPWeight):
+            n_packed += 1
+            packed_bytes += node.nbytes()
+            K, N = node.shape
+            lead = node.vals.shape[:-3]
+            dense_bytes += int(np.prod(lead, dtype=np.int64)) * K * N * 4
+        elif isinstance(node, PackedFFN):
+            n_fused += 1
+            for a in (node.w1v, node.w3v, node.w2v):
+                packed_bytes += a.size * a.dtype.itemsize
+            lead = node.w1v.shape[:-3]
+            dense_bytes += int(np.prod(lead, dtype=np.int64)) * \
+                3 * node.d_model * node.d_ff * 4
+        elif isinstance(node, dict):
+            for v in node.values():
+                visit(v)
+        elif isinstance(node, (tuple, list)):
+            for v in node:
+                visit(v)
+
+    visit(params)
+    return {
+        "n_packed_matrices": n_packed,
+        "n_fused_ffns": n_fused,
+        "packed_bytes": packed_bytes,
+        "dense_bytes": dense_bytes,
+        "compression": packed_bytes / max(dense_bytes, 1),
+    }

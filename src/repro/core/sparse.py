@@ -79,6 +79,136 @@ jax.tree_util.register_pytree_with_keys(
 )
 
 
+class PackedSASPWeight:
+    """Serving-time container: the COMPACT sorted block list the Pallas
+    tile-skip kernel consumes directly (DESIGN.md §9), built once at load
+    time by ``core.deploy``. Unlike :class:`BlockSparseWeight`, whose
+    trace-compatible flattening re-emits the padded k_max × NB visit list
+    on every call, this pytree stores the final (nnz, bk, bn) values +
+    (2, nnz) coordinates — zero per-call repacking.
+
+    vals: (…, nnz, bk, bn) surviving blocks (fp32/bf16, or int8 with
+    ``scale``); kn: (…, 2, nnz) int32 visit coordinates sorted by (n, k);
+    scale: optional (…, nnz) fp32 per-block dequant scales; bias:
+    optional (…, N) fused into the kernel's flush epilogue. A leading
+    layer axis (…) makes the container sliceable under ``lax.scan`` —
+    per-layer packs are padded to one shared static nnz by
+    ``kernels.sasp_gemm.ops.pad_block_list``.
+
+    Static aux: shape (K, N), block (bk, bn), act (epilogue activation,
+    folded into the last-visit flush; None = identity).
+    """
+
+    def __init__(self, vals, kn, shape: Tuple[int, int],
+                 block: Tuple[int, int], scale=None, bias=None,
+                 act: Optional[str] = None):
+        self.vals = vals
+        self.kn = kn
+        self.shape = tuple(shape)
+        self.block = tuple(block)
+        self.scale = scale
+        self.bias = bias
+        self.act = act
+
+    def tree_flatten(self):
+        return ((self.vals, self.kn, self.scale, self.bias),
+                (self.shape, self.block, self.act))
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("vals"), self.vals), (ga("kn"), self.kn),
+                (ga("scale"), self.scale), (ga("bias"), self.bias)), \
+            (self.shape, self.block, self.act)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vals, kn, scale, bias = children
+        shape, block, act = aux
+        return cls(vals, kn, shape, block, scale, bias, act)
+
+    @property
+    def nnz(self) -> int:
+        return self.vals.shape[-3]
+
+    def nbytes(self) -> int:
+        b = self.vals.size * self.vals.dtype.itemsize + self.kn.size * 4
+        if self.scale is not None:
+            b += self.scale.size * 4
+        if self.bias is not None:
+            b += self.bias.size * 4
+        return b
+
+    def __repr__(self):
+        return (f"PackedSASPWeight(shape={self.shape}, "
+                f"block={self.block}, nnz={self.nnz}, act={self.act})")
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedSASPWeight,
+    lambda p: p.tree_flatten_with_keys(),
+    lambda aux, ch: PackedSASPWeight.tree_unflatten(aux, ch),
+    flatten_func=lambda p: p.tree_flatten(),
+)
+
+
+class PackedFFN:
+    """Whole-FFN deployment container for the fused gated-FFN kernel:
+    surviving d_ff column-blocks of w1/w3 + matching w2 row-blocks +
+    per-visit bias slices, one visit schedule, zero HBM intermediate.
+
+    w1v/w3v: (…, nv, d, bf); w2v: (…, nv, bf, d); b1/b3: (…, nv, bf);
+    b2: (…, d); s1/s3/s2: optional (…, nv) int8 scales. A leading layer
+    axis makes it ``lax.scan``-sliceable (per-layer packs padded to one
+    shared nv with zero-w2v visits). Static aux: d_model, d_ff, block_f,
+    act.
+    """
+
+    def __init__(self, w1v, w3v, w2v, b1, b3, b2, d_model: int,
+                 d_ff: int, block_f: int, act: str, s1=None, s3=None,
+                 s2=None):
+        self.w1v, self.w3v, self.w2v = w1v, w3v, w2v
+        self.b1, self.b3, self.b2 = b1, b3, b2
+        self.s1, self.s3, self.s2 = s1, s3, s2
+        self.d_model = d_model
+        self.d_ff = d_ff
+        self.block_f = block_f
+        self.act = act
+
+    def tree_flatten(self):
+        return ((self.w1v, self.w3v, self.w2v, self.b1, self.b3, self.b2,
+                 self.s1, self.s3, self.s2),
+                (self.d_model, self.d_ff, self.block_f, self.act))
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        names = ("w1v", "w3v", "w2v", "b1", "b3", "b2", "s1", "s3", "s2")
+        return tuple((ga(n), getattr(self, n)) for n in names), \
+            (self.d_model, self.d_ff, self.block_f, self.act)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        w1v, w3v, w2v, b1, b3, b2, s1, s3, s2 = children
+        d_model, d_ff, block_f, act = aux
+        return cls(w1v, w3v, w2v, b1, b3, b2, d_model, d_ff, block_f,
+                   act, s1, s3, s2)
+
+    @property
+    def nv(self) -> int:
+        return self.w1v.shape[-3]
+
+    def __repr__(self):
+        return (f"PackedFFN(d={self.d_model}, d_ff={self.d_ff}, "
+                f"bf={self.block_f}, nv={self.nv}, act={self.act!r})")
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedFFN,
+    lambda p: p.tree_flatten_with_keys(),
+    lambda aux, ch: PackedFFN.tree_unflatten(aux, ch),
+    flatten_func=lambda p: p.tree_flatten(),
+)
+
+
 def bsr_from_mask(w: np.ndarray, mask: np.ndarray, bk: int, bn: int,
                   *, quantize: bool = False,
                   k_max: Optional[int] = None) -> BlockSparseWeight:

@@ -22,6 +22,17 @@ Variants:
     is applied as an epilogue after the MXU dot — the TPU analogue of the
     paper's hybrid FP32×INT8 multiplier (§3.3).
 
+Fused epilogues (DESIGN.md §9): every variant optionally applies a
+per-output-column bias and an elementwise activation inside the
+``last``-visit flush — the (M, N) pre-activation never round-trips to
+HBM, so serving-side bias+act costs zero extra memory traffic.
+
+``sasp_fused_ffn`` goes one level further: the whole gated FFN
+(w1/w3 up-projections, gate product, w2 down-projection) runs through a
+single visit schedule over surviving d_ff column-blocks; the (M, d_ff)
+intermediate lives only as one (bm, bf) VMEM tile per visit and is never
+materialized in HBM.
+
 Block shapes default to MXU-aligned 128 multiples; validated with
 ``interpret=True`` against ref.py on CPU.
 """
@@ -35,6 +46,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Activations legal as flush-time epilogues. All map 0 -> 0 (except the
+# identity), which the fused-FFN visit-skip rule relies on.
+_ACTS = {
+    None: lambda x: x,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
 
 def _flags(kn_ref, nnz: int):
     s = pl.program_id(1)
@@ -46,7 +66,8 @@ def _flags(kn_ref, nnz: int):
     return first, last
 
 
-def _sasp_kernel(kn_ref, x_ref, w_ref, o_ref, acc_ref, *, nnz: int):
+def _sasp_kernel(kn_ref, x_ref, w_ref, o_ref, acc_ref, *, nnz: int,
+                 act: Optional[str] = None):
     first, last = _flags(kn_ref, nnz)
 
     @pl.when(first)
@@ -59,11 +80,29 @@ def _sasp_kernel(kn_ref, x_ref, w_ref, o_ref, acc_ref, *, nnz: int):
 
     @pl.when(last)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _ACTS[act](acc_ref[...]).astype(o_ref.dtype)
+
+
+def _sasp_kernel_bias(kn_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                      nnz: int, act: Optional[str] = None):
+    first, last = _flags(kn_ref, nnz)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[0].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = _ACTS[act](acc_ref[...] + b_ref[...]).astype(
+            o_ref.dtype)
 
 
 def _sasp_kernel_int8(kn_ref, x_ref, w_ref, s_ref, o_ref, acc_ref, *,
-                      nnz: int):
+                      nnz: int, act: Optional[str] = None):
     first, last = _flags(kn_ref, nnz)
 
     @pl.when(first)
@@ -77,23 +116,50 @@ def _sasp_kernel_int8(kn_ref, x_ref, w_ref, s_ref, o_ref, acc_ref, *,
 
     @pl.when(last)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _ACTS[act](acc_ref[...]).astype(o_ref.dtype)
+
+
+def _sasp_kernel_int8_bias(kn_ref, x_ref, w_ref, s_ref, b_ref, o_ref,
+                           acc_ref, *, nnz: int,
+                           act: Optional[str] = None):
+    first, last = _flags(kn_ref, nnz)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    part = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc_ref[...] += part * s_ref[0]
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = _ACTS[act](acc_ref[...] + b_ref[...]).astype(
+            o_ref.dtype)
 
 
 def sasp_gemm(x: jnp.ndarray, w_vals: jnp.ndarray, block_kn: jnp.ndarray,
               *, n: int, block_m: int = 128,
               scales: Optional[jnp.ndarray] = None,
+              bias: Optional[jnp.ndarray] = None,
+              act: Optional[str] = None,
               out_dtype=None, interpret: bool = True) -> jnp.ndarray:
     """x: (M, K) @ block-sparse weight -> (M, n), skipping pruned tiles.
 
     w_vals: (nnz, bk, bn) surviving blocks (fp, or int8 with ``scales``);
     block_kn: (2, nnz) int32 [k_block; n_block] sorted by (n, k), every
     n-block present ≥ once (ops.kernel_block_list guarantees this);
-    scales: (nnz,) fp32 per-block dequant scales for the int8 variant.
+    scales: (nnz,) fp32 per-block dequant scales for the int8 variant;
+    bias: (n,) fp32 fused into the last-visit flush;
+    act: None|"silu"|"gelu"|"relu" flush-time activation epilogue
+    (applied after bias). Empty output columns flush ``act(bias)`` —
+    exactly the masked-dense semantics ``act(x @ (w ⊙ mask) + b)``.
     """
     M, K = x.shape
     nnz, bk, bn = w_vals.shape
     assert n % bn == 0 and K % bk == 0, (K, n, bk, bn)
+    assert act in _ACTS, act
     bm = min(block_m, M)
     while M % bm:
         bm -= 1
@@ -103,34 +169,149 @@ def sasp_gemm(x: jnp.ndarray, w_vals: jnp.ndarray, block_kn: jnp.ndarray,
     x_spec = pl.BlockSpec((bm, bk), lambda i, s, kn: (i, kn[0, s]))
     w_spec = pl.BlockSpec((1, bk, bn), lambda i, s, kn: (s, 0, 0))
     o_spec = pl.BlockSpec((bm, bn), lambda i, s, kn: (i, kn[1, s]))
-
-    if scales is None:
-        return pl.pallas_call(
-            functools.partial(_sasp_kernel, nnz=nnz),
-            grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=1,
-                grid=grid,
-                in_specs=[x_spec, w_spec],
-                out_specs=o_spec,
-                scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            ),
-            out_shape=jax.ShapeDtypeStruct((M, n), out_dtype),
-            interpret=interpret,
-        )(block_kn, x, w_vals)
-
     s_spec = pl.BlockSpec((1,), lambda i, s, kn: (s,))
+    b_spec = pl.BlockSpec((1, bn), lambda i, s, kn: (0, kn[1, s]))
+
+    in_specs = [x_spec, w_spec]
+    operands = [x, w_vals]
+    if scales is None:
+        body = _sasp_kernel if bias is None else _sasp_kernel_bias
+    else:
+        body = _sasp_kernel_int8 if bias is None else _sasp_kernel_int8_bias
+        in_specs.append(s_spec)
+        operands.append(scales)
+    if bias is not None:
+        in_specs.append(b_spec)
+        operands.append(bias.astype(jnp.float32).reshape(1, n))
+
     return pl.pallas_call(
-        functools.partial(_sasp_kernel_int8, nnz=nnz),
+        functools.partial(body, nnz=nnz, act=act),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[x_spec, w_spec, s_spec],
+            in_specs=in_specs,
             out_specs=o_spec,
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, n), out_dtype),
         interpret=interpret,
-    )(block_kn, x, w_vals, scales)
+    )(block_kn, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Fused gated FFN: act(x@W1 + b1) * (x@W3 + b3) @ W2 + b2 in ONE visit
+# schedule over surviving d_ff column-blocks. The (M, d_ff) intermediate
+# exists only as a (bm, bf) VMEM tile per visit — never in HBM — and the
+# three kernel launches of the unfused path collapse to one.
+# ---------------------------------------------------------------------------
+
+
+def _fused_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, b1_ref, b3_ref,
+                      b2_ref, o_ref, acc_ref, *, nv: int, act: str):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    u = jnp.dot(x, w1_ref[0].astype(x.dtype),
+                preferred_element_type=jnp.float32) + b1_ref[...]
+    g = jnp.dot(x, w3_ref[0].astype(x.dtype),
+                preferred_element_type=jnp.float32) + b3_ref[...]
+    h = (_ACTS[act](u) * g).astype(x.dtype)
+    acc_ref[...] += jnp.dot(h, w2_ref[0].astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(s == nv - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] + b2_ref[...]).astype(o_ref.dtype)
+
+
+def _fused_ffn_kernel_int8(x_ref, w1_ref, w3_ref, w2_ref, s1_ref, s3_ref,
+                           s2_ref, b1_ref, b3_ref, b2_ref, o_ref, acc_ref,
+                           *, nv: int, act: str):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    u = jnp.dot(x, w1_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32) * s1_ref[0] + b1_ref[...]
+    g = jnp.dot(x, w3_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32) * s3_ref[0] + b3_ref[...]
+    h = _ACTS[act](u) * g
+    acc_ref[...] += jnp.dot(h, w2_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32) * s2_ref[0]
+
+    @pl.when(s == nv - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] + b2_ref[...]).astype(o_ref.dtype)
+
+
+def sasp_fused_ffn(x: jnp.ndarray, w1v: jnp.ndarray, w3v: jnp.ndarray,
+                   w2v: jnp.ndarray, b1: jnp.ndarray, b3: jnp.ndarray,
+                   b2: jnp.ndarray, *, act: str = "silu",
+                   block_m: int = 128, scales=None, out_dtype=None,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Gated FFN through one Pallas visit schedule.
+
+    x: (M, d); w1v/w3v: (nv, d, bf) surviving d_ff column-blocks of the
+    up-projections (masked tiles zeroed in place); w2v: (nv, bf, d)
+    matching down-projection row-blocks; b1/b3: (nv, bf) per-visit bias
+    slices; b2: (d,). ``scales``: optional (s1, s3, s2) each (nv,) fp32
+    for int8 w1v/w3v/w2v. Pruned d_ff column-blocks (zero up-column with
+    zero bias, or zero w2 row) are simply absent from the visit list —
+    the skip criterion in ops.build_fused_ffn relies on act(0) == 0.
+    Returns (M, d) = act(x@W1+b1) * (x@W3+b3) @ W2 + b2.
+    """
+    M, d = x.shape
+    nv, d2, bf = w1v.shape
+    assert d2 == d and w2v.shape == (nv, bf, d), (w1v.shape, w2v.shape)
+    assert act in _ACTS and act is not None
+    bm = min(block_m, M)
+    while M % bm:
+        bm -= 1
+    grid = (M // bm, nv)
+    out_dtype = out_dtype or x.dtype
+
+    x_spec = pl.BlockSpec((bm, d), lambda i, s: (i, 0))
+    up_spec = pl.BlockSpec((1, d, bf), lambda i, s: (s, 0, 0))
+    dn_spec = pl.BlockSpec((1, bf, d), lambda i, s: (s, 0, 0))
+    bu_spec = pl.BlockSpec((1, bf), lambda i, s: (s, 0))
+    b2_spec = pl.BlockSpec((1, d), lambda i, s: (0, 0))
+    o_spec = pl.BlockSpec((bm, d), lambda i, s: (i, 0))
+
+    b1 = b1.astype(jnp.float32).reshape(nv, bf)
+    b3 = b3.astype(jnp.float32).reshape(nv, bf)
+    b2 = b2.astype(jnp.float32).reshape(1, d)
+
+    if scales is None:
+        return pl.pallas_call(
+            functools.partial(_fused_ffn_kernel, nv=nv, act=act),
+            grid=grid,
+            in_specs=[x_spec, up_spec, up_spec, dn_spec, bu_spec, bu_spec,
+                      b2_spec],
+            out_specs=o_spec,
+            scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+            out_shape=jax.ShapeDtypeStruct((M, d), out_dtype),
+            interpret=interpret,
+        )(x, w1v, w3v, w2v, b1, b3, b2)
+
+    s1, s3, s2 = scales
+    sc_spec = pl.BlockSpec((1,), lambda i, s: (s,))
+    return pl.pallas_call(
+        functools.partial(_fused_ffn_kernel_int8, nv=nv, act=act),
+        grid=grid,
+        in_specs=[x_spec, up_spec, up_spec, dn_spec, sc_spec, sc_spec,
+                  sc_spec, bu_spec, bu_spec, b2_spec],
+        out_specs=o_spec,
+        scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((M, d), out_dtype),
+        interpret=interpret,
+    )(x, w1v, w3v, w2v, s1, s3, s2, b1, b3, b2)
 
 
 # ---------------------------------------------------------------------------

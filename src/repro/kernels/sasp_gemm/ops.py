@@ -9,7 +9,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse import BlockSparseWeight
-from repro.kernels.sasp_gemm.kernel import sasp_gemm, sasp_gemm_masked
+from repro.kernels.sasp_gemm.kernel import (
+    sasp_fused_ffn,
+    sasp_gemm,
+    sasp_gemm_masked,
+)
 
 
 def kernel_block_list(mask: np.ndarray) -> np.ndarray:
@@ -52,6 +56,144 @@ def build_kernel_weight(w: np.ndarray, mask: np.ndarray, bk: int, bn: int,
     return jnp.asarray(q), jnp.asarray(kn), jnp.asarray(scales)
 
 
+def pad_block_list(vals: np.ndarray, kn: np.ndarray,
+                   scales: Optional[np.ndarray], nnz_to: int):
+    """Pad a compact (vals, kn, scales) visit list to ``nnz_to`` entries by
+    repeating the LAST visit's (k, n) coordinates with zero-valued blocks.
+
+    Duplicating the last coordinate keeps the n-major visit order intact
+    (the appended visits share the final n-block, so the accumulator is
+    neither re-initialized nor flushed early — it just accumulates zeros
+    and flushes the same value once more). This is what lets per-layer
+    packs of different true nnz share one static nnz under
+    ``lax.scan`` over stacked layers.
+    """
+    nnz = vals.shape[0]
+    assert nnz_to >= nnz, (nnz_to, nnz)
+    if nnz_to == nnz:
+        return vals, kn, scales
+    pad = nnz_to - nnz
+    vals = np.concatenate(
+        [vals, np.zeros((pad,) + vals.shape[1:], vals.dtype)])
+    kn = np.concatenate([kn, np.repeat(kn[:, -1:], pad, axis=1)], axis=1)
+    if scales is not None:
+        scales = np.concatenate(
+            [scales, np.zeros((pad,), scales.dtype)])
+    return vals, kn, scales
+
+
+def build_fused_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
+                    block_f: int, b1=None, b3=None, b2=None,
+                    quantize: bool = False, nv_pad: Optional[int] = None):
+    """Offline packing for the fused gated-FFN kernel.
+
+    w1/w3: (d, F) up-projections with pruned tiles already zeroed; w2:
+    (F, d) down-projection likewise. A d_ff column-block j (width
+    ``block_f``) is VISITED iff it can contribute to the output:
+
+        any(w2[j·bf:(j+1)·bf, :] != 0)            # down row survives
+        and (any(w1[:, j·bf:…] != 0) or any(b1_j))  # act(0 + 0) == 0
+        and (any(w3[:, j·bf:…] != 0) or any(b3_j))  # 0 * anything == 0
+
+    so fully pruned d_ff columns cost zero FLOPs AND zero weight bytes.
+    Returns (w1v, w3v, w2v, b1v, b3v, b2, scales) — scales is None for fp
+    or (s1, s3, s2) per-visit int8 scales. ``nv_pad`` pads the visit list
+    with zero-w2v entries (for layer-stacked sharing of one static nv).
+    """
+    w1 = np.asarray(w1, np.float32)
+    w3 = np.asarray(w3, np.float32)
+    w2 = np.asarray(w2, np.float32)
+    d, F = w1.shape
+    assert w3.shape == (d, F) and w2.shape == (F, d), (
+        w1.shape, w3.shape, w2.shape)
+    bf = block_f
+    assert F % bf == 0, (F, bf)
+    FB = F // bf
+    b1 = np.zeros((F,), np.float32) if b1 is None else np.asarray(
+        b1, np.float32)
+    b3 = np.zeros((F,), np.float32) if b3 is None else np.asarray(
+        b3, np.float32)
+    b2 = np.zeros((d,), np.float32) if b2 is None else np.asarray(
+        b2, np.float32)
+
+    keep = []
+    for j in range(FB):
+        sl = slice(j * bf, (j + 1) * bf)
+        if not np.any(w2[sl]):
+            continue
+        if not (np.any(w1[:, sl]) or np.any(b1[sl])):
+            continue
+        if not (np.any(w3[:, sl]) or np.any(b3[sl])):
+            continue
+        keep.append(j)
+
+    if keep:
+        w1v = np.stack([w1[:, j * bf:(j + 1) * bf] for j in keep])
+        w3v = np.stack([w3[:, j * bf:(j + 1) * bf] for j in keep])
+        w2v = np.stack([w2[j * bf:(j + 1) * bf] for j in keep])
+        b1v = np.stack([b1[j * bf:(j + 1) * bf] for j in keep])
+        b3v = np.stack([b3[j * bf:(j + 1) * bf] for j in keep])
+    else:
+        # all of d_ff pruned: one zero visit so the output block still
+        # initializes/flushes (result is exactly b2)
+        w1v = np.zeros((1, d, bf), np.float32)
+        w3v = np.zeros((1, d, bf), np.float32)
+        w2v = np.zeros((1, bf, d), np.float32)
+        b1v = np.zeros((1, bf), np.float32)
+        b3v = np.zeros((1, bf), np.float32)
+
+    if nv_pad is not None:
+        nv = w1v.shape[0]
+        assert nv_pad >= nv, (nv_pad, nv)
+        if nv_pad > nv:
+            pad = nv_pad - nv
+            # zero w2v => padded visits contribute exactly nothing
+            w1v = np.concatenate(
+                [w1v, np.zeros((pad, d, bf), np.float32)])
+            w3v = np.concatenate(
+                [w3v, np.zeros((pad, d, bf), np.float32)])
+            w2v = np.concatenate(
+                [w2v, np.zeros((pad, bf, d), np.float32)])
+            b1v = np.concatenate([b1v, np.zeros((pad, bf), np.float32)])
+            b3v = np.concatenate([b3v, np.zeros((pad, bf), np.float32)])
+
+    scales = None
+    if quantize:
+        def q(v):
+            amax = np.abs(v).max(axis=tuple(range(1, v.ndim)))
+            s = (np.maximum(amax, 1e-12) / 127.0).astype(np.float32)
+            qv = np.clip(np.round(v / s.reshape((-1,) + (1,) * (v.ndim - 1))),
+                         -127, 127).astype(np.int8)
+            return qv, s
+        w1v, s1 = q(w1v)
+        w3v, s3 = q(w3v)
+        w2v, s2 = q(w2v)
+        scales = (jnp.asarray(s1), jnp.asarray(s3), jnp.asarray(s2))
+
+    return (jnp.asarray(w1v), jnp.asarray(w3v), jnp.asarray(w2v),
+            jnp.asarray(b1v), jnp.asarray(b3v), jnp.asarray(b2), scales)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("act", "block_m", "interpret"))
+def _fused_ffn_jit(x, w1v, w3v, w2v, b1, b3, b2, scales, *, act, block_m,
+                   interpret):
+    return sasp_fused_ffn(x, w1v, w3v, w2v, b1, b3, b2, act=act,
+                          block_m=block_m, scales=scales,
+                          interpret=interpret)
+
+
+def fused_ffn_matmul(x: jnp.ndarray, w1v, w3v, w2v, b1, b3, b2, *,
+                     scales=None, act: str = "silu", block_m: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """(…, d) -> (…, d) gated FFN through the single fused kernel."""
+    *lead, d = x.shape
+    y = _fused_ffn_jit(x.reshape(-1, d), w1v, w3v, w2v, b1, b3, b2,
+                       scales, act=act, block_m=block_m,
+                       interpret=interpret)
+    return y.reshape(*lead, d).astype(x.dtype)
+
+
 def _kn_from_bsr(w: BlockSparseWeight) -> Tuple:
     """Flatten a BSR container to the kernel's flat-block-list form."""
     K, N = w.shape
@@ -85,11 +227,13 @@ def _kn_from_bsr(w: BlockSparseWeight) -> Tuple:
         None if s is None else jnp.asarray(s)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_m", "interpret"))
-def _sasp_matmul_jit(x, w_vals, block_kn, scales, *, n, block_m,
-                     interpret):
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block_m", "act", "interpret"))
+def _sasp_matmul_jit(x, w_vals, block_kn, scales, bias=None, *, n,
+                     block_m, act=None, interpret):
     return sasp_gemm(x, w_vals, block_kn, n=n, block_m=block_m,
-                     scales=scales, interpret=interpret)
+                     scales=scales, bias=bias, act=act,
+                     interpret=interpret)
 
 
 def _kn_from_bsr_traced(w: BlockSparseWeight):
@@ -127,12 +271,15 @@ def sasp_matmul(x: jnp.ndarray, w: BlockSparseWeight, *,
 
 
 def sasp_matmul_packed(x: jnp.ndarray, w_vals, block_kn, scales=None, *,
-                       n: int, block_m: int = 128,
+                       n: int, block_m: int = 128, bias=None,
+                       act: Optional[str] = None,
                        interpret: bool = True) -> jnp.ndarray:
-    """Pre-packed fast path (serving): inputs from build_kernel_weight."""
+    """Pre-packed fast path (serving): inputs from build_kernel_weight.
+    ``bias``/``act`` run as flush-time epilogues inside the kernel."""
     *lead, K = x.shape
-    y = _sasp_matmul_jit(x.reshape(-1, K), w_vals, block_kn, scales,
-                         n=n, block_m=block_m, interpret=interpret)
+    y = _sasp_matmul_jit(x.reshape(-1, K), w_vals, block_kn, scales, bias,
+                         n=n, block_m=block_m, act=act,
+                         interpret=interpret)
     return y.reshape(*lead, n).astype(x.dtype)
 
 

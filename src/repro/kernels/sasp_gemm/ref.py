@@ -1,8 +1,16 @@
-"""Pure-jnp oracle for the SASP tile-skip GEMM."""
+"""Pure-jnp oracles for the SASP tile-skip GEMM and its fused variants."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+_ACTS_REF = {
+    None: lambda x: x,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
 
 
 def masked_dense_ref(x: jnp.ndarray, w: jnp.ndarray,
@@ -31,3 +39,29 @@ def block_list_ref(x: jnp.ndarray, w_vals, block_kn, n: int,
     for s in range(nnz):
         wd[kn[0, s], :, kn[1, s], :] += vals[s]
     return (np.asarray(x, np.float32) @ wd.reshape(K, n))
+
+
+def epilogue_ref(y: jnp.ndarray, bias=None, act=None) -> jnp.ndarray:
+    """Ground truth for the flush-time epilogue: act(y + bias)."""
+    if bias is not None:
+        y = y + jnp.asarray(bias, y.dtype)
+    return _ACTS_REF[act](y)
+
+
+def fused_ffn_ref(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
+                  w2: jnp.ndarray, b1=None, b3=None, b2=None,
+                  act: str = "silu") -> jnp.ndarray:
+    """Semantic ground truth for the fused gated-FFN kernel: plain-jnp
+    act(x@W1 + b1) * (x@W3 + b3) @ W2 + b2 over ALREADY-MASKED dense
+    weights (pruned tiles zeroed in place)."""
+    x = jnp.asarray(x, jnp.float32)
+    u = x @ jnp.asarray(w1, jnp.float32)
+    g = x @ jnp.asarray(w3, jnp.float32)
+    if b1 is not None:
+        u = u + jnp.asarray(b1, jnp.float32)
+    if b3 is not None:
+        g = g + jnp.asarray(b3, jnp.float32)
+    y = (_ACTS_REF[act](u) * g) @ jnp.asarray(w2, jnp.float32)
+    if b2 is not None:
+        y = y + jnp.asarray(b2, jnp.float32)
+    return y

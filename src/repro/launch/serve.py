@@ -1,9 +1,19 @@
 """Serving launcher CLI: load (or init) a model, optionally deploy SASP
-(prune + INT8 + int8-KV), and serve synthetic requests through the
-batched engine.
+(prune + INT8 + int8-KV), pick an execution path, and serve synthetic
+requests through the batched engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduce \
-      --sasp 0.25 --int8-kv --requests 8
+      --sasp 0.5 --path packed --int8-kv --requests 8
+
+Paths (DESIGN.md §4 + §9):
+  dense   — unpruned baseline.
+  masked  — pruned tiles zeroed in place, matmuls stay dense.
+  bsr     — BlockSparseWeight containers, gathered jnp matmul.
+  kernel  — same containers through the Pallas tile-skip kernel
+            (re-flattens the padded k_max × NB list per call).
+  packed  — `core.deploy.deploy_packed` compact containers: sorted block
+            lists + fused bias/act epilogues + fused gated-FFN kernel.
+            The serving fast path.
 """
 from __future__ import annotations
 
@@ -16,10 +26,53 @@ import jax
 
 from repro.configs import SASPConfig, get_config, reduced
 from repro.core.pruning import prune_params
-from repro.core.sasp import quantize_params
+from repro.core.sasp import bsr_overlay_from_masks, merge_overlay, \
+    quantize_params
 from repro.models import lm
 from repro.serve.engine import Engine, Request
 from repro.train.checkpoint import CheckpointManager
+
+PATHS = ("dense", "masked", "bsr", "kernel", "packed")
+
+
+def build_serving_params(params, cfg, *, path: str, sparsity: float,
+                         int8_weights: bool = False,
+                         block_k: int = 32, block_n: int = 32,
+                         scope: str = "ffn", verbose: bool = True):
+    """Deploy `params` for serving along one execution path. Returns
+    (params, cfg) ready for the Engine."""
+    assert path in PATHS, path
+    if path == "dense" or sparsity <= 0:
+        return params, cfg
+    sasp = SASPConfig(enabled=True, block_k=block_k, block_n=block_n,
+                      sparsity=sparsity, scope=scope,
+                      quantize=int8_weights)
+    cfg = dataclasses.replace(cfg, sasp=sasp)
+    params, masks = prune_params(params, sasp)
+    if verbose:
+        print(f"SASP deployed: {sparsity:.0%} tile sparsity, "
+              f"{len(masks)} matrices, path={path}")
+    if path == "masked":
+        if int8_weights:
+            params = quantize_params(params, sasp)
+            if verbose:
+                print("weights quantized to INT8 (per-block scales)")
+        return params, cfg
+    if path in ("bsr", "kernel"):
+        overlay = bsr_overlay_from_masks(params, masks, sasp)
+        params = merge_overlay(params, overlay)
+        cfg = dataclasses.replace(
+            cfg, sasp=dataclasses.replace(sasp, path=path))
+        return params, cfg
+    # packed: compact kernel containers, built once at load time
+    from repro.core.deploy import deploy_packed, packed_summary
+    params, cfg = deploy_packed(params, cfg)
+    if verbose:
+        s = packed_summary(params)
+        print(f"packed: {s['n_packed_matrices']} matrices + "
+              f"{s['n_fused_ffns']} fused FFNs, "
+              f"{s['compression']:.2f}x dense bytes")
+    return params, cfg
 
 
 def main():
@@ -29,6 +82,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a CheckpointManager dir")
     ap.add_argument("--sasp", type=float, default=0.0)
+    ap.add_argument("--path", choices=PATHS, default="masked",
+                    help="SASP execution path (ignored when --sasp 0)")
+    ap.add_argument("--scope", choices=("ffn", "all"), default="ffn")
     ap.add_argument("--int8-weights", action="store_true")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
@@ -36,6 +92,7 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,16 +109,9 @@ def main():
         params = state["params"]
         print(f"restored step {mgr.latest_step()} from {args.ckpt_dir}")
 
-    if args.sasp:
-        sasp = SASPConfig(enabled=True, block_k=32, block_n=32,
-                          sparsity=args.sasp,
-                          quantize=args.int8_weights)
-        params, masks = prune_params(params, sasp)
-        print(f"SASP deployed: {args.sasp:.0%} tile sparsity, "
-              f"{len(masks)} matrices")
-        if args.int8_weights:
-            params = quantize_params(params, sasp)
-            print("weights quantized to INT8 (per-block scales)")
+    params, cfg = build_serving_params(
+        params, cfg, path=args.path, sparsity=args.sasp,
+        int8_weights=args.int8_weights, scope=args.scope)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -69,7 +119,8 @@ def main():
                                         size=(rng.integers(8, 48),))
                     .astype(np.int32),
                     max_new_tokens=args.max_new,
-                    temperature=args.temperature)
+                    temperature=args.temperature,
+                    eos_id=args.eos_id)
             for i in range(args.requests)]
 
     eng = Engine(params, cfg, batch_slots=args.slots,
@@ -79,7 +130,8 @@ def main():
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({dt/max(toks,1)*1e3:.0f} ms/token)")
+          f"({toks/max(dt,1e-9):.1f} tok/s, "
+          f"{dt/max(toks,1)*1e3:.0f} ms/token)")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> "
               f"{r.out_tokens[:10]}…")

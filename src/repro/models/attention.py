@@ -111,16 +111,30 @@ def attn_init(key, cfg: ModelConfig) -> Dict:
     return p
 
 
+def _proj(p: Dict, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """One attention projection, routed through the packed tile-skip
+    kernel when a deployment container is attached (core.deploy,
+    DESIGN.md §9) — QKV bias is fused into the kernel's flush epilogue
+    there, so dense_apply's bias add must not run twice."""
+    packed = p.get("sasp_packed")
+    if packed is not None and name in packed:
+        from repro.core.deploy import packed_matmul
+        return packed_matmul(x, packed[name])
+    return dense_apply(p[name], x)
+
+
 def _project_qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions):
-    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,KH,D), RoPE'd + qk-normed."""
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,KH,D), RoPE'd + qk-normed.
+    ``positions`` broadcasts to (B, S) — per-batch rows support the
+    left-padded batched prefill (serve/engine.py)."""
     B, S, _ = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
     dt = x.dtype
     from repro.distribution import context as dctx
     dp = dctx.dp_axes()
-    q = dense_apply(p["wq"], x).reshape(B, S, h, hd)
-    k = dense_apply(p["wk"], x).reshape(B, S, kvh, hd)
-    v = dense_apply(p["wv"], x).reshape(B, S, kvh, hd)
+    q = _proj(p, "wq", x).reshape(B, S, h, hd)
+    k = _proj(p, "wk", x).reshape(B, S, kvh, hd)
+    v = _proj(p, "wv", x).reshape(B, S, kvh, hd)
     if dp and S > 1:
         tp = dctx.axis_size("model")
         if tp > 1 and (h % tp or kvh % tp):
@@ -162,9 +176,12 @@ def attend_chunked(q, k, v, q_pos, kv_pos, *, window, cap: float = 0.0,
                    q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
     """Causal (optionally windowed) attention.
 
-    q: (B, Sq, KH, G, D); k, v: (B, Sk, KH, D); q_pos (Sq,), kv_pos (Sk,)
-    absolute positions; window: traced or static scalar — key j attends iff
-    0 <= q_pos - kv_pos < window (global layers pass window >= S).
+    q: (B, Sq, KH, G, D); k, v: (B, Sk, KH, D); q_pos (Sq,) or (B, Sq),
+    kv_pos (Sk,) or (B, Sk) absolute positions — per-batch position rows
+    support the left-padded batched prefill (pad slots carry negative
+    positions and are masked as keys); window: traced or static scalar —
+    key j attends iff 0 <= q_pos - kv_pos < window AND kv_pos >= 0
+    (global layers pass window >= S).
     Returns (B, Sq, KH, G, D).
     """
     B, Sq, KH, G, D = q.shape
@@ -175,28 +192,32 @@ def attend_chunked(q, k, v, q_pos, kv_pos, *, window, cap: float = 0.0,
     scale = D ** -0.5
 
     q = (q * scale).reshape(B, nq, qc, KH, G, D)
-    q_pos = q_pos.reshape(nq, qc)
+    q_pos = jnp.broadcast_to(
+        jnp.atleast_2d(jnp.asarray(q_pos, jnp.int32)), (B, Sq)
+    ).reshape(B, nq, qc)
     k = k.reshape(B, nk, kc, KH, D)
     v = v.reshape(B, nk, kc, KH, D)
-    kv_pos = kv_pos.reshape(nk, kc)
+    kv_pos = jnp.broadcast_to(
+        jnp.atleast_2d(jnp.asarray(kv_pos, jnp.int32)), (B, Sk)
+    ).reshape(B, nk, kc)
     win = jnp.asarray(window, dtype=jnp.int32)
 
     def q_body(_, qi):
-        qb, qp = qi                                  # (B,qc,KH,G,D), (qc,)
+        qb, qp = qi                                # (B,qc,KH,G,D), (B,qc)
 
         def kv_body(carry, ki):
             m, l, acc = carry
-            kb, vb, kp = ki
+            kb, vb, kp = ki                        # kp: (B, kc)
             s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
                            preferred_element_type=jnp.float32)
             if cap:
                 s = softcap(s, cap)
-            delta = qp[:, None] - kp[None, :]        # (qc, kc)
-            mask = (delta >= 0) & (delta < win)
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            delta = qp[:, :, None] - kp[:, None, :]  # (B, qc, kc)
+            mask = (delta >= 0) & (delta < win) & (kp[:, None, :] >= 0)
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
-            p = jnp.where(mask[None, None, None], p, 0.0)
+            p = jnp.where(mask[:, None, None], p, 0.0)
             corr = jnp.exp(m - m_new)
             l_new = l * corr + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
@@ -208,12 +229,14 @@ def attend_chunked(q, k, v, q_pos, kv_pos, *, window, cap: float = 0.0,
         l0 = jnp.zeros((B, KH, G, qc), dtype=jnp.float32)
         a0 = jnp.zeros((B, KH, G, qc, D), dtype=jnp.float32)
         (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (
-            jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), kv_pos))
+            jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+            jnp.moveaxis(kv_pos, 1, 0)))
         out = acc / jnp.maximum(l, 1e-20)[..., None]
         return None, jnp.moveaxis(out, 3, 1)         # (B, qc, KH, G, D)
 
     _, ys = jax.lax.scan(jax.checkpoint(q_body), None,
-                         (jnp.moveaxis(q, 1, 0), q_pos))
+                         (jnp.moveaxis(q, 1, 0),
+                          jnp.moveaxis(q_pos, 1, 0)))
     # ys: (nq, B, qc, KH, G, D) -> (B, Sq, KH, G, D)
     return jnp.moveaxis(ys, 0, 1).reshape(B, Sq, KH, G, D)
 
@@ -243,13 +266,14 @@ def _attend_maybe_sharded(qg, k, v, positions, window, cap):
                       and "model" not in (dp or ())) else None
     q_spec = P(bax, None, hax, None, None)
     kv_spec = P(bax, None, hax, None)
+    pos_spec = P(None) if positions.ndim == 1 else P(bax, None)
 
     def body(qq, kk, vv, pos):
         return fn(qq, kk, vv, pos, pos)
 
     return jax.shard_map(
         body, mesh=mesh,
-        in_specs=(q_spec, kv_spec, kv_spec, P(None)),
+        in_specs=(q_spec, kv_spec, kv_spec, pos_spec),
         out_specs=q_spec, check_vma=False,
     )(qg, k, v, positions)
 
@@ -258,15 +282,17 @@ def attn_apply_full(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
                     positions: jnp.ndarray, window) -> Tuple[jnp.ndarray,
                                                              Tuple]:
     """Train/prefill path. Returns (y, (k, v)) — k/v are handed to the
-    caller for cache construction during prefill."""
+    caller for cache construction during prefill. ``positions`` is (S,)
+    or per-batch (B, S) (left-padded batched prefill)."""
     B, S, _ = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
-    q, k, v = _project_qkv(p, cfg, x, positions[None, :])
+    pos2 = positions[None, :] if positions.ndim == 1 else positions
+    q, k, v = _project_qkv(p, cfg, x, pos2)
     qg = q.reshape(B, S, kvh, h // kvh, hd)
     out = _attend_maybe_sharded(qg, k, v, positions, window,
                                 cfg.logit_softcap)
     out = out.reshape(B, S, h * hd).astype(x.dtype)
-    y = dense_apply(p["wo"], out)
+    y = _proj(p, "wo", out)
     return y, (k, v)
 
 
@@ -322,32 +348,71 @@ def attn_apply_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
                      v_read.astype(qg.dtype),
                      preferred_element_type=jnp.float32)
     out = out.reshape(B, 1, h * hd).astype(x.dtype)
-    return dense_apply(p["wo"], out), cache
+    return _proj(p, "wo", out), cache
 
 
 def build_cache_from_prefill(k: jnp.ndarray, v: jnp.ndarray,
-                             capacity: int, quant: bool = False
+                             capacity: int, quant: bool = False,
+                             positions: Optional[jnp.ndarray] = None
                              ) -> KVCache:
-    """Arrange prefill K/V (B, S, KH, D) into a ring cache of ``capacity``."""
+    """Arrange prefill K/V (B, S, KH, D) into a ring cache of ``capacity``.
+
+    positions: optional per-batch (B, S) absolute positions (left-padded
+    batched prefill; pad slots < 0). Pad entries are zeroed and written
+    with pos = -1. Collision-freedom: after slicing the trailing
+    ``capacity`` columns, valid positions of row i span
+    [max(0, L_i - C), L_i) — slots [.. L_i) mod C — while pad positions
+    span [-(C - L_i), 0) — slots [L_i, C) — disjoint by construction.
+    """
     B, S, KH, D = k.shape
     cache = init_kv_cache(B, capacity, KH, D, k.dtype, quant=quant)
-    n = min(S, capacity)
-    src = jnp.arange(S - n, S)
-    slots = src % capacity
-    pos = cache.pos.at[:, slots].set(
-        jnp.broadcast_to(src, (B, n)).astype(jnp.int32))
-    if quant:
-        kq, ks = _quant_heads(k[:, src])
-        vq, vs = _quant_heads(v[:, src])
+    if positions is None:
+        n = min(S, capacity)
+        src = jnp.arange(S - n, S)
+        slots = src % capacity
+        pos = cache.pos.at[:, slots].set(
+            jnp.broadcast_to(src, (B, n)).astype(jnp.int32))
+        if quant:
+            kq, ks = _quant_heads(k[:, src])
+            vq, vs = _quant_heads(v[:, src])
+            return KVCache(
+                k=cache.k.at[:, slots].set(kq),
+                v=cache.v.at[:, slots].set(vq),
+                pos=pos,
+                kscale=cache.kscale.at[:, slots].set(ks),
+                vscale=cache.vscale.at[:, slots].set(vs),
+            )
         return KVCache(
-            k=cache.k.at[:, slots].set(kq),
-            v=cache.v.at[:, slots].set(vq),
+            k=cache.k.at[:, slots].set(k[:, src]),
+            v=cache.v.at[:, slots].set(v[:, src]),
             pos=pos,
-            kscale=cache.kscale.at[:, slots].set(ks),
-            vscale=cache.vscale.at[:, slots].set(vs),
+        )
+
+    positions = positions.astype(jnp.int32)
+    if S > capacity:
+        # ring semantics: only the trailing `capacity` tokens survive
+        # (positions increase along columns, so these are the newest)
+        k, v = k[:, -capacity:], v[:, -capacity:]
+        positions = positions[:, -capacity:]
+    valid = positions >= 0
+    slots = (positions % capacity).astype(jnp.int32)       # (B, n)
+    posv = jnp.where(valid, positions, -1)
+    kz = jnp.where(valid[..., None, None], k, 0)
+    vz = jnp.where(valid[..., None, None], v, 0)
+    bidx = jnp.arange(B)[:, None]
+    pos = cache.pos.at[bidx, slots].set(posv)
+    if quant:
+        kq, ks = _quant_heads(kz)
+        vq, vs = _quant_heads(vz)
+        return KVCache(
+            k=cache.k.at[bidx, slots].set(kq),
+            v=cache.v.at[bidx, slots].set(vq),
+            pos=pos,
+            kscale=cache.kscale.at[bidx, slots].set(ks),
+            vscale=cache.vscale.at[bidx, slots].set(vs),
         )
     return KVCache(
-        k=cache.k.at[:, slots].set(k[:, src]),
-        v=cache.v.at[:, slots].set(v[:, src]),
+        k=cache.k.at[bidx, slots].set(kz.astype(cache.k.dtype)),
+        v=cache.v.at[bidx, slots].set(vz.astype(cache.v.dtype)),
         pos=pos,
     )

@@ -10,6 +10,13 @@ Execution paths (DESIGN.md §4):
                          (gathered-matmul), FLOPs/bytes ∝ (1 - sparsity).
   * kernel             — Pallas tile-skip kernel (TPU-native), same
                          container.
+  * packed             — deployment containers from ``core.deploy``
+                         (DESIGN.md §9): per-matrix "sasp_packed"
+                         PackedSASPWeight (compact sorted block list,
+                         bias+act fused into the kernel flush) or the
+                         whole-FFN "sasp_fused" PackedFFN (one kernel
+                         launch, no HBM (M, d_ff) intermediate). Zero
+                         per-call repacking — the serving fast path.
   * quant              — weight-only INT8 (+ per-block scales); composes
                          with any of the above.
 """
@@ -23,7 +30,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.pruning import apply_block_mask
 from repro.core.quantization import QuantizedWeight
-import jax
 from repro.core.sparse import BlockSparseWeight, bsr_matmul
 from repro.models.modules import act_fn, as_dtype, dense_init
 
@@ -175,12 +181,37 @@ def _can_rs_ag(p: Dict, cfg: ModelConfig, x2) -> bool:
     f = p["w1"]["w"].shape[-1]
     return (tp > 1 and d % tp == 0 and f % tp == 0
             and "sasp_bsr" not in p and "sasp_masks" not in p
+            and "sasp_packed" not in p and "sasp_fused" not in p
             and isinstance(p["w1"], dict) and "w" in p["w1"])
+
+
+def _ffn_apply_packed(p: Dict, cfg: ModelConfig, x2: jnp.ndarray
+                      ) -> Optional[jnp.ndarray]:
+    """Deployment fast path: fused whole-FFN kernel if a PackedFFN is
+    attached, else per-matrix packed GEMMs (w1 carries the activation as
+    its flush epilogue, so no separate elementwise pass). Returns None
+    when no packed container is present."""
+    from repro.core.deploy import packed_ffn_apply, packed_matmul
+
+    fused = p.get("sasp_fused")
+    if fused is not None:
+        return packed_ffn_apply(x2, fused)
+    packed = p.get("sasp_packed")
+    if packed is not None and "w1" in packed:
+        h = packed_matmul(x2, packed["w1"])         # act fused in flush
+        if cfg.ffn_gated and "w3" in packed:
+            h = h * packed_matmul(x2, packed["w3"])
+        return packed_matmul(h, packed["w2"])       # bias fused if any
+    return None
 
 
 def ffn_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
     *lead, d = x.shape
     x2 = x.reshape(-1, d)
+    if "sasp_fused" in p or "sasp_packed" in p:
+        y = _ffn_apply_packed(p, cfg, x2)
+        if y is not None:
+            return y.reshape(*lead, d).astype(x.dtype)
     if _can_rs_ag(p, cfg, x2):
         y = _ffn_tp_rs_ag_int8(p, cfg, x2)
         return y.reshape(*lead, d).astype(x.dtype)

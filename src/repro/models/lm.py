@@ -164,7 +164,8 @@ def _apply_slot_full(sp: Dict, spec: LayerSpec, cfg: ModelConfig,
             cap = min(window, cache_len) if spec[1] == ATTN_LOCAL \
                 else cache_len
             cache = attn_mod.build_cache_from_prefill(
-                k, v, cap, quant=cfg.kv_quant)
+                k, v, cap, quant=cfg.kv_quant,
+                positions=positions if positions.ndim == 2 else None)
     else:
         y, ssm_cache = ssm_mod.ssm_apply_full(sp["mixer"], cfg, h)
         if want_cache:
@@ -344,12 +345,23 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
-            cache_len: Optional[int] = None):
-    """Process the prompt; returns (last-token logits (B, 1, V), caches)."""
+            cache_len: Optional[int] = None, positions=None):
+    """Process the prompt; returns (last-token logits (B, 1, V), caches).
+
+    positions: optional per-batch (B, S) absolute positions for the
+    LEFT-padded multi-slot batched prefill (serve/engine.py): row i of a
+    prompt of length L_i is [-(S - L_i), …, -1 padded, 0 … L_i - 1].
+    Pad columns are masked out of attention and written to the KV cache
+    with pos = -1; the last column is every sequence's final real token,
+    so the returned logits stay (B, 1, V). Default: shared arange(S).
+    """
     x = _embed_in(params, cfg, tokens, embeds)
     B, S = x.shape[0], x.shape[1]
     cache_len = cache_len or S
-    positions = jnp.arange(S, dtype=jnp.int32)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    else:
+        positions = jnp.asarray(positions, jnp.int32)
     x, _, caches = _run_segments_full(params, cfg, x, positions, True,
                                       cache_len)
     logits = logits_fn(params, cfg, x[:, -1:])

@@ -8,6 +8,11 @@ maps onto the MXU. Decode is the O(1) recurrence on the same state.
 Layer structure (Mamba-2 block): RMSNorm → in_proj → [z | xBC | dt] →
 causal depthwise conv(k) on xBC → SiLU → split x, B, C → SSD →
 gated RMSNorm(y ⊙ SiLU(z)) → out_proj.
+
+Serving note (DESIGN.md §7): unlike attention, the recurrence has no
+per-token position masking, so a left-padded prefix WOULD corrupt the
+state — the engine's batched multi-slot prefill therefore only engages
+on attention-only stacks; hybrid stacks prefill per-request.
 """
 from __future__ import annotations
 

@@ -5,21 +5,37 @@ The engine keeps B slots. Each slot holds one sequence (its own cache
 rows — caches are batched pytrees, so slot i is index i of every cache
 leaf). Finished sequences free their slot; queued requests prefill into
 free slots. Decode steps run over the full batch every iteration (idle
-slots are masked). SASP-deployed weights (masked / BSR / kernel paths)
-serve through the same code — the paper's tile-skip savings apply to
-every decode GEMM.
+slots are masked). SASP-deployed weights (masked / BSR / kernel /
+packed paths) serve through the same code — the paper's tile-skip
+savings apply to every decode GEMM.
+
+Serving fast path (DESIGN.md §9):
+
+* **Batched multi-slot prefill** — when several slots free up at once,
+  their prompts prefill in ONE left-padded forward pass (per-batch
+  positions mask the pad columns out of attention and out of the KV
+  cache). Attention-only stacks only; hybrid/SSM stacks fall back to
+  per-request prefill (a padded prefix would corrupt the recurrent
+  state).
+* **On-device sampling** — greedy argmax and temperature sampling
+  (``jax.random.categorical``) run inside the jitted decode step, so
+  only the sampled token ids (B int32) and done flags cross to the
+  host. The full (B, vocab) logits never leave the device.
+* **Device-side length/EOS masking** — per-slot remaining-token budgets
+  and EOS ids live in device arrays; the decode step returns done flags
+  and zeros the sampled token of idle slots.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from functools import partial
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import MIXER_ATTN, ModelConfig
 from repro.models import lm
 
 
@@ -29,8 +45,21 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0        # 0 = greedy
+    eos_id: Optional[int] = None    # stop token (device-side check)
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+
+
+def _sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32. Greedy where temp <= 0, else
+    categorical at logits/temp. Runs on device."""
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temps, 1e-6)[:, None]
+    keys = jax.random.split(key, lg.shape[0])
+    samp = jax.vmap(jax.random.categorical)(keys, lg / t).astype(jnp.int32)
+    return jnp.where(temps > 0, samp, greedy)
 
 
 class Engine:
@@ -44,9 +73,24 @@ class Engine:
         self.pos = np.zeros((batch_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
-        self.rng = np.random.default_rng(rng_seed)
-        self._decode = jax.jit(
-            lambda p, t, pos, c: lm.decode_step(p, cfg, t, pos, c))
+        self._finished_at_admission: List[Request] = []
+        self._key = jax.random.PRNGKey(rng_seed)
+        self._attn_only = all(m == MIXER_ATTN
+                              for m in cfg.layer_mixer_kinds())
+        self._decode = jax.jit(partial(self._decode_step, cfg))
+        self._sample = jax.jit(_sample_tokens)
+
+    @staticmethod
+    def _decode_step(cfg, params, toks, pos, caches, key, temps, active,
+                     eos, remaining):
+        """One fused decode + sample + retire-check step; only (B,) token
+        ids and (B,) done flags leave the device."""
+        logits, caches = lm.decode_step(params, cfg, toks, pos, caches)
+        key, sub = jax.random.split(key)
+        nxt = _sample_tokens(logits[:, 0], sub, temps)
+        nxt = jnp.where(active, nxt, 0)
+        done = active & ((nxt == eos) | (remaining <= 1))
+        return nxt, done, caches, key
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -55,9 +99,19 @@ class Engine:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _sample_host(self, logits, reqs: List[Request]) -> List[int]:
+        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+        toks = self._sample(logits, self._next_key(), temps)
+        return [int(t) for t in np.asarray(toks)]
+
     def _prefill_into_slot(self, slot: int, req: Request):
         """Single-sequence prefill; its cache rows are written into the
-        batch caches at ``slot``."""
+        batch caches at ``slot``. Fallback path: hybrid/SSM stacks and
+        prompts longer than the cache."""
         toks = jnp.asarray(req.prompt[None, :], jnp.int32)
         logits, caches1 = lm.prefill(self.params, self.cfg, tokens=toks,
                                      cache_len=self.cache_len)
@@ -67,45 +121,109 @@ class Engine:
 
         self.caches = jax.tree.map(put, self.caches, caches1)
         self.pos[slot] = len(req.prompt)
-        nxt = self._sample(np.asarray(logits)[0, 0], req)
-        req.out_tokens.append(int(nxt))
+        (nxt,) = self._sample_host(logits[:, 0], [req])
+        req.out_tokens.append(nxt)
+        if self._retired_at_admission(req):
+            return
         self.slot_req[slot] = req
 
-    def _sample(self, logits: np.ndarray, req: Request) -> int:
-        if req.temperature <= 0:
-            return int(np.argmax(logits))
-        p = np.exp((logits - logits.max()) / req.temperature)
-        p /= p.sum()
-        return int(self.rng.choice(len(p), p=p))
+    def _prefill_group(self, slots: List[int], reqs: List[Request]):
+        """Batched multi-slot prefill: one LEFT-padded forward pass for
+        all admitted prompts. Row i of the positions array is
+        [-(S-L_i) … -1, 0 … L_i-1]; negative positions are masked out of
+        attention and land in the cache with pos = -1, so shorter
+        prompts are bit-exact vs solo prefill."""
+        G = len(reqs)
+        lens = [len(r.prompt) for r in reqs]
+        S = max(lens)
+        toks = np.zeros((G, S), np.int32)
+        poss = np.zeros((G, S), np.int32)
+        for g, r in enumerate(reqs):
+            pad = S - lens[g]
+            toks[g, pad:] = r.prompt
+            poss[g] = np.arange(S) - pad
+        logits, caches1 = lm.prefill(
+            self.params, self.cfg, tokens=jnp.asarray(toks),
+            cache_len=self.cache_len, positions=jnp.asarray(poss))
+
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+
+        def put(batch_leaf, new_leaf):
+            return batch_leaf.at[:, sl].set(
+                new_leaf.astype(batch_leaf.dtype))
+
+        self.caches = jax.tree.map(put, self.caches, caches1)
+        nxts = self._sample_host(logits[:, 0], reqs)
+        for slot, req, nxt, L in zip(slots, reqs, nxts, lens):
+            self.pos[slot] = L
+            req.out_tokens.append(nxt)
+            if self._retired_at_admission(req):
+                continue
+            self.slot_req[slot] = req
+
+    def _retired_at_admission(self, req: Request) -> bool:
+        """EOS / budget check on the prefill-sampled token: a request can
+        finish without ever occupying a decode slot."""
+        if ((req.eos_id is not None
+             and req.out_tokens[-1] == req.eos_id)
+                or len(req.out_tokens) >= req.max_new_tokens):
+            req.done = True
+            self._finished_at_admission.append(req)
+            return True
+        return False
+
+    def _admit(self):
+        free = self._free_slots()
+        take = min(len(free), len(self.queue))
+        if not take:
+            return
+        reqs = [self.queue.pop(0) for _ in range(take)]
+        slots = free[:take]
+        if (take > 1 and self._attn_only
+                and max(len(r.prompt) for r in reqs) <= self.cache_len):
+            self._prefill_group(slots, reqs)
+        else:
+            for slot, req in zip(slots, reqs):
+                self._prefill_into_slot(slot, req)
 
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:
         """Admit queued requests, run one decode step, retire finished.
         Returns completed requests."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._prefill_into_slot(slot, self.queue.pop(0))
+        self._admit()
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        finished: List[Request] = []
+        finished: List[Request] = self._finished_at_admission
+        self._finished_at_admission = []
         if not active:
             return finished
 
         last = np.zeros((self.B, 1), np.int32)
+        temps = np.zeros((self.B,), np.float32)
+        act = np.zeros((self.B,), bool)
+        eos = np.full((self.B,), -1, np.int64)
+        remaining = np.zeros((self.B,), np.int32)
         for i in active:
-            last[i, 0] = self.slot_req[i].out_tokens[-1]
-        logits, self.caches = self._decode(
+            req = self.slot_req[i]
+            last[i, 0] = req.out_tokens[-1]
+            temps[i] = req.temperature
+            act[i] = True
+            eos[i] = -1 if req.eos_id is None else req.eos_id
+            remaining[i] = req.max_new_tokens - len(req.out_tokens)
+
+        nxt, done, self.caches, self._key = self._decode(
             self.params, jnp.asarray(last),
-            jnp.asarray(self.pos, jnp.int32), self.caches)
-        logits = np.asarray(logits)
+            jnp.asarray(self.pos, jnp.int32), self.caches, self._key,
+            jnp.asarray(temps), jnp.asarray(act),
+            jnp.asarray(eos.astype(np.int32)), jnp.asarray(remaining))
+        nxt = np.asarray(nxt)                   # (B,) int32 — the ONLY
+        done = np.asarray(done)                 # per-token host traffic
 
         for i in active:
             req = self.slot_req[i]
             self.pos[i] += 1
-            nxt = self._sample(logits[i, 0], req)
-            req.out_tokens.append(nxt)
-            if len(req.out_tokens) >= req.max_new_tokens:
+            req.out_tokens.append(int(nxt[i]))
+            if bool(done[i]):
                 req.done = True
                 finished.append(req)
                 self.slot_req[i] = None

@@ -1,7 +1,10 @@
 """Cost-model fidelity vs paper Table 3 + codesign explorer invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.codesign import (
     best_under_qos,

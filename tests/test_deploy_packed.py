@@ -1,0 +1,137 @@
+"""Packed deployment pipeline: deploy_packed parity vs the masked-dense
+reference across forward/prefill/decode, engine fast-path semantics
+(batched left-padded prefill, on-device sampling, EOS masking)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SASPConfig, get_config, reduced
+from repro.core.deploy import deploy_packed, packed_summary
+from repro.core.pruning import prune_params
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _pruned(scope="all", sparsity=0.5, layers=2, d_model=64, vocab=64):
+    sasp = SASPConfig(enabled=True, block_k=16, block_n=16,
+                      sparsity=sparsity, scope=scope)
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3-32b"), layers=layers, d_model=d_model,
+                vocab=vocab),
+        sasp=sasp)
+    params = lm.init_params(KEY, cfg)
+    pruned, _ = prune_params(params, sasp)
+    return pruned, cfg
+
+
+@pytest.mark.parametrize("fuse_ffn", [True, False])
+@pytest.mark.parametrize("scope", ["ffn", "all"])
+def test_deploy_packed_forward_parity(scope, fuse_ffn):
+    pruned, cfg = _pruned(scope=scope)
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    ref = lm.forward(pruned, cfg, toks)
+    pp, pcfg = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn)
+    got = lm.forward(pp, pcfg, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_deploy_packed_prefill_decode_parity():
+    pruned, cfg = _pruned()
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    lg0, c0 = lm.prefill(pruned, cfg, toks, cache_len=32)
+    pp, pcfg = deploy_packed(pruned, cfg)
+    lg1, c1 = lm.prefill(pp, pcfg, toks, cache_len=32)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg0),
+                               rtol=1e-4, atol=1e-4)
+    t = jnp.asarray([[int(jnp.argmax(lg0[0, 0]))]], jnp.int32)
+    pos = jnp.asarray([8], jnp.int32)
+    d0, _ = lm.decode_step(pruned, cfg, t, pos, c0)
+    d1, _ = lm.decode_step(pp, pcfg, t, pos, c1)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_deploy_packed_int8_close():
+    pruned, cfg = _pruned(scope="ffn")
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    ref = np.asarray(lm.forward(pruned, cfg, toks))
+    pp, pcfg = deploy_packed(pruned, cfg, quantize=True)
+    got = np.asarray(lm.forward(pp, pcfg, toks))
+    scale = np.abs(ref).max() + 1e-9
+    assert np.abs(got - ref).max() / scale < 5e-2
+
+
+def test_packed_summary_reports_compression():
+    pruned, cfg = _pruned(scope="all", sparsity=0.5)
+    pp, _ = deploy_packed(pruned, cfg)
+    s = packed_summary(pp)
+    assert s["n_fused_ffns"] == 1          # one stacked FFN container
+    assert s["n_packed_matrices"] == 4     # wq/wk/wv/wo stacked
+    assert 0 < s["compression"] < 1.0      # strictly smaller than dense
+
+
+def test_engine_packed_matches_masked_engine_tokens():
+    pruned, cfg = _pruned(scope="ffn", sparsity=0.5)
+    pp, pcfg = deploy_packed(pruned, cfg)
+    prompt = np.arange(1, 11, dtype=np.int32)
+    a = Engine(pruned, cfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=prompt, max_new_tokens=6)])[0].out_tokens
+    b = Engine(pp, pcfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=prompt, max_new_tokens=6)])[0].out_tokens
+    assert a == b
+
+
+def test_batched_prefill_slot_isolation():
+    """Multi-slot batched (left-padded) prefill must be bit-equivalent
+    to solo serving for every sequence, across unequal prompt lengths."""
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64)
+    params = lm.init_params(KEY, cfg)
+    prompts = [np.arange(1, 7, dtype=np.int32),
+               np.arange(30, 40, dtype=np.int32),
+               np.arange(5, 13, dtype=np.int32)]
+    solo = [Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=p, max_new_tokens=5)])[0].out_tokens
+        for p in prompts]
+    eng = Engine(params, cfg, batch_slots=3, cache_len=64)
+    together = eng.run([Request(rid=i, prompt=p, max_new_tokens=5)
+                        for i, p in enumerate(prompts)])
+    got = {r.rid: r.out_tokens for r in together}
+    for i in range(len(prompts)):
+        assert got[i] == solo[i], i
+
+
+def test_engine_eos_stops_early():
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64)
+    params = lm.init_params(KEY, cfg)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    ref = Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=prompt, max_new_tokens=8)])[0].out_tokens
+    assert len(ref) == 8
+    eos = ref[2]                      # appears in the greedy stream
+    out = Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [Request(rid=0, prompt=prompt, max_new_tokens=8,
+                 eos_id=int(eos))])[0].out_tokens
+    stop = ref.index(eos) + 1         # first emission, EOS included
+    assert out == ref[:stop]
+
+
+def test_engine_temperature_sampling_on_device():
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64)
+    params = lm.init_params(KEY, cfg)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    outs = set()
+    for seed in range(3):
+        eng = Engine(params, cfg, batch_slots=1, cache_len=64,
+                     rng_seed=seed)
+        r = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=8,
+                             temperature=1.5)])[0]
+        assert len(r.out_tokens) == 8
+        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
+        outs.add(tuple(r.out_tokens))
+    assert len(outs) > 1              # different seeds, different streams

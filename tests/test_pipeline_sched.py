@@ -1,7 +1,9 @@
 """Data pipeline determinism/resume + schedules + watchdog."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.pipeline import DataConfig, DataState, Pipeline, \
     asr_batch, lm_batch
