@@ -9,12 +9,31 @@ this. Wall numbers are CPU/interpret-mode, so they compare *paths*, not
 hardware; the acceptance bar is packed strictly faster than the
 per-call-repacking path at 50% tile sparsity.
 
+The mesh section (DESIGN.md §10) re-runs the packed path under a
+1×2 (data, model) TP mesh — shard-local visit lists + NamedSharding'd
+caches — and checks the greedy streams stay bit-identical to the
+single-device packed path. It runs in a SUBPROCESS with 2 fake CPU
+devices so the parent bench keeps its 1-device environment and every
+other row stays comparable to prior PRs' BENCH_engine.json. At 25%
+tile sparsity, NOT 50%: this reduced config prunes the whole d_ff grid
+at 0.5, which would make the bit-identity check vacuous for the
+sharded FFN reduction.
+
 Standalone: PYTHONPATH=src python -m benchmarks.bench_engine
 writes BENCH_engine.json next to the repo root.
 """
 from __future__ import annotations
 
+import sys
+
+if __name__ == "__main__" and "--mesh-only" in sys.argv:
+    # the mesh subprocess: force devices before jax backend init
+    from benchmarks.common import ensure_fake_cpu_devices
+    ensure_fake_cpu_devices(2)
+
 import json
+import os
+import subprocess
 import time
 from typing import List
 
@@ -44,9 +63,10 @@ def _requests(vocab: int) -> List[Request]:
             for i in range(N_REQ)]
 
 
-def _run_engine(params, cfg):
+def _run_engine(params, cfg, mesh=None):
     """(tokens/s, token streams) for one warmed engine pass."""
-    eng = Engine(params, cfg, batch_slots=SLOTS, cache_len=CACHE_LEN)
+    eng = Engine(params, cfg, batch_slots=SLOTS, cache_len=CACHE_LEN,
+                 mesh=mesh)
     eng.run(_requests(cfg.vocab_size))          # warm-up: jit compiles
     reqs = _requests(cfg.vocab_size)
     t0 = time.perf_counter()
@@ -55,6 +75,63 @@ def _run_engine(params, cfg):
     toks = sum(len(r.out_tokens) for r in done)
     streams = {r.rid: list(r.out_tokens) for r in done}
     return toks / dt, streams
+
+
+MESH_SPARSITY = 0.25
+
+
+def bench_engine_mesh() -> List:
+    """Packed path under a 1×2 TP mesh: tokens/s + bit-identity vs the
+    single-device packed path. Needs ≥2 devices — run via
+    ``--mesh-only`` (a subprocess of the full bench) or under your own
+    fake-device flag. The meshless reference runs HERE, in the same
+    process, so the comparison is apples-to-apples."""
+    rows = []
+    if len(jax.devices()) < 2:
+        print("  mesh 1x2: skipped (<2 devices)")
+        return rows
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    deploy = dict(path="packed", sparsity=MESH_SPARSITY,
+                  block_k=8, block_n=8, verbose=False)
+    p_ref, c_ref = build_serving_params(params0, cfg0, **deploy)
+    _, ref_streams = _run_engine(p_ref, c_ref)
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    p, c = build_serving_params(params0, cfg0, mesh=mesh, **deploy)
+    tok_s, streams = _run_engine(p, c, mesh=mesh)
+    agree = int(streams == ref_streams)
+    rows.append((f"engine/packed/mesh1x2/sp{MESH_SPARSITY:.2f}",
+                 1e6 / tok_s,
+                 f"tok_s={tok_s:.2f};mesh=1x2;"
+                 f"single_device_agree={agree}"))
+    return rows
+
+
+def _mesh_rows_subprocess() -> List:
+    """Run the mesh section in a child with 2 fake CPU devices so THIS
+    process keeps seeing 1 device (cross-PR row comparability; same
+    policy as tests/test_distribution.py)."""
+    p = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_engine", "--mesh-only"],
+        capture_output=True, text=True, env=dict(os.environ),
+        timeout=1200)
+    if p.returncode != 0:
+        err = p.stderr.strip().splitlines()
+        print(f"  mesh 1x2: subprocess failed (rc={p.returncode}): "
+              f"{err[-1] if err else '<no stderr>'}")
+        return []
+    rows = []
+    for line in p.stdout.splitlines():
+        if line.startswith("RESULT "):
+            rows = [tuple(r) for r in json.loads(line[len("RESULT "):])]
+    for name, us, derived in rows:
+        tok_s = 1e6 / us
+        agree = "single_device_agree=1" in derived
+        print(f"  mesh 1x2 packed : {tok_s:7.1f} tok/s "
+              f"(vs single-device packed: {'==' if agree else '!='})")
+    if not rows:
+        print("  mesh 1x2: subprocess emitted no RESULT row")
+    return rows
 
 
 def bench_engine() -> List:
@@ -89,6 +166,7 @@ def bench_engine() -> List:
                          f"kernel_packed_agree={agree}"))
         rows.append((f"engine/packed_speedup/sp{sp:.2f}", 0.0,
                      f"x{speedup:.3f}_vs_percall_repack"))
+    rows.extend(_mesh_rows_subprocess())
     return rows
 
 
@@ -101,6 +179,9 @@ def rows_to_json(rows, path: str):
 
 
 def main():
+    if "--mesh-only" in sys.argv:       # the 2-fake-device subprocess
+        print("RESULT " + json.dumps(bench_engine_mesh()))
+        return
     rows = bench_engine()
     rows_to_json(rows, "BENCH_engine.json")
 

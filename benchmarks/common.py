@@ -8,6 +8,9 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.launch.mesh import ensure_fake_cpu_devices  # noqa: F401
+# (canonical impl lives in src so launch/serve.py shares it)
+
 QOS_CACHE = os.path.join("experiments", "qos_results.json")
 DRYRUN_DIR = os.path.join("experiments", "dryrun")
 

@@ -14,6 +14,9 @@ import sys
 
 
 def main() -> None:
+    # (the engine mesh row runs in bench_engine's own 2-fake-device
+    # subprocess; this process keeps 1 device so every other row stays
+    # comparable across PRs)
     from benchmarks import (
         bench_engine,
         bench_kernels,

@@ -75,10 +75,23 @@ def _dense_weight(entry: Params) -> Optional[np.ndarray]:
 def pack_weight(w: np.ndarray, *, block_k: int, block_n: int,
                 bias: Optional[np.ndarray] = None,
                 act: Optional[str] = None,
-                quantize: bool = False) -> PackedSASPWeight:
+                quantize: bool = False,
+                tp: int = 1,
+                shard_kind: str = "col") -> PackedSASPWeight:
     """(K, N) or layer-stacked (L, K, N) dense weight (pruned tiles
     already zeroed) -> PackedSASPWeight. Stacked inputs are packed per
-    layer and padded to a shared nnz (dup-last-visit zero padding)."""
+    layer and padded to a shared nnz (dup-last-visit zero padding).
+
+    ``tp > 1`` partitions each layer's sorted block list into ``tp``
+    shard-local lists (DESIGN.md §10): ``shard_kind="col"`` slices the
+    output-column blocks (kn n-coords become shard-local; each shard's
+    pruning savings stay local instead of averaging away), ``"row"``
+    slices the input-row blocks (for down-projections whose INPUT is
+    already column-sharded; outputs are partial and need a reduction,
+    so ``act`` must be None and ``bias`` is kept whole, to be added
+    after the reduction). All (layer × shard) lists share one static
+    nnz via the same dup-last-visit padding as the scan layout.
+    """
     w = np.asarray(w, np.float32)
     if w.ndim == 2:
         w = w[None]
@@ -90,34 +103,66 @@ def pack_weight(w: np.ndarray, *, block_k: int, block_n: int,
     bk = _fit_block(K, block_k)
     bn = _fit_block(N, block_n)
     KB, NB = K // bk, N // bn
+    assert shard_kind in ("col", "row"), shard_kind
+    if tp > 1:
+        blocks = NB if shard_kind == "col" else KB
+        assert blocks % tp == 0, (shard_kind, blocks, tp)
+        assert shard_kind == "col" or act is None, \
+            "row-sharded outputs are partial; no nonlinear epilogue"
 
-    packs = []
+    def _slice(wi, s):
+        if tp == 1:
+            return wi
+        if shard_kind == "col":
+            ns = N // tp
+            return wi[:, s * ns:(s + 1) * ns]
+        ks = K // tp
+        return wi[s * ks:(s + 1) * ks, :]
+
+    packs = []                            # [L][tp] of (vals, kn, scale)
     for i in range(L):
-        m = np.any(
-            w[i].reshape(KB, bk, NB, bn), axis=(1, 3))      # nonzero tiles
-        packs.append(sasp_ops.build_kernel_weight(
-            w[i], m, bk, bn, quantize=quantize))
-    nnz = max(np.asarray(p[0]).shape[0] for p in packs)
-    vs, ks, ss = [], [], []
-    for v, kn, sc in packs:
-        v, kn, sc = sasp_ops.pad_block_list(
-            np.asarray(v), np.asarray(kn),
-            None if sc is None else np.asarray(sc), nnz)
-        vs.append(v)
-        ks.append(kn)
-        ss.append(sc)
-    vals = jnp.asarray(np.stack(vs))
-    kn = jnp.asarray(np.stack(ks))
-    scale = None if ss[0] is None else jnp.asarray(
-        np.stack(ss).astype(np.float32))
-    b = None if bias is None else jnp.asarray(
-        np.asarray(bias, np.float32))
+        layer = []
+        for s in range(tp):
+            ws = _slice(w[i], s)
+            kb, nb = ws.shape[0] // bk, ws.shape[1] // bn
+            m = np.any(ws.reshape(kb, bk, nb, bn), axis=(1, 3))
+            layer.append(sasp_ops.build_kernel_weight(
+                ws, m, bk, bn, quantize=quantize))
+        packs.append(layer)
+    nnz = max(np.asarray(p[0]).shape[0] for lp in packs for p in lp)
+
+    def _pad_stack(layer):
+        vs, ks, ss = [], [], []
+        for v, kn, sc in layer:
+            v, kn, sc = sasp_ops.pad_block_list(
+                np.asarray(v), np.asarray(kn),
+                None if sc is None else np.asarray(sc), nnz)
+            vs.append(v)
+            ks.append(kn)
+            ss.append(sc)
+        if tp == 1:
+            return vs[0], ks[0], ss[0]
+        return (np.stack(vs), np.stack(ks),
+                None if ss[0] is None else np.stack(ss))
+
+    per_layer = [_pad_stack(lp) for lp in packs]
+    vals = jnp.asarray(np.stack([p[0] for p in per_layer]))
+    kn = jnp.asarray(np.stack([p[1] for p in per_layer]))
+    scale = None if per_layer[0][2] is None else jnp.asarray(
+        np.stack([p[2] for p in per_layer]).astype(np.float32))
+    b = None
+    if bias is not None:
+        b = np.asarray(bias, np.float32)
+        if tp > 1 and shard_kind == "col":     # fused per column shard
+            b = b.reshape(L, tp, N // tp)
+        b = jnp.asarray(b)
     if squeeze:
         vals, kn = vals[0], kn[0]
         scale = None if scale is None else scale[0]
         b = None if b is None else b[0]
     return PackedSASPWeight(vals, kn, (K, N), (bk, bn), scale=scale,
-                            bias=b, act=act)
+                            bias=b, act=act, shards=tp,
+                            shard_kind=shard_kind if tp > 1 else None)
 
 
 def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
@@ -125,9 +170,19 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
              b1: Optional[np.ndarray] = None,
              b3: Optional[np.ndarray] = None,
              b2: Optional[np.ndarray] = None,
-             quantize: bool = False) -> PackedFFN:
+             quantize: bool = False,
+             tp: int = 1) -> PackedFFN:
     """Gated-FFN triple (each (d, F)/(F, d) or layer-stacked with a
-    leading L axis) -> PackedFFN for the fused kernel."""
+    leading L axis) -> PackedFFN for the fused kernel.
+
+    ``tp > 1`` partitions the d_ff visit schedule contiguously by d_ff
+    column-block shard (DESIGN.md §10): shard s packs d_ff columns
+    [s·F/tp, (s+1)·F/tp) of w1/w3 and the matching w2 rows, so every
+    shard runs the fused kernel over ITS surviving blocks only and
+    yields a partial (M, d). b2 is NOT folded into the per-shard flush
+    (it would be added tp times under the cross-shard reduction); it
+    stays whole on the container for the driver to add once.
+    """
     w1 = np.asarray(w1, np.float32)
     squeeze = w1.ndim == 2
 
@@ -142,13 +197,23 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
     b1, b3, b2 = _lift(b1), _lift(b3), _lift(b2)
     L, d, F = w1.shape
     bf = _fit_block(F, block_f)
+    if tp > 1:
+        assert (F // bf) % tp == 0, (F, bf, tp)
 
-    packs = [sasp_ops.build_fused_ffn(
-        w1[i], w3[i], w2[i], block_f=bf,
-        b1=None if b1 is None else b1[i],
-        b3=None if b3 is None else b3[i],
-        b2=None if b2 is None else b2[i],
-        quantize=quantize) for i in range(L)]
+    def _build(i, s):
+        if tp == 1:
+            sl = slice(None)
+        else:
+            fs = F // tp
+            sl = slice(s * fs, (s + 1) * fs)
+        return sasp_ops.build_fused_ffn(
+            w1[i][:, sl], w3[i][:, sl], w2[i][sl, :], block_f=bf,
+            b1=None if b1 is None else b1[i][sl],
+            b3=None if b3 is None else b3[i][sl],
+            b2=None if (b2 is None or tp > 1) else b2[i],
+            quantize=quantize)
+
+    packs = [_build(i, s) for i in range(L) for s in range(tp)]
     nv = max(np.asarray(p[0]).shape[0] for p in packs)
 
     def _pad_visits(p):
@@ -172,17 +237,29 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
     repacked = [_pad_visits(p) for p in packs]
 
     def _stack(idx):
-        return jnp.asarray(np.stack([np.asarray(p[idx]) for p in
-                                     repacked]))
+        a = np.stack([np.asarray(p[idx]) for p in repacked])
+        if tp > 1:                         # (L·tp, …) -> (L, tp, …)
+            a = a.reshape((L, tp) + a.shape[1:])
+        return jnp.asarray(a)
 
     w1v, w3v, w2v = _stack(0), _stack(1), _stack(2)
-    b1v, b3v, b2v = _stack(3), _stack(4), _stack(5)
+    b1v, b3v = _stack(3), _stack(4)
+    if tp > 1:
+        # per-shard packs carried zero b2 placeholders; keep the real
+        # bias whole — drivers add it once after the shard reduction
+        b2v = jnp.asarray(b2 if b2 is not None
+                          else np.zeros((L, d), np.float32))
+    else:
+        b2v = _stack(5)
     if repacked[0][6] is None:
         s1 = s3 = s2 = None
     else:
-        s1 = jnp.asarray(np.stack([np.asarray(p[6][0]) for p in repacked]))
-        s3 = jnp.asarray(np.stack([np.asarray(p[6][1]) for p in repacked]))
-        s2 = jnp.asarray(np.stack([np.asarray(p[6][2]) for p in repacked]))
+        def _stack_s(idx):
+            a = np.stack([np.asarray(p[6][idx]) for p in repacked])
+            if tp > 1:
+                a = a.reshape((L, tp) + a.shape[1:])
+            return jnp.asarray(a)
+        s1, s3, s2 = _stack_s(0), _stack_s(1), _stack_s(2)
     if squeeze:
         w1v, w3v, w2v = w1v[0], w3v[0], w2v[0]
         b1v, b3v, b2v = b1v[0], b3v[0], b2v[0]
@@ -190,7 +267,8 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
         s3 = None if s3 is None else s3[0]
         s2 = None if s2 is None else s2[0]
     return PackedFFN(w1v, w3v, w2v, b1v, b3v, b2v, d_model=d, d_ff=F,
-                     block_f=bf, act=act, s1=s1, s3=s3, s2=s2)
+                     block_f=bf, act=act, s1=s1, s3=s3, s2=s2,
+                     shards=tp)
 
 
 # ---------------------------------------------------------------------------
@@ -224,10 +302,25 @@ def packed_ffn_apply(x: jnp.ndarray, pf: PackedFFN, *,
 # ---------------------------------------------------------------------------
 
 
+def _tp_fits(w: np.ndarray, kind: str, cfg: ModelConfig, tp: int) -> bool:
+    """Does the matrix's block grid split evenly into ``tp`` shards?"""
+    if kind == "col":
+        N = w.shape[-1]
+        return (N // _fit_block(N, cfg.sasp.block_n)) % tp == 0
+    K = w.shape[-2]
+    return (K // _fit_block(K, cfg.sasp.block_k)) % tp == 0
+
+
 def _pack_matrix_group(node: Params, names, cfg: ModelConfig,
-                       quantize: bool, act_for: Dict[str, Optional[str]]
+                       quantize: bool, act_for: Dict[str, Optional[str]],
+                       tp: int = 1,
+                       kinds: Optional[Dict[str, str]] = None
                        ) -> Optional[Dict[str, PackedSASPWeight]]:
-    out = {}
+    """Pack a group of matrices that serve together. TP sharding is
+    all-or-nothing across the group (the sharded driver keeps the whole
+    group inside one shard_map body, so every matrix must split)."""
+    kinds = kinds or {}
+    mats = []
     for name in names:
         entry = node.get(name)
         w = None if entry is None else _dense_weight(entry)
@@ -238,14 +331,25 @@ def _pack_matrix_group(node: Params, names, cfg: ModelConfig,
         bias = None
         if isinstance(entry, dict) and "b" in entry:
             bias = np.asarray(entry["b"], np.float32)
+        mats.append((name, w, bias))
+    if tp > 1 and any(not _tp_fits(w, kinds.get(n, "col"), cfg, tp)
+                      for n, w, _ in mats):
+        tp = 1
+    out = {}
+    for name, w, bias in mats:
         out[name] = pack_weight(
             w, block_k=cfg.sasp.block_k, block_n=cfg.sasp.block_n,
-            bias=bias, act=act_for.get(name), quantize=quantize)
+            bias=bias, act=act_for.get(name), quantize=quantize,
+            tp=tp, shard_kind=kinds.get(name, "col"))
     return out or None
 
 
+_FFN_KINDS = {"w1": "col", "w3": "col", "w2": "row"}
+_ATTN_KINDS = {"wq": "col", "wk": "col", "wv": "col", "wo": "row"}
+
+
 def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
-                 fuse_ffn: bool, attn: bool) -> Params:
+                 fuse_ffn: bool, attn: bool, tp: int = 1) -> Params:
     slot = dict(slot)
 
     ffn = slot.get("ffn")
@@ -261,16 +365,20 @@ def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
             b2 = ffn["w2"].get("b") if isinstance(ffn["w2"], dict) \
                 else None
             if gated and fuse_ffn and w3 is not None:
+                F = w1.shape[-1]
+                bf = _fit_block(F, cfg.sasp.block_n)
+                tp_f = tp if tp > 1 and (F // bf) % tp == 0 else 1
                 ffn["sasp_fused"] = pack_ffn(
                     w1, w3, w2, block_f=cfg.sasp.block_n, act=cfg.act,
                     b1=ffn["w1"].get("b"), b3=ffn["w3"].get("b"),
-                    b2=b2, quantize=quantize)
+                    b2=b2, quantize=quantize, tp=tp_f)
             else:
                 # per-matrix packed: act folds into w1's flush epilogue,
                 # the gate product (if any) stays in jnp (models/ffn.py)
                 act_for = {"w1": cfg.act}
                 packed = _pack_matrix_group(
-                    ffn, _FFN_MATS, cfg, quantize, act_for)
+                    ffn, _FFN_MATS, cfg, quantize, act_for, tp=tp,
+                    kinds=_FFN_KINDS)
                 if packed is not None:
                     ffn["sasp_packed"] = packed
             slot["ffn"] = ffn
@@ -279,7 +387,12 @@ def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
     if attn and isinstance(mixer, dict) and all(
             m in mixer for m in _ATTN_MATS):
         mixer = dict(mixer)
-        packed = _pack_matrix_group(mixer, _ATTN_MATS, cfg, quantize, {})
+        # col shards of wq/wk/wv must land on head boundaries (RoPE and
+        # the (B, S, H, D) reshape are per head)
+        tp_a = tp if (tp > 1 and cfg.num_heads % tp == 0
+                      and cfg.num_kv_heads % tp == 0) else 1
+        packed = _pack_matrix_group(mixer, _ATTN_MATS, cfg, quantize, {},
+                                    tp=tp_a, kinds=_ATTN_KINDS)
         if packed is not None:
             mixer["sasp_packed"] = packed
             slot["mixer"] = mixer
@@ -290,8 +403,10 @@ def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
 def deploy_packed(params: Params, cfg: ModelConfig, *,
                   quantize: Optional[bool] = None,
                   fuse_ffn: bool = True,
-                  attn: Optional[bool] = None) -> Tuple[Params,
-                                                        ModelConfig]:
+                  attn: Optional[bool] = None,
+                  mesh=None,
+                  tp: Optional[int] = None) -> Tuple[Params,
+                                                     ModelConfig]:
     """Convert a (pruned) param tree into packed serving form.
 
     Returns ``(params', cfg')`` where every dense/MoE-free FFN (and, for
@@ -305,10 +420,16 @@ def deploy_packed(params: Params, cfg: ModelConfig, *,
 
     quantize: pack values as int8 + per-block scales (default: follow
     ``cfg.sasp.quantize``). fuse_ffn: use the whole-FFN fused container
-    for gated FFNs (False = per-matrix packed GEMMs).
+    for gated FFNs (False = per-matrix packed GEMMs). mesh / tp:
+    TP-shard every visit list by output-block shard for the mesh's
+    'model' axis (DESIGN.md §10) — each shard carries only ITS surviving
+    blocks, so per-shard pruning savings stay local; matrices whose
+    block grid does not divide fall back to unsharded containers.
     """
     quantize = cfg.sasp.quantize if quantize is None else quantize
     attn = (cfg.sasp.scope == "all") if attn is None else attn
+    if tp is None:
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
 
     out = dict(params)
     segs = []
@@ -317,7 +438,7 @@ def deploy_packed(params: Params, cfg: ModelConfig, *,
         for slot_name, slot in seg.items():
             new_seg[slot_name] = _deploy_slot(
                 slot, cfg, quantize=quantize, fuse_ffn=fuse_ffn,
-                attn=attn)
+                attn=attn, tp=tp)
         segs.append(new_seg)
     out["segments"] = tuple(segs)
     cfg = dataclasses.replace(
@@ -337,15 +458,16 @@ def packed_summary(params: Params) -> Dict[str, float]:
             n_packed += 1
             packed_bytes += node.nbytes()
             K, N = node.shape
-            lead = node.vals.shape[:-3]
-            dense_bytes += int(np.prod(lead, dtype=np.int64)) * K * N * 4
+            lead = node.vals.shape[:-3]     # (L?, tp?) — tp spans ONE
+            dense_bytes += int(np.prod(lead, dtype=np.int64)) \
+                // node.shards * K * N * 4  # dense matrix, not tp of them
         elif isinstance(node, PackedFFN):
             n_fused += 1
             for a in (node.w1v, node.w3v, node.w2v):
                 packed_bytes += a.size * a.dtype.itemsize
             lead = node.w1v.shape[:-3]
-            dense_bytes += int(np.prod(lead, dtype=np.int64)) * \
-                3 * node.d_model * node.d_ff * 4
+            dense_bytes += int(np.prod(lead, dtype=np.int64)) \
+                // node.shards * 3 * node.d_model * node.d_ff * 4
         elif isinstance(node, dict):
             for v in node.values():
                 visit(v)

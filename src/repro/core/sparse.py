@@ -97,11 +97,23 @@ class PackedSASPWeight:
 
     Static aux: shape (K, N), block (bk, bn), act (epilogue activation,
     folded into the last-visit flush; None = identity).
+
+    TP sharding (DESIGN.md §10): ``shards > 1`` means every array carries
+    an extra shard axis right before the visit dims — vals
+    (…, tp, nnz_s, bk, bn), kn (…, tp, 2, nnz_s) — holding one
+    shard-LOCAL visit list per TP rank. ``shard_kind`` says how the block
+    list was partitioned: ``"col"`` by output-column block (kn n-coords
+    are shard-local; bias reshaped to (…, tp, N/tp) and still fused),
+    ``"row"`` by input-row block (kn k-coords shard-local; partial
+    outputs need a cross-shard reduction, so bias stays (…, N) and is
+    added after it). Per-shard lists are padded to one shared static
+    nnz_s with the same dup-last-visit trick as the layer stacking.
     """
 
     def __init__(self, vals, kn, shape: Tuple[int, int],
                  block: Tuple[int, int], scale=None, bias=None,
-                 act: Optional[str] = None):
+                 act: Optional[str] = None, shards: int = 1,
+                 shard_kind: Optional[str] = None):
         self.vals = vals
         self.kn = kn
         self.shape = tuple(shape)
@@ -109,22 +121,27 @@ class PackedSASPWeight:
         self.scale = scale
         self.bias = bias
         self.act = act
+        self.shards = shards
+        self.shard_kind = shard_kind
 
     def tree_flatten(self):
         return ((self.vals, self.kn, self.scale, self.bias),
-                (self.shape, self.block, self.act))
+                (self.shape, self.block, self.act, self.shards,
+                 self.shard_kind))
 
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
         return ((ga("vals"), self.vals), (ga("kn"), self.kn),
                 (ga("scale"), self.scale), (ga("bias"), self.bias)), \
-            (self.shape, self.block, self.act)
+            (self.shape, self.block, self.act, self.shards,
+             self.shard_kind)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         vals, kn, scale, bias = children
-        shape, block, act = aux
-        return cls(vals, kn, shape, block, scale, bias, act)
+        shape, block, act, shards, shard_kind = aux
+        return cls(vals, kn, shape, block, scale, bias, act, shards,
+                   shard_kind)
 
     @property
     def nnz(self) -> int:
@@ -139,8 +156,11 @@ class PackedSASPWeight:
         return b
 
     def __repr__(self):
+        sh = f", shards={self.shards}:{self.shard_kind}" \
+            if self.shards > 1 else ""
         return (f"PackedSASPWeight(shape={self.shape}, "
-                f"block={self.block}, nnz={self.nnz}, act={self.act})")
+                f"block={self.block}, nnz={self.nnz}, act={self.act}"
+                f"{sh})")
 
 
 jax.tree_util.register_pytree_with_keys(
@@ -161,11 +181,18 @@ class PackedFFN:
     axis makes it ``lax.scan``-sliceable (per-layer packs padded to one
     shared nv with zero-w2v visits). Static aux: d_model, d_ff, block_f,
     act.
+
+    TP sharding (DESIGN.md §10): ``shards > 1`` adds a shard axis before
+    the visit dims — w1v (…, tp, nv_s, d, bf) — partitioning the d_ff
+    visit schedule contiguously by d_ff column-block shard. Each shard's
+    w2 down-projection yields a PARTIAL (M, d); drivers reduce across
+    shards (psum or reduce-scatter + int8 all-gather). b2 stays (…, d)
+    and is added once, after the reduction.
     """
 
     def __init__(self, w1v, w3v, w2v, b1, b3, b2, d_model: int,
                  d_ff: int, block_f: int, act: str, s1=None, s3=None,
-                 s2=None):
+                 s2=None, shards: int = 1):
         self.w1v, self.w3v, self.w2v = w1v, w3v, w2v
         self.b1, self.b3, self.b2 = b1, b3, b2
         self.s1, self.s3, self.s2 = s1, s3, s2
@@ -173,32 +200,37 @@ class PackedFFN:
         self.d_ff = d_ff
         self.block_f = block_f
         self.act = act
+        self.shards = shards
 
     def tree_flatten(self):
         return ((self.w1v, self.w3v, self.w2v, self.b1, self.b3, self.b2,
                  self.s1, self.s3, self.s2),
-                (self.d_model, self.d_ff, self.block_f, self.act))
+                (self.d_model, self.d_ff, self.block_f, self.act,
+                 self.shards))
 
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
         names = ("w1v", "w3v", "w2v", "b1", "b3", "b2", "s1", "s3", "s2")
         return tuple((ga(n), getattr(self, n)) for n in names), \
-            (self.d_model, self.d_ff, self.block_f, self.act)
+            (self.d_model, self.d_ff, self.block_f, self.act,
+             self.shards)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         w1v, w3v, w2v, b1, b3, b2, s1, s3, s2 = children
-        d_model, d_ff, block_f, act = aux
+        d_model, d_ff, block_f, act, shards = aux
         return cls(w1v, w3v, w2v, b1, b3, b2, d_model, d_ff, block_f,
-                   act, s1, s3, s2)
+                   act, s1, s3, s2, shards)
 
     @property
     def nv(self) -> int:
         return self.w1v.shape[-3]
 
     def __repr__(self):
+        sh = f", shards={self.shards}" if self.shards > 1 else ""
         return (f"PackedFFN(d={self.d_model}, d_ff={self.d_ff}, "
-                f"bf={self.block_f}, nv={self.nv}, act={self.act!r})")
+                f"bf={self.block_f}, nv={self.nv}, act={self.act!r}"
+                f"{sh})")
 
 
 jax.tree_util.register_pytree_with_keys(

@@ -28,6 +28,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.pruning import apply_block_mask
+from repro.distribution import context as dctx
 from repro.models.modules import act_fn
 
 
@@ -161,8 +162,8 @@ def moe_ffn_ep(p: Dict, cfg: ModelConfig, x: jnp.ndarray, mesh: Mesh
                     d3 if has["w3"] else None,
                     d2 if has["w2"] else None)
 
-    fn = jax.shard_map(body_wrap, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = dctx.shard_map(body_wrap, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
     y, aux = fn(x, p["router"]["w"].astype(jnp.float32),
                 w1, w3 if w3 is not None else jnp.zeros_like(w1),
                 w2, mask_or_dummy("w1"), mask_or_dummy("w3"),
@@ -190,11 +191,10 @@ def moe_ffn_dp(p: Dict, cfg: ModelConfig, x: jnp.ndarray, mesh: Mesh
         y, aux = moe_ffn_local(p_loc, cfg, x_loc)
         return y, jax.lax.pmean(aux, axes)
 
-    fn = jax.shard_map(
+    fn = dctx.shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None, None), P()),
-        out_specs=(P(axes, None, None), P()),
-        check_vma=False)
+        out_specs=(P(axes, None, None), P()))
     return fn(x, p)
 
 

@@ -18,6 +18,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.sparse import PackedFFN, PackedSASPWeight
 
 
 def dp_axes(mesh: Mesh, profile: str = "tp") -> Tuple[str, ...]:
@@ -155,16 +156,77 @@ def _rerank(spec: P, shape: Tuple[int, ...]) -> P:
     return P(*tail)
 
 
+# ---------------------------------------------------------------------------
+# Packed deployment containers (core.deploy, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def axis_at(rank: int, from_end: int, axis) -> P:
+    """P with ``axis`` at position rank-from_end, None elsewhere — the
+    one place that encodes 'the shard axis sits from_end dims before the
+    trailing visit dims' for packed containers (also used by the
+    shard_map drivers in models/ffn.py)."""
+    spec = [None] * rank
+    spec[rank - from_end] = axis
+    return P(*spec)
+
+
+def packed_sharding(node, mesh: Mesh):
+    """Sharding pytree (same container type, NamedSharding leaves) for a
+    TP-sharded PackedSASPWeight / PackedFFN: the shard axis maps onto the
+    mesh 'model' axis so each TP rank holds exactly its shard-local visit
+    list. Containers whose ``shards`` does not match the mesh replicate
+    (the drivers fall back to a per-shard loop there)."""
+    repl = NamedSharding(mesh, P())
+    t = node.shards
+    if t <= 1 or axis_size(mesh, "model") != t:
+        return jax.tree.map(lambda _: repl, node)
+
+    def at(arr, from_end):
+        if arr is None:
+            return None
+        return NamedSharding(mesh, axis_at(arr.ndim, from_end, "model"))
+
+    if isinstance(node, PackedSASPWeight):
+        return PackedSASPWeight(
+            vals=at(node.vals, 4),          # (…, tp, nnz, bk, bn)
+            kn=at(node.kn, 3),              # (…, tp, 2, nnz)
+            shape=node.shape, block=node.block,
+            scale=at(node.scale, 2),        # (…, tp, nnz)
+            bias=(at(node.bias, 2)          # col: (…, tp, N/tp)
+                  if node.shard_kind == "col" else
+                  None if node.bias is None else repl),  # row: whole (…, N)
+            act=node.act, shards=node.shards,
+            shard_kind=node.shard_kind)
+    assert isinstance(node, PackedFFN), type(node)
+    return PackedFFN(
+        w1v=at(node.w1v, 4), w3v=at(node.w3v, 4),   # (…, tp, nv, d|bf, …)
+        w2v=at(node.w2v, 4),
+        b1=at(node.b1, 3), b3=at(node.b3, 3),       # (…, tp, nv, bf)
+        b2=None if node.b2 is None else repl,       # whole (…, d)
+        d_model=node.d_model, d_ff=node.d_ff, block_f=node.block_f,
+        act=node.act, s1=at(node.s1, 2), s3=at(node.s3, 2),
+        s2=at(node.s2, 2), shards=node.shards)
+
+
+_PACKED_TYPES = (PackedSASPWeight, PackedFFN)
+
+
 def param_shardings(cfg: ModelConfig, params_shape, mesh: Mesh,
                     profile: str = "tp"):
     """Map a params eval_shape pytree -> NamedSharding pytree.
     profile='dp_only': replicate everything (pure data parallelism —
-    the small-model profile; see EXPERIMENTS.md §Perf C)."""
+    the small-model profile; see EXPERIMENTS.md §Perf C). Packed
+    deployment containers (``sasp_packed`` / ``sasp_fused``) are handled
+    whole by :func:`packed_sharding` — their shard axis carries the
+    shard-local visit lists onto 'model'."""
     if profile == "dp_only":
         return jax.tree.map(lambda _: NamedSharding(mesh, P()),
                             params_shape)
 
     def fn(path, leaf):
+        if isinstance(leaf, _PACKED_TYPES):
+            return packed_sharding(leaf, mesh)
         spec = spec_for_param(cfg, path, leaf.shape, mesh)
         # drop axes that don't divide (safety)
         fixed = []
@@ -173,7 +235,9 @@ def param_shardings(cfg: ModelConfig, params_shape, mesh: Mesh,
             fixed.append(ax if _fits(dim, mesh, ax) else None)
         return NamedSharding(mesh, P(*fixed))
 
-    return jax.tree_util.tree_map_with_path(fn, params_shape)
+    return jax.tree_util.tree_map_with_path(
+        fn, params_shape,
+        is_leaf=lambda x: isinstance(x, _PACKED_TYPES))
 
 
 # ---------------------------------------------------------------------------

@@ -3,9 +3,23 @@ this module never touches jax device state (the dry-run sets
 ``xla_force_host_platform_device_count`` before first jax init)."""
 from __future__ import annotations
 
+import os
+
 import jax
 
 from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def ensure_fake_cpu_devices(n: int) -> None:
+    """Give the CPU platform ``n`` fake devices (mesh runs on dev boxes /
+    CI). MUST be called before JAX initializes its backends — before the
+    first jax operation; merely importing jax is fine. No-op when the
+    flag is already set; harmless on real accelerators (the flag only
+    affects the CPU platform's device count)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n} " + flags)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -20,6 +20,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Optional
 
 import numpy as np
 import jax
@@ -38,9 +39,12 @@ PATHS = ("dense", "masked", "bsr", "kernel", "packed")
 def build_serving_params(params, cfg, *, path: str, sparsity: float,
                          int8_weights: bool = False,
                          block_k: int = 32, block_n: int = 32,
-                         scope: str = "ffn", verbose: bool = True):
+                         scope: str = "ffn", verbose: bool = True,
+                         mesh=None):
     """Deploy `params` for serving along one execution path. Returns
-    (params, cfg) ready for the Engine."""
+    (params, cfg) ready for the Engine. ``mesh``: TP-shard the packed
+    visit lists by the mesh's 'model' axis (packed path only,
+    DESIGN.md §10)."""
     assert path in PATHS, path
     if path == "dense" or sparsity <= 0:
         return params, cfg
@@ -66,13 +70,35 @@ def build_serving_params(params, cfg, *, path: str, sparsity: float,
         return params, cfg
     # packed: compact kernel containers, built once at load time
     from repro.core.deploy import deploy_packed, packed_summary
-    params, cfg = deploy_packed(params, cfg)
+    params, cfg = deploy_packed(params, cfg, mesh=mesh)
     if verbose:
         s = packed_summary(params)
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        shard = f", {tp}-way shard-local visit lists" if tp > 1 else ""
         print(f"packed: {s['n_packed_matrices']} matrices + "
               f"{s['n_fused_ffns']} fused FFNs, "
-              f"{s['compression']:.2f}x dense bytes")
+              f"{s['compression']:.2f}x dense bytes{shard}")
     return params, cfg
+
+
+def parse_mesh(spec: Optional[str]):
+    """'dp,tp' -> a (data, model) Mesh, forcing enough fake CPU devices
+    when the host platform would otherwise come up short (harmless on
+    real accelerators: the flag only affects the CPU platform, and it
+    must be set before JAX first initializes its backends)."""
+    if not spec:
+        return None
+    dp, tp = (int(v) for v in spec.split(","))
+    from repro.launch.mesh import ensure_fake_cpu_devices
+    ensure_fake_cpu_devices(dp * tp)
+    import jax
+    if len(jax.devices()) < dp * tp:
+        raise SystemExit(
+            f"--mesh {spec} needs {dp * tp} devices, have "
+            f"{len(jax.devices())} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={dp * tp} before "
+            "any jax import initializes the backend)")
+    return jax.make_mesh((dp, tp), ("data", "model"))
 
 
 def main():
@@ -93,7 +119,15 @@ def main():
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serve under a (data, model) mesh: caches and "
+                         "decode state carry NamedShardings, packed "
+                         "visit lists are TP-sharded per output-block "
+                         "shard (e.g. --mesh 1,2)")
     args = ap.parse_args()
+
+    # BEFORE any backend-initializing jax call: may set XLA_FLAGS
+    mesh = parse_mesh(args.mesh)
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -111,7 +145,10 @@ def main():
 
     params, cfg = build_serving_params(
         params, cfg, path=args.path, sparsity=args.sasp,
-        int8_weights=args.int8_weights, scope=args.scope)
+        int8_weights=args.int8_weights, scope=args.scope, mesh=mesh)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} "
+              "devices")
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -124,7 +161,7 @@ def main():
             for i in range(args.requests)]
 
     eng = Engine(params, cfg, batch_slots=args.slots,
-                 cache_len=args.cache_len)
+                 cache_len=args.cache_len, mesh=mesh)
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0

@@ -111,15 +111,25 @@ def attn_init(key, cfg: ModelConfig) -> Dict:
     return p
 
 
-def _proj(p: Dict, name: str, x: jnp.ndarray) -> jnp.ndarray:
+def _proj(p: Dict, name: str, x: jnp.ndarray,
+          cfg: Optional[ModelConfig] = None) -> jnp.ndarray:
     """One attention projection, routed through the packed tile-skip
     kernel when a deployment container is attached (core.deploy,
     DESIGN.md §9) — QKV bias is fused into the kernel's flush epilogue
-    there, so dense_apply's bias add must not run twice."""
+    there, so dense_apply's bias add must not run twice. TP-sharded
+    containers (DESIGN.md §10) run their shard-local visit lists inside
+    shard_map: wq/wk/wv col-sharded on head boundaries, wo row-sharded
+    with a psum epilogue (or rs+int8-ag when cfg.tp_comm opts in)."""
     packed = p.get("sasp_packed")
     if packed is not None and name in packed:
+        pw = packed[name]
+        if pw.shards > 1:
+            from repro.models.ffn import packed_mm_sharded
+            *lead, K = x.shape
+            y = packed_mm_sharded(x.reshape(-1, K), pw, cfg)
+            return y.reshape(*lead, pw.shape[1])
         from repro.core.deploy import packed_matmul
-        return packed_matmul(x, packed[name])
+        return packed_matmul(x, pw)
     return dense_apply(p[name], x)
 
 
@@ -132,9 +142,9 @@ def _project_qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions):
     dt = x.dtype
     from repro.distribution import context as dctx
     dp = dctx.dp_axes()
-    q = _proj(p, "wq", x).reshape(B, S, h, hd)
-    k = _proj(p, "wk", x).reshape(B, S, kvh, hd)
-    v = _proj(p, "wv", x).reshape(B, S, kvh, hd)
+    q = _proj(p, "wq", x, cfg).reshape(B, S, h, hd)
+    k = _proj(p, "wk", x, cfg).reshape(B, S, kvh, hd)
+    v = _proj(p, "wv", x, cfg).reshape(B, S, kvh, hd)
     if dp and S > 1:
         tp = dctx.axis_size("model")
         if tp > 1 and (h % tp or kvh % tp):
@@ -271,10 +281,10 @@ def _attend_maybe_sharded(qg, k, v, positions, window, cap):
     def body(qq, kk, vv, pos):
         return fn(qq, kk, vv, pos, pos)
 
-    return jax.shard_map(
+    return dctx.shard_map(
         body, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, pos_spec),
-        out_specs=q_spec, check_vma=False,
+        out_specs=q_spec,
     )(qg, k, v, positions)
 
 
@@ -292,7 +302,7 @@ def attn_apply_full(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     out = _attend_maybe_sharded(qg, k, v, positions, window,
                                 cfg.logit_softcap)
     out = out.reshape(B, S, h * hd).astype(x.dtype)
-    y = _proj(p, "wo", out)
+    y = _proj(p, "wo", out, cfg)
     return y, (k, v)
 
 
@@ -348,7 +358,7 @@ def attn_apply_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
                      v_read.astype(qg.dtype),
                      preferred_element_type=jnp.float32)
     out = out.reshape(B, 1, h * hd).astype(x.dtype)
-    return _proj(p, "wo", out), cache
+    return _proj(p, "wo", out, cfg), cache
 
 
 def build_cache_from_prefill(k: jnp.ndarray, v: jnp.ndarray,

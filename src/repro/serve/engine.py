@@ -24,9 +24,15 @@ Serving fast path (DESIGN.md §9):
 * **Device-side length/EOS masking** — per-slot remaining-token budgets
   and EOS ids live in device arrays; the decode step returns done flags
   and zeros the sampled token of idle slots.
+* **Mesh-native serving** (DESIGN.md §10) — ``Engine(..., mesh=...)``
+  places params (incl. TP-sharded packed containers) and KV caches with
+  NamedShardings and runs every prefill/decode under the active-mesh
+  context, so the shard_map packed drivers and SDPA/TP paths engage.
+  Greedy streams are bit-identical to the single-device packed path.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 from functools import partial
 from typing import List, Optional
@@ -64,12 +70,26 @@ def _sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
-                 cache_len: int = 512, rng_seed: int = 0):
+                 cache_len: int = 512, rng_seed: int = 0, mesh=None,
+                 profile: str = "tp"):
+        self.mesh = mesh
+        self.profile = profile
+        if mesh is not None:
+            from repro.distribution import sharding as shd
+            psh = shd.param_shardings(cfg, jax.eval_shape(lambda: params),
+                                      mesh, profile)
+            params = jax.device_put(params, psh)
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
         self.cache_len = cache_len
         self.caches = lm.init_caches(params, cfg, batch_slots, cache_len)
+        if mesh is not None:
+            from repro.distribution import sharding as shd
+            csh = shd.cache_shardings(
+                cfg, mesh, batch_slots,
+                jax.eval_shape(lambda: self.caches))
+            self.caches = jax.device_put(self.caches, csh)
         self.pos = np.zeros((batch_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
@@ -93,6 +113,18 @@ class Engine:
         return nxt, done, caches, key
 
     # ------------------------------------------------------------------
+    def _mesh_ctx(self):
+        """Active-mesh scope for every traced/executed model call: the
+        shard_map packed drivers and TP/SP paths key off
+        ``distribution.context.active_mesh()`` at trace time."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distribution import context as dctx
+        stack = contextlib.ExitStack()
+        stack.enter_context(self.mesh)
+        stack.enter_context(dctx.use_mesh(self.mesh, self.profile))
+        return stack
+
     def submit(self, req: Request):
         self.queue.append(req)
 
@@ -190,6 +222,10 @@ class Engine:
     def step(self) -> List[Request]:
         """Admit queued requests, run one decode step, retire finished.
         Returns completed requests."""
+        with self._mesh_ctx():
+            return self._step_inner()
+
+    def _step_inner(self) -> List[Request]:
         self._admit()
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]

@@ -108,8 +108,9 @@ def mode_grad_compress():
         y, res = compressed_psum(x_loc[0], "pod", None)
         return y[None], res[None]
 
+    from repro.distribution.context import shard_map
     with mesh:
-        y, res = jax.jit(jax.shard_map(
+        y, res = jax.jit(shard_map(
             body, mesh=mesh, in_specs=P("pod", None),
             out_specs=(P("pod", None), P("pod", None))))(x)
     exact = jnp.mean(x, axis=0)
@@ -214,6 +215,55 @@ def mode_rs_ag_int8_ffn():
     rel = float(jnp.max(jnp.abs(y0 - y1))
                 / (jnp.max(jnp.abs(y0)) + 1e-9))
     out(rel=rel)
+
+
+def mode_packed_serve_mesh():
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import build_serving_params
+    from repro.models import lm
+    from repro.serve.engine import Engine, Request
+
+    cfg0 = reduced(get_config("qwen3-32b"), layers=2, d_model=64,
+                   vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, 128, size=(8 + 7 * i,))
+                        .astype(np.int32), max_new_tokens=6)
+                for i in range(3)]
+
+    def streams(params, cfg, mesh=None):
+        eng = Engine(params, cfg, batch_slots=2, cache_len=64, mesh=mesh)
+        return {r.rid: r.out_tokens for r in eng.run(reqs())}
+
+    # scope="all" exercises BOTH sharded drivers: the fused gated-FFN
+    # kernel (d_ff visit shards + reduction) and the per-matrix packed
+    # attention projections (col-sharded wq/wk/wv, row-sharded wo).
+    # sparsity=0.25 (NOT 0.5): at 0.5 this reduced config prunes the
+    # whole d_ff grid, the fused FFN output is identically zero, and the
+    # bit-identity check has no discriminative power over the reduction.
+    deploy = dict(path="packed", sparsity=0.25, block_k=8, block_n=8,
+                  scope="all", verbose=False)
+    p1, c1 = build_serving_params(params0, cfg0, **deploy)
+    s_ref = streams(p1, c1)
+
+    # the fused path must actually contribute signal (guards the check
+    # above against config drift re-zeroing the FFN)
+    from repro.core.deploy import packed_ffn_apply
+    f0 = jax.tree.map(lambda a: a[0],
+                      p1["segments"][0]["slot0"]["ffn"]["sasp_fused"])
+    probe = packed_ffn_apply(jnp.ones((2, cfg0.d_model), jnp.float32), f0)
+    fused_signal = float(jnp.abs(probe).max())
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    p2, c2 = build_serving_params(params0, cfg0, mesh=mesh, **deploy)
+    s_mesh = streams(p2, c2, mesh=mesh)
+    out(equal=int(s_ref == s_mesh), n=len(s_ref),
+        fused_signal=fused_signal,
+        streams_ref={str(k): v for k, v in s_ref.items()},
+        streams_mesh={str(k): v for k, v in s_mesh.items()})
 
 
 if __name__ == "__main__":

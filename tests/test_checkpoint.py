@@ -82,6 +82,7 @@ def test_shape_mismatch_raises(tmp_path):
         mgr.restore(jax.eval_shape(lambda: bad))
 
 
+@pytest.mark.slow
 def test_restore_resumes_training(tmp_path):
     """Full loop: train 2 steps, checkpoint, restore, continue — states
     must match a run without interruption (deterministic data)."""

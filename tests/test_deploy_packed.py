@@ -76,6 +76,61 @@ def test_packed_summary_reports_compression():
     assert 0 < s["compression"] < 1.0      # strictly smaller than dense
 
 
+def _live_visits(vals) -> int:
+    """Visits whose block carries any nonzero value (padding visits are
+    zero-valued by construction)."""
+    v = np.asarray(vals)
+    return int(np.count_nonzero(np.any(v != 0, axis=(-2, -1))))
+
+
+@pytest.mark.parametrize("kind", ["col", "row"])
+def test_tp_shard_visit_counts_sum_to_unsharded(kind):
+    """TP-sharded packing (DESIGN.md §10) must conserve work: the
+    per-shard live visit counts sum to the unsharded nnz — no block is
+    dropped and none is double-visited."""
+    from repro.core.deploy import pack_weight
+
+    rng = np.random.default_rng(0)
+    K, N, bk, bn = 32, 64, 8, 8
+    w = rng.normal(size=(2, K, N)).astype(np.float32)      # L-stacked
+    mask = rng.random((2, K // bk, N // bn)) > 0.5
+    wz = (w.reshape(2, K // bk, bk, N // bn, bn)
+          * mask[:, :, None, :, None]).reshape(2, K, N)
+
+    pw0 = pack_weight(wz, block_k=bk, block_n=bn)
+    pw2 = pack_weight(wz, block_k=bk, block_n=bn, tp=2, shard_kind=kind)
+    assert pw2.shards == 2 and pw2.shard_kind == kind
+    assert pw2.vals.shape[:2] == (2, 2)        # (L, tp, nnz, bk, bn)
+    for layer in range(2):
+        ref = _live_visits(pw0.vals[layer])
+        got = sum(_live_visits(pw2.vals[layer, s]) for s in range(2))
+        assert got == ref == int(mask[layer].sum()), (layer, got, ref)
+
+
+def test_tp_sharded_deploy_single_device_parity():
+    """A mesh-deployed (TP-sharded) param tree must stay loadable and
+    exact on a single device: the shard-loop fallback drivers reproduce
+    the unsharded packed forward bit-for-bit (col shards) / within fp32
+    summation-order noise (row/fused reductions). sparsity=0.25 so the
+    FFN path carries nonzero signal (at 0.5 this reduced config prunes
+    the whole d_ff grid and the comparison proves nothing about the
+    shard reduction)."""
+    pruned, cfg = _pruned(scope="all", sparsity=0.25)
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    for fuse_ffn in (True, False):
+        pp0, c0 = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn)
+        pp2, c2 = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn, tp=2)
+        slot = pp2["segments"][0]["slot0"]
+        cont = slot["ffn"]["sasp_fused"] if fuse_ffn \
+            else slot["ffn"]["sasp_packed"]["w1"]
+        assert cont.shards == 2            # sharding actually engaged
+        assert slot["mixer"]["sasp_packed"]["wo"].shards == 2
+        ref = lm.forward(pp0, c0, toks)
+        got = lm.forward(pp2, c2, toks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_engine_packed_matches_masked_engine_tokens():
     pruned, cfg = _pruned(scope="ffn", sparsity=0.5)
     pp, pcfg = deploy_packed(pruned, cfg)

@@ -1,6 +1,7 @@
 """Multi-device distribution tests. Each test runs tests/dist_worker.py
 in a subprocess with 8 fake CPU devices (the main test process must keep
-seeing 1 device, so no XLA_FLAGS here)."""
+seeing 1 device, so no XLA_FLAGS here). All tests here are marked
+``slow``: the fast CI job skips them with ``-m "not slow"``."""
 import json
 import os
 import subprocess
@@ -8,7 +9,26 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 WORKER = os.path.join(os.path.dirname(__file__), "dist_worker.py")
+
+
+def _failure_summary(mode, p) -> str:
+    """Readable worker-failure report: the final traceback (trimmed) and
+    the stdout tail, instead of one assert line burying both."""
+    err = p.stderr.strip().splitlines()
+    tb_start = max((i for i, ln in enumerate(err)
+                    if ln.startswith("Traceback")), default=None)
+    tb = err[tb_start:] if tb_start is not None else err[-20:]
+    if len(tb) > 30:
+        tb = tb[:5] + ["    …"] + tb[-24:]
+    parts = [f"dist worker '{mode}' exited rc={p.returncode}"]
+    out_tail = p.stdout.strip().splitlines()[-3:]
+    if out_tail:
+        parts += ["--- worker stdout (tail) ---"] + out_tail
+    parts += ["--- worker traceback ---"] + (tb or ["<empty stderr>"])
+    return "\n".join(parts)
 
 
 def run_worker(mode, *args, timeout=420):
@@ -18,11 +38,13 @@ def run_worker(mode, *args, timeout=420):
     p = subprocess.run([sys.executable, WORKER, mode, *args],
                        capture_output=True, text=True, env=env,
                        timeout=timeout)
-    assert p.returncode == 0, f"worker failed:\n{p.stdout}\n{p.stderr}"
+    if p.returncode != 0:
+        pytest.fail(_failure_summary(mode, p), pytrace=False)
     for line in p.stdout.splitlines():
         if line.startswith("RESULT "):
             return json.loads(line[len("RESULT "):])
-    raise AssertionError(f"no RESULT line:\n{p.stdout}\n{p.stderr}")
+    pytest.fail(f"worker '{mode}' printed no RESULT line:\n{p.stdout}\n"
+                f"{p.stderr}", pytrace=False)
 
 
 def test_sharded_train_step_matches_single_device():
@@ -68,3 +90,18 @@ def test_rs_ag_int8_ffn_close_to_exact():
     B iter 5) stays within int8 resolution of the exact FFN."""
     r = run_worker("rs_ag_int8_ffn")
     assert r["rel"] < 2e-2
+
+
+def test_mesh_packed_serving_streams_bit_identical():
+    """Mesh-native packed serving (DESIGN.md §10): greedy decode streams
+    under a 2×2 (data, model) mesh — TP-sharded visit lists, sharded
+    caches, shard_map packed drivers for the fused FFN and the attention
+    projections — must be bit-identical to the single-device packed
+    path. (Deterministic, not flaky: fixed weights/prompts and XLA CPU
+    give reproducible reductions per JAX version. If a JAX upgrade ever
+    reassociates the fused psum enough to flip an argmax, this SHOULD
+    fail loudly — bit-identity is the ISSUE-2 acceptance contract.)"""
+    r = run_worker("packed_serve_mesh", timeout=560)
+    assert r["n"] == 3
+    assert r["fused_signal"] > 0      # the FFN reduction carries signal
+    assert r["equal"] == 1, (r["streams_ref"], r["streams_mesh"])

@@ -64,7 +64,8 @@ def test_smoke_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ["qwen3-32b", "gemma3-4b", "mamba2-780m",
-                                  "jamba-1.5-large-398b",
+                                  pytest.param("jamba-1.5-large-398b",
+                                               marks=pytest.mark.slow),
                                   "granite-moe-1b-a400m"])
 def test_decode_matches_forward(arch):
     cfg = _reduced(arch)

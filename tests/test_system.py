@@ -78,6 +78,7 @@ def _ter(params, cfg, overlay=None, n=3):
     return errs / tot
 
 
+@pytest.mark.slow
 def test_full_sasp_lifecycle():
     """Train dense -> prune mid-training (straight-through) -> deploy to
     BSR + INT8 -> QoS within budget and deployment paths agree."""
@@ -112,6 +113,7 @@ def test_full_sasp_lifecycle():
     assert float(jnp.abs(l_q - l_masked).max()) / denom < 0.05
 
 
+@pytest.mark.slow
 def test_large_tile_brittleness_live():
     """Live (uncached) check of paper §4.4 on a freshly trained model:
     at a fixed rate, bigger tiles hurt at least as much."""
