@@ -17,7 +17,16 @@ devices so the parent bench keeps its 1-device environment and every
 other row stays comparable to prior PRs' BENCH_engine.json. At 25%
 tile sparsity, NOT 50%: this reduced config prunes the whole d_ff grid
 at 0.5, which would make the bit-identity check vacuous for the
-sharded FFN reduction.
+sharded FFN reduction. The mesh section also measures the
+``tp_comm="rs_ag_int8"`` epilogue (reduce-scatter + int8 all-gather
+instead of psum) on the same deployment — ROADMAP asked for a wire-
+format decision datapoint beyond the psum-only rows.
+
+The throughput-under-load section (DESIGN.md §11) drives the sharded
+scheduler with Poisson arrivals and heterogeneous decode budgets, and
+reports tokens/sec + p50/p95 request latency for continuous batching
+vs the drain-batch baseline at the SAME slot count — the acceptance
+bar is continuous strictly faster.
 
 Standalone: PYTHONPATH=src python -m benchmarks.bench_engine
 writes BENCH_engine.json next to the repo root.
@@ -31,6 +40,7 @@ if __name__ == "__main__" and "--mesh-only" in sys.argv:
     from benchmarks.common import ensure_fake_cpu_devices
     ensure_fake_cpu_devices(2)
 
+import dataclasses
 import json
 import os
 import subprocess
@@ -104,6 +114,19 @@ def bench_engine_mesh() -> List:
                  1e6 / tok_s,
                  f"tok_s={tok_s:.2f};mesh=1x2;"
                  f"single_device_agree={agree}"))
+    # rs+int8-ag epilogue on the same deployment (ROADMAP: psum was the
+    # only measured TP reduction). int8 quantizes the reduced partials
+    # on the wire, so streams may drift from the exact-psum reference —
+    # the agree flag records whether greedy argmax survived at this size
+    c8 = dataclasses.replace(c, tp_comm="rs_ag_int8")
+    tok_s8, streams8 = _run_engine(p, c8, mesh=mesh)
+    agree8 = int(streams8 == ref_streams)
+    rows.append((f"engine/packed/mesh1x2_rs_ag_int8/"
+                 f"sp{MESH_SPARSITY:.2f}",
+                 1e6 / tok_s8,
+                 f"tok_s={tok_s8:.2f};mesh=1x2;tp_comm=rs_ag_int8;"
+                 f"single_device_agree={agree8};"
+                 f"vs_psum_x{tok_s8 / tok_s:.3f}"))
     return rows
 
 
@@ -127,10 +150,89 @@ def _mesh_rows_subprocess() -> List:
     for name, us, derived in rows:
         tok_s = 1e6 / us
         agree = "single_device_agree=1" in derived
-        print(f"  mesh 1x2 packed : {tok_s:7.1f} tok/s "
+        comm = "rs_ag_int8" if "rs_ag_int8" in name else "psum"
+        print(f"  mesh 1x2 packed ({comm:10s}): {tok_s:7.1f} tok/s "
               f"(vs single-device packed: {'==' if agree else '!='})")
     if not rows:
         print("  mesh 1x2: subprocess emitted no RESULT row")
+    return rows
+
+
+LOAD_REQ = 16
+LOAD_SLOTS = 3
+LOAD_MEAN_ARRIVAL_S = 0.005     # Poisson rate: fast enough to backlog
+LOAD_PROMPT_LEN = 10            # ONE length → admission-group shapes
+                                # (G, S) are all warmable up front
+# wide budget spread: the drain baseline idles (slots, max-in-batch)
+# on every batch, so heterogeneous budgets are exactly its weak spot
+LOAD_MAX_NEW = (2, 40, 4, 48, 8, 2, 36, 4, 24, 2, 44, 6)
+
+
+def _load_requests(vocab: int, n: int = LOAD_REQ,
+                   max_new=None) -> List[Request]:
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab,
+                                        size=(LOAD_PROMPT_LEN,))
+                    .astype(np.int32),
+                    max_new_tokens=(max_new or LOAD_MAX_NEW)[
+                        i % len(max_new or LOAD_MAX_NEW)])
+            for i in range(n)]
+
+
+def _warm_scheduler(sched, vocab: int):
+    """Compile every shape the timed run can hit: admission groups of
+    G = slots…1 (one prompt length) plus the batched decode step."""
+    for g in range(LOAD_SLOTS, 0, -1):
+        sched.run(_load_requests(vocab, n=g, max_new=(4,)))
+
+
+def bench_engine_load() -> List:
+    """Throughput under load (DESIGN.md §11): the sharded scheduler
+    serving Poisson arrivals with heterogeneous decode budgets —
+    continuous batching vs the drain-batch baseline at the SAME slot
+    count. Reports tokens/sec and p50/p95 submit-to-retire latency."""
+    from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+
+    rows = []
+    print("\n== scheduler under load (Poisson arrivals, "
+          f"{LOAD_REQ} reqs, {LOAD_SLOTS} slots) ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    arrivals = list(np.random.default_rng(11).exponential(
+        LOAD_MEAN_ARRIVAL_S, size=LOAD_REQ).cumsum())
+
+    results = {}
+    for mode, drain in (("continuous", False), ("drain", True)):
+        sched = ShardedScheduler(
+            params0, cfg0, ranks=1,
+            sched=SchedulerConfig(slots_per_rank=LOAD_SLOTS,
+                                  cache_len=64, drain=drain))
+        _warm_scheduler(sched, cfg0.vocab_size)
+        reqs = _load_requests(cfg0.vocab_size)
+        t0 = time.perf_counter()
+        done = sched.run(reqs, arrivals=arrivals)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        lats = sorted(r.latency for r in done)
+        p50 = lats[len(lats) // 2] * 1e3
+        p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))] * 1e3
+        tok_s = toks / dt
+        results[mode] = tok_s
+        print(f"  {mode:10s}: {tok_s:7.1f} tok/s  "
+              f"p50={p50:6.0f}ms p95={p95:6.0f}ms "
+              f"({len(done)} reqs, {toks} tokens)")
+        rows.append((f"engine/sched/{mode}/load", 1e6 / tok_s,
+                     f"tok_s={tok_s:.2f};p50_ms={p50:.1f};"
+                     f"p95_ms={p95:.1f};slots={LOAD_SLOTS};ranks=1;"
+                     f"reqs={LOAD_REQ};"
+                     f"poisson_mean_s={LOAD_MEAN_ARRIVAL_S}"))
+    speedup = results["continuous"] / results["drain"]
+    ok = speedup > 1.0
+    print(f"  continuous/drain: x{speedup:.2f} "
+          f"({'OK' if ok else 'REGRESSION: drain not slower!'})")
+    rows.append(("engine/sched_speedup/load", 0.0,
+                 f"x{speedup:.3f}_vs_drain_batch"))
     return rows
 
 
@@ -167,6 +269,7 @@ def bench_engine() -> List:
         rows.append((f"engine/packed_speedup/sp{sp:.2f}", 0.0,
                      f"x{speedup:.3f}_vs_percall_repack"))
     rows.extend(_mesh_rows_subprocess())
+    rows.extend(bench_engine_load())
     return rows
 
 

@@ -23,6 +23,20 @@ containers slice under scan exactly like every other stacked param
 Masks are recovered from the nonzero tile structure of the (already
 pruned) weights, so the conversion needs nothing beyond the deployed
 params themselves — pruning is static by deployment time (DESIGN.md §4).
+
+Container format in one breath (full spec: ``core/sparse.py``
+docstring): a sorted VISIT LIST per matrix — (n, k)-ordered surviving
+blocks for ``PackedSASPWeight``, d_ff column-blocks with global
+indices ``jv`` for ``PackedFFN`` — padded across layers/shards to one
+shared static nnz by duplicating the last visit with zero values, and
+TP-partitioned by SHARD KIND: ``col`` (shard-local output columns,
+fused bias/act) or ``row`` (shard-local input rows, partial outputs,
+bias after the cross-shard reduction, never an activation).
+
+Mesh-shape changes do NOT rebuild from here: ``reshard_packed`` (end
+of this file) slices and re-pads the existing visit lists to the new
+shard count, bit-identically to a from-scratch ``deploy_packed`` —
+see DESIGN.md §10 "Elastic re-deploy".
 """
 from __future__ import annotations
 
@@ -206,12 +220,16 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
         else:
             fs = F // tp
             sl = slice(s * fs, (s + 1) * fs)
-        return sasp_ops.build_fused_ffn(
+        pk = sasp_ops.build_fused_ffn(
             w1[i][:, sl], w3[i][:, sl], w2[i][sl, :], block_f=bf,
             b1=None if b1 is None else b1[i][sl],
             b3=None if b3 is None else b3[i][sl],
             b2=None if (b2 is None or tp > 1) else b2[i],
-            quantize=quantize)
+            quantize=quantize, return_visits=True)
+        jv = np.asarray(pk[-1])
+        if tp > 1:          # shard-local keep indices -> global d_ff blocks
+            jv = np.where(jv >= 0, jv + s * ((F // bf) // tp), -1)
+        return pk[:-1] + (jv.astype(np.int32),)
 
     packs = [_build(i, s) for i in range(L) for s in range(tp)]
     nv = max(np.asarray(p[0]).shape[0] for p in packs)
@@ -219,10 +237,9 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
     def _pad_visits(p):
         """Append zero visits up to the shared nv (zero w2v => padded
         visits contribute exactly nothing) — pack once, pad in place."""
-        w1v, w3v, w2v, b1v, b3v, b2v, sc = [np.asarray(a) if a is not
-                                            None and not isinstance(
-                                                a, tuple) else a
-                                            for a in p]
+        w1v, w3v, w2v, b1v, b3v, b2v, sc, jv = [
+            np.asarray(a) if a is not None and not isinstance(a, tuple)
+            else a for a in p]
         pad = nv - w1v.shape[0]
         if pad:
             def z(a):
@@ -230,9 +247,10 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
                     [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
             w1v, w3v, w2v = z(w1v), z(w3v), z(w2v)
             b1v, b3v = z(b1v), z(b3v)
+            jv = np.concatenate([jv, np.full((pad,), -1, np.int32)])
             if sc is not None:
                 sc = tuple(z(np.asarray(s)) for s in sc)
-        return w1v, w3v, w2v, b1v, b3v, b2v, sc
+        return w1v, w3v, w2v, b1v, b3v, b2v, sc, jv
 
     repacked = [_pad_visits(p) for p in packs]
 
@@ -244,6 +262,7 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
 
     w1v, w3v, w2v = _stack(0), _stack(1), _stack(2)
     b1v, b3v = _stack(3), _stack(4)
+    jv = _stack(7)
     if tp > 1:
         # per-shard packs carried zero b2 placeholders; keep the real
         # bias whole — drivers add it once after the shard reduction
@@ -263,12 +282,13 @@ def pack_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
     if squeeze:
         w1v, w3v, w2v = w1v[0], w3v[0], w2v[0]
         b1v, b3v, b2v = b1v[0], b3v[0], b2v[0]
+        jv = jv[0]
         s1 = None if s1 is None else s1[0]
         s3 = None if s3 is None else s3[0]
         s2 = None if s2 is None else s2[0]
     return PackedFFN(w1v, w3v, w2v, b1v, b3v, b2v, d_model=d, d_ff=F,
                      block_f=bf, act=act, s1=s1, s3=s3, s2=s2,
-                     shards=tp)
+                     shards=tp, jv=jv)
 
 
 # ---------------------------------------------------------------------------
@@ -302,13 +322,37 @@ def packed_ffn_apply(x: jnp.ndarray, pf: PackedFFN, *,
 # ---------------------------------------------------------------------------
 
 
+# TP-eligibility gates, SHARED by deploy_packed and reshard_packed so
+# the two walks cannot silently diverge (the parity tests in
+# tests/test_deploy_packed.py assert bit-identity between them; a rule
+# added to only one side would break that contract for configs the
+# tests don't cover).
+
+
+def _shard_blocks(kind: str, K: int, N: int, bk: int, bn: int) -> int:
+    """Block count along the dimension a shard kind partitions."""
+    return (N // bn) if kind == "col" else (K // bk)
+
+
+def _fused_tp(d_ff: int, block_f: int, tp: int) -> int:
+    """Shard count the fused d_ff visit schedule supports (1 = stay
+    unsharded)."""
+    return tp if tp > 1 and (d_ff // block_f) % tp == 0 else 1
+
+
+def _attn_tp(cfg: ModelConfig, tp: int) -> int:
+    """col shards of wq/wk/wv must land on head boundaries (RoPE and
+    the (B, S, H, D) reshape are per head)."""
+    return tp if (tp > 1 and cfg.num_heads % tp == 0
+                  and cfg.num_kv_heads % tp == 0) else 1
+
+
 def _tp_fits(w: np.ndarray, kind: str, cfg: ModelConfig, tp: int) -> bool:
     """Does the matrix's block grid split evenly into ``tp`` shards?"""
-    if kind == "col":
-        N = w.shape[-1]
-        return (N // _fit_block(N, cfg.sasp.block_n)) % tp == 0
-    K = w.shape[-2]
-    return (K // _fit_block(K, cfg.sasp.block_k)) % tp == 0
+    K, N = w.shape[-2:]
+    bk = _fit_block(K, cfg.sasp.block_k)
+    bn = _fit_block(N, cfg.sasp.block_n)
+    return _shard_blocks(kind, K, N, bk, bn) % tp == 0
 
 
 def _pack_matrix_group(node: Params, names, cfg: ModelConfig,
@@ -366,8 +410,7 @@ def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
                 else None
             if gated and fuse_ffn and w3 is not None:
                 F = w1.shape[-1]
-                bf = _fit_block(F, cfg.sasp.block_n)
-                tp_f = tp if tp > 1 and (F // bf) % tp == 0 else 1
+                tp_f = _fused_tp(F, _fit_block(F, cfg.sasp.block_n), tp)
                 ffn["sasp_fused"] = pack_ffn(
                     w1, w3, w2, block_f=cfg.sasp.block_n, act=cfg.act,
                     b1=ffn["w1"].get("b"), b3=ffn["w3"].get("b"),
@@ -387,10 +430,7 @@ def _deploy_slot(slot: Params, cfg: ModelConfig, *, quantize: bool,
     if attn and isinstance(mixer, dict) and all(
             m in mixer for m in _ATTN_MATS):
         mixer = dict(mixer)
-        # col shards of wq/wk/wv must land on head boundaries (RoPE and
-        # the (B, S, H, D) reshape are per head)
-        tp_a = tp if (tp > 1 and cfg.num_heads % tp == 0
-                      and cfg.num_kv_heads % tp == 0) else 1
+        tp_a = _attn_tp(cfg, tp)
         packed = _pack_matrix_group(mixer, _ATTN_MATS, cfg, quantize, {},
                                     tp=tp_a, kinds=_ATTN_KINDS)
         if packed is not None:
@@ -445,6 +485,320 @@ def deploy_packed(params: Params, cfg: ModelConfig, *,
         cfg, sasp=dataclasses.replace(cfg.sasp, enabled=True,
                                       path="kernel"))
     return out, cfg
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-deploy: reshard existing containers (ROADMAP fast path)
+# ---------------------------------------------------------------------------
+
+
+def _zero_block_scale() -> np.float32:
+    """Per-block int8 scale of an all-zero block, computed with the SAME
+    array arithmetic as build_kernel_weight / build_fused_ffn so
+    resharded containers stay bit-identical to from-scratch packs."""
+    amax = np.zeros((1,), np.float32)
+    return (np.maximum(amax, 1e-12) / 127.0).astype(np.float32)[0]
+
+
+def _reshard_weight(pw: PackedSASPWeight, tp: int,
+                    kind: str) -> PackedSASPWeight:
+    """Slice-and-pad one packed matrix to ``tp`` shards: live visits are
+    re-binned by output-column (col) / input-row (row) block shard with
+    coordinates remapped shard-local, empty output columns get their
+    zero flush visit, and per-(layer, shard) lists re-pad to one shared
+    nnz — no dense/BSR rebuild. Bit-identical to ``pack_weight`` on the
+    sliced dense weight."""
+    K, N = pw.shape
+    bk, bn = pw.block
+    KB, NB = K // bk, N // bn
+    quant = pw.scale is not None
+    assert kind in ("col", "row"), kind
+    assert tp == 1 or kind == "col" or pw.act is None
+
+    vals = np.asarray(pw.vals)
+    kn = np.asarray(pw.kn)
+    sc = np.asarray(pw.scale) if quant else None
+    stacked = vals.ndim == (5 if pw.shards > 1 else 4)
+    if not stacked:
+        vals, kn = vals[None], kn[None]
+        sc = None if sc is None else sc[None]
+    if pw.shards == 1:
+        vals, kn = vals[:, None], kn[:, None]
+        sc = None if sc is None else sc[:, None]
+    L = vals.shape[0]
+
+    # 1) merge shards back to per-layer GLOBAL live-visit lists (zero
+    #    blocks are padding or empty-column flush entries — both get
+    #    rebuilt below, so dropping every zero block is lossless)
+    layers = []
+    for li in range(L):
+        ks, ns, vs, ss = [], [], [], []
+        for s in range(pw.shards):
+            v = vals[li, s]
+            live = np.any(v != 0, axis=(1, 2))
+            k = kn[li, s][0].astype(np.int64)
+            n = kn[li, s][1].astype(np.int64)
+            if pw.shards > 1:
+                if (pw.shard_kind or kind) == "col":
+                    n = n + s * (NB // pw.shards)
+                else:
+                    k = k + s * (KB // pw.shards)
+            ks.append(k[live])
+            ns.append(n[live])
+            vs.append(v[live])
+            if quant:
+                ss.append(sc[li, s][live])
+        layers.append((np.concatenate(ks), np.concatenate(ns),
+                       np.concatenate(vs),
+                       np.concatenate(ss) if quant else None))
+
+    # 2) re-bin to the new shards, exactly as build_kernel_weight would
+    #    pack the sliced dense weight
+    NB_s = NB // tp if kind == "col" else NB
+    KB_s = KB if kind == "col" else KB // tp
+    assert (NB % tp == 0) if kind == "col" else (KB % tp == 0), (
+        kind, pw.shape, pw.block, tp)
+    packs = []                             # [L][tp] of (vals, kn, scale)
+    for ks, ns, v, s_ in layers:
+        row = []
+        for s in range(tp):
+            if kind == "col":
+                sel = (ns >= s * NB_s) & (ns < (s + 1) * NB_s)
+                k_loc, n_loc = ks[sel], ns[sel] - s * NB_s
+            else:
+                sel = (ks >= s * KB_s) & (ks < (s + 1) * KB_s)
+                k_loc, n_loc = ks[sel] - s * KB_s, ns[sel]
+            v_loc = v[sel]
+            s_loc = s_[sel] if quant else None
+            # zero flush visit per empty output column + (n, k) sort —
+            # the one shared convention (ops.flush_sorted_order)
+            k_loc, n_loc, order, n_flush = sasp_ops.flush_sorted_order(
+                k_loc, n_loc, NB_s)
+            if n_flush:
+                v_loc = np.concatenate(
+                    [v_loc, np.zeros((n_flush, bk, bn), v_loc.dtype)])
+                if quant:
+                    s_loc = np.concatenate(
+                        [s_loc, np.full((n_flush,), _zero_block_scale(),
+                                        np.float32)])
+            row.append((v_loc[order],
+                        np.stack([k_loc[order], n_loc[order]])
+                        .astype(np.int32),
+                        s_loc[order] if quant else None))
+        packs.append(row)
+
+    # 3) shared-nnz padding + stacking (mirror of pack_weight)
+    nnz = max(p[0].shape[0] for lp in packs for p in lp)
+    per_layer = []
+    for lp in packs:
+        vs, kks, sss = [], [], []
+        for v, kkn, s_ in lp:
+            v, kkn, s_ = sasp_ops.pad_block_list(v, kkn, s_, nnz)
+            vs.append(v)
+            kks.append(kkn)
+            sss.append(s_)
+        if tp == 1:
+            per_layer.append((vs[0], kks[0], sss[0]))
+        else:
+            per_layer.append((np.stack(vs), np.stack(kks),
+                              None if sss[0] is None else np.stack(sss)))
+    new_vals = jnp.asarray(np.stack([p[0] for p in per_layer]))
+    new_kn = jnp.asarray(np.stack([p[1] for p in per_layer]))
+    new_sc = None if not quant else jnp.asarray(
+        np.stack([p[2] for p in per_layer]).astype(np.float32))
+
+    bias = None
+    if pw.bias is not None:
+        b = np.asarray(pw.bias, np.float32)
+        b = b.reshape(b.shape[:-2] + (-1,)) \
+            if pw.shards > 1 and pw.shard_kind == "col" else b
+        if not stacked:
+            b = b[None]
+        if tp > 1 and kind == "col":
+            b = b.reshape(L, tp, N // tp)
+        bias = jnp.asarray(b)
+    if not stacked:
+        new_vals, new_kn = new_vals[0], new_kn[0]
+        new_sc = None if new_sc is None else new_sc[0]
+        bias = None if bias is None else bias[0]
+    return PackedSASPWeight(new_vals, new_kn, (K, N), (bk, bn),
+                            scale=new_sc, bias=bias, act=pw.act,
+                            shards=tp,
+                            shard_kind=kind if tp > 1 else None)
+
+
+def _reshard_ffn(pf: PackedFFN, tp: int) -> PackedFFN:
+    """Slice-and-pad the fused gated-FFN schedule to ``tp`` d_ff shards
+    using the stored global visit indices ``jv`` (so no dense rebuild
+    and exact agreement with ``pack_ffn`` on the sliced weights)."""
+    assert pf.jv is not None, \
+        "container predates jv visit indices; rebuild via deploy_packed"
+    d, bf = pf.d_model, pf.block_f
+    FB = pf.d_ff // bf
+    assert tp == 1 or FB % tp == 0, (pf.d_ff, bf, tp)
+    quant = pf.s1 is not None
+
+    names = ["w1v", "w3v", "w2v", "b1", "b3", "jv"] + (
+        ["s1", "s3", "s2"] if quant else [])
+    base = {"w1v": 3, "w3v": 3, "w2v": 3, "b1": 2, "b3": 2, "jv": 1,
+            "s1": 1, "s3": 1, "s2": 1}
+    arrs = {n: np.asarray(getattr(pf, n)) for n in names}
+    stacked = arrs["w1v"].ndim == base["w1v"] + (
+        2 if pf.shards > 1 else 1)
+
+    def norm(n):
+        a = arrs[n]
+        if not stacked:
+            a = a[None]
+        if pf.shards == 1:
+            a = a[:, None]
+        return a
+
+    A = {n: norm(n) for n in names}
+    L = A["w1v"].shape[0]
+    b2 = np.asarray(pf.b2, np.float32)
+    if not stacked:
+        b2 = b2[None]
+
+    def zero_visit():
+        z = {"w1v": np.zeros((1, d, bf), np.float32),
+             "w3v": np.zeros((1, d, bf), np.float32),
+             "w2v": np.zeros((1, bf, d), np.float32),
+             "b1": np.zeros((1, bf), np.float32),
+             "b3": np.zeros((1, bf), np.float32),
+             "jv": np.full((1,), -1, np.int32)}
+        if quant:
+            zs = _zero_block_scale()
+            for n in ("s1", "s3", "s2"):
+                z[n] = np.full((1,), zs, np.float32)
+            for n in ("w1v", "w3v", "w2v"):
+                z[n] = z[n].astype(np.int8)
+        return z
+
+    packs = []                              # [L][tp] dicts
+    FBs = FB // tp
+    for li in range(L):
+        live_parts = {n: [] for n in names}
+        for s in range(pf.shards):
+            live = A["jv"][li, s] >= 0
+            for n in names:
+                live_parts[n].append(A[n][li, s][live])
+        cat = {n: np.concatenate(live_parts[n]) for n in names}
+        order = np.argsort(cat["jv"], kind="stable")
+        cat = {n: a[order] for n, a in cat.items()}
+        row = []
+        for s in range(tp):
+            sel = (cat["jv"] >= s * FBs) & (cat["jv"] < (s + 1) * FBs)
+            if not sel.any():               # all-pruned shard: one zero
+                row.append(zero_visit())    # visit so output flushes b2
+                continue
+            row.append({n: a[sel] for n, a in cat.items()})
+        packs.append(row)
+
+    nv = max(p["jv"].shape[0] for lp in packs for p in lp)
+
+    def pad(p):
+        n_pad = nv - p["jv"].shape[0]
+        if not n_pad:
+            return p
+        out = {}
+        for n, a in p.items():
+            if n == "jv":
+                out[n] = np.concatenate(
+                    [a, np.full((n_pad,), -1, np.int32)])
+            else:
+                out[n] = np.concatenate(
+                    [a, np.zeros((n_pad,) + a.shape[1:], a.dtype)])
+        return out
+
+    packs = [[pad(p) for p in lp] for lp in packs]
+
+    def stack(n):
+        a = np.stack([np.stack([p[n] for p in lp]) for lp in packs])
+        if tp == 1:
+            a = a[:, 0]
+        if not stacked:
+            a = a[0]
+        return jnp.asarray(a)
+
+    if not stacked:
+        b2 = b2[0]
+    return PackedFFN(
+        stack("w1v"), stack("w3v"), stack("w2v"), stack("b1"),
+        stack("b3"), jnp.asarray(b2), d_model=d, d_ff=pf.d_ff,
+        block_f=bf, act=pf.act,
+        s1=stack("s1") if quant else None,
+        s3=stack("s3") if quant else None,
+        s2=stack("s2") if quant else None,
+        shards=tp, jv=stack("jv"))
+
+
+def reshard_packed(params: Params, cfg: ModelConfig, *, mesh=None,
+                   tp: Optional[int] = None) -> Params:
+    """Elastic re-deploy fast path: re-partition every packed container
+    for a NEW mesh shape by slicing and padding the existing visit
+    lists — cheap numpy at load time, no dense/BSR rebuild and no
+    pruning-mask recovery. The result is bit-identical to a
+    from-scratch ``deploy_packed(pruned, cfg, tp=tp)`` of the same
+    weights (the per-shard padding, empty-column flush visits, and int8
+    epsilon scales use the same arithmetic). Containers whose block
+    grid (or, for attention, head count) does not divide the new ``tp``
+    fall back to unsharded — the same rule as ``deploy_packed``.
+    Accepts containers at ANY current shard count, so mesh shape
+    changes go sharded→sharded without keeping the unsharded pack
+    around."""
+    if tp is None:
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    def fits(pw: PackedSASPWeight, kind: str) -> bool:
+        K, N = pw.shape
+        bk, bn = pw.block
+        return _shard_blocks(kind, K, N, bk, bn) % tp == 0
+
+    if "segments" not in params:
+        raise ValueError("reshard_packed expects a deployed param tree "
+                         "with a 'segments' entry (see deploy_packed)")
+    out = dict(params)
+    segs = []
+    for seg in params["segments"]:
+        new_seg = {}
+        for slot_name, slot in seg.items():
+            slot = dict(slot)
+            ffn = slot.get("ffn")
+            if isinstance(ffn, dict):
+                ffn = dict(ffn)
+                pf = ffn.get("sasp_fused")
+                if isinstance(pf, PackedFFN):
+                    ffn["sasp_fused"] = _reshard_ffn(
+                        pf, _fused_tp(pf.d_ff, pf.block_f, tp))
+                grp = ffn.get("sasp_packed")
+                if isinstance(grp, dict):
+                    tp_g = tp if tp > 1 and all(
+                        fits(w, _FFN_KINDS.get(n, "col"))
+                        for n, w in grp.items()) else 1
+                    ffn["sasp_packed"] = {
+                        n: _reshard_weight(w, tp_g,
+                                           _FFN_KINDS.get(n, "col"))
+                        for n, w in grp.items()}
+                slot["ffn"] = ffn
+            mixer = slot.get("mixer")
+            if isinstance(mixer, dict) and isinstance(
+                    mixer.get("sasp_packed"), dict):
+                mixer = dict(mixer)
+                grp = mixer["sasp_packed"]
+                tp_a = _attn_tp(cfg, tp)
+                if not all(fits(w, _ATTN_KINDS.get(n, "col"))
+                           for n, w in grp.items()):
+                    tp_a = 1
+                mixer["sasp_packed"] = {
+                    n: _reshard_weight(w, tp_a,
+                                       _ATTN_KINDS.get(n, "col"))
+                    for n, w in grp.items()}
+                slot["mixer"] = mixer
+            new_seg[slot_name] = slot
+        segs.append(new_seg)
+    out["segments"] = tuple(segs)
+    return out
 
 
 def packed_summary(params: Params) -> Dict[str, float]:

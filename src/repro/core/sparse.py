@@ -1,18 +1,54 @@
-"""Block-compressed weight container (BSR-style) for the SASP "skip" paths.
+"""Weight containers for the SASP "skip" paths — and the reference for
+the packed-container FORMAT (DESIGN.md §9–§10), so the layout is
+discoverable without reading kernel code.
 
-Built offline from a concrete pruning mask (masks are static by deployment
-time — pruning happens before the serving graph is jitted), so all shapes
-below are static. Two consumers:
+All containers are built offline from a concrete pruning mask (masks
+are static by deployment time — pruning happens before the serving
+graph is jitted), so every shape below is static.
 
-* the pure-jnp gathered matmul (`bsr_matmul`) — FLOPs/bytes drop ∝ sparsity
-  *inside the compiled HLO*, which is how the dry-run roofline exhibits the
-  paper's saving without real hardware;
-* the Pallas tile-skip kernel (kernels/sasp_gemm) — consumes the flat
-  (k, n) block list + values.
+**BlockSparseWeight (BSR-style, training/reference paths).** Per
+output-column-block list of surviving K-blocks, padded to the
+per-matrix max (`k_max`). Padding entries point at block 0 with zero
+values, so no masking is needed in the inner loop. Consumers: the
+pure-jnp gathered matmul (`bsr_matmul`) — FLOPs/bytes drop ∝ sparsity
+*inside the compiled HLO*, which is how the dry-run roofline exhibits
+the paper's saving without hardware — and the Pallas tile-skip kernel
+path, which re-flattens it per call (why serving uses packed instead).
 
-Layout: per output-column-block list of surviving K-blocks, padded to the
-per-matrix max (`k_max`). Padding entries point at block 0 with zero values,
-so no masking is needed in the inner loop.
+**Visit lists (the packed format's core idea).** A "visit" is one
+surviving weight block the kernel will touch, in a fixed precomputed
+order. `PackedSASPWeight` stores visits sorted by (n, k): all visits
+of output-column block n are consecutive, so the kernel keeps one
+VMEM-resident accumulator per output block and flushes it exactly once
+(bias + activation fold into that flush). Every output column gets at
+least one visit — a column with no surviving block carries one
+zero-valued visit so its accumulator still initializes and flushes
+`act(bias)`. `PackedFFN` visits are whole d_ff column-blocks of the
+gated FFN (w1/w3 columns + the matching w2 row + bias slices), ordered
+by d_ff block index; `jv` records that index per visit.
+
+**Dup-last-visit nnz padding.** Containers stack per layer (the
+`lax.scan`-over-layers layout) and per TP shard, which forces ONE
+static visit count across all (layer × shard) lists. Shorter lists are
+padded by REPEATING the last visit's coordinates with zero-valued
+blocks: the appended visits share the final n-block, so the visit
+order stays n-major, the accumulator neither re-initializes nor
+flushes early — it just adds zeros and flushes the same value once
+more. (`PackedFFN` pads with zero-w2v visits, `jv = -1`: a zero down-
+projection contributes exactly nothing.) Padding visits are
+recognizable as all-zero blocks / `jv < 0`, which is what the elastic
+re-deploy fast path (`core.deploy.reshard_packed`) keys on.
+
+**Shard kinds (TP partitioning of the visit schedule, DESIGN.md §10).**
+`shard_kind="col"` splits visits by output-column block: each shard's
+kn n-coordinates are shard-LOCAL, bias is reshaped per shard and stays
+fused, outputs concatenate. `shard_kind="row"` splits by input-row
+block (down-projections whose input is already column-sharded): kn
+k-coordinates are shard-local, outputs are PARTIAL and need a
+cross-shard reduction, so bias stays whole and is added after it — and
+a row shard never carries `act` (a nonlinear epilogue on a partial sum
+would be wrong). `PackedFFN` shards the d_ff visit schedule
+contiguously (always row-like: partials + one post-reduction b2).
 """
 from __future__ import annotations
 
@@ -188,14 +224,22 @@ class PackedFFN:
     w2 down-projection yields a PARTIAL (M, d); drivers reduce across
     shards (psum or reduce-scatter + int8 all-gather). b2 stays (…, d)
     and is added once, after the reduction.
+
+    ``jv`` (…, nv) int32 records each visit's GLOBAL d_ff block index
+    (-1 for padding/empty-shard visits). The kernels never read it — it
+    exists so the container is self-describing: the elastic re-deploy
+    fast path (``core.deploy.reshard_packed``) re-partitions the visit
+    schedule for a new mesh shape by slicing on ``jv`` instead of
+    rebuilding from the dense weights.
     """
 
     def __init__(self, w1v, w3v, w2v, b1, b3, b2, d_model: int,
                  d_ff: int, block_f: int, act: str, s1=None, s3=None,
-                 s2=None, shards: int = 1):
+                 s2=None, shards: int = 1, jv=None):
         self.w1v, self.w3v, self.w2v = w1v, w3v, w2v
         self.b1, self.b3, self.b2 = b1, b3, b2
         self.s1, self.s3, self.s2 = s1, s3, s2
+        self.jv = jv
         self.d_model = d_model
         self.d_ff = d_ff
         self.block_f = block_f
@@ -204,23 +248,24 @@ class PackedFFN:
 
     def tree_flatten(self):
         return ((self.w1v, self.w3v, self.w2v, self.b1, self.b3, self.b2,
-                 self.s1, self.s3, self.s2),
+                 self.s1, self.s3, self.s2, self.jv),
                 (self.d_model, self.d_ff, self.block_f, self.act,
                  self.shards))
 
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
-        names = ("w1v", "w3v", "w2v", "b1", "b3", "b2", "s1", "s3", "s2")
+        names = ("w1v", "w3v", "w2v", "b1", "b3", "b2", "s1", "s3",
+                 "s2", "jv")
         return tuple((ga(n), getattr(self, n)) for n in names), \
             (self.d_model, self.d_ff, self.block_f, self.act,
              self.shards)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        w1v, w3v, w2v, b1, b3, b2, s1, s3, s2 = children
+        w1v, w3v, w2v, b1, b3, b2, s1, s3, s2, jv = children
         d_model, d_ff, block_f, act, shards = aux
         return cls(w1v, w3v, w2v, b1, b3, b2, d_model, d_ff, block_f,
-                   act, s1, s3, s2, shards)
+                   act, s1, s3, s2, shards, jv)
 
     @property
     def nv(self) -> int:

@@ -8,6 +8,23 @@ Also home of the ``shard_map`` compat shim: JAX moved shard_map from
 ``jax.shard_map`` (kwarg ``check_vma``, 0.6+). Every call site in this
 repo routes through :func:`shard_map` below so the supported-version
 window is one line wide (DESIGN.md §10).
+
+How the packed containers engage (DESIGN.md §9–§10 — format spec in
+``core/sparse.py``): a TP-sharded ``PackedSASPWeight`` / ``PackedFFN``
+carries one shard-LOCAL visit list per rank (an extra shard axis right
+before the visit dims, every (layer × shard) list padded to one shared
+static nnz via dup-last-visit). The drivers in ``models/ffn.py`` /
+``models/attention.py`` check ``active_mesh()`` at trace time: when
+the mesh's 'model' axis size equals the container's ``shards``, they
+wrap the kernel in :func:`shard_map` with the shard axis mapped onto
+'model', so each rank DMAs and visits only its own blocks —
+``shard_kind="col"`` outputs concatenate in place, ``"row"``/fused
+partials reduce (psum or rs+int8-ag). No mesh (or a mismatched one) →
+a sequential per-shard loop reproduces the same math on one device.
+This is why serving code never threads the mesh through call
+signatures: ``Engine``/``ShardedScheduler`` enter ``use_mesh`` (each
+scheduler rank its own submesh) and the same model code routes
+itself.
 """
 from __future__ import annotations
 

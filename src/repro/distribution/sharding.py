@@ -27,6 +27,31 @@ def dp_axes(mesh: Mesh, profile: str = "tp") -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def dp_submeshes(mesh: Mesh, profile: str = "tp"):
+    """One submesh per DP rank — the per-rank placement for the sharded
+    scheduler (``serve/scheduler.py``, DESIGN.md §11). Each submesh
+    keeps every axis name but collapses the DP axes ('pod'/'data'; ALL
+    axes under the dp_only profile) to size 1, so rank r's engine shard
+    puts its params, KV-cache slots, and decode state on exactly its
+    slice of devices while the 'model' axis — and with it the TP
+    shard_map packed drivers — keeps working inside the rank."""
+    import itertools
+
+    names = mesh.axis_names
+    dp = dp_axes(mesh, profile)
+    dims = [i for i, a in enumerate(names) if a in dp]
+    if not dims or all(mesh.shape[a] == 1 for a in dp):
+        return [mesh]
+    subs = []
+    for idx in itertools.product(*(range(mesh.devices.shape[d])
+                                   for d in dims)):
+        slicer = [slice(None)] * mesh.devices.ndim
+        for d, i in zip(dims, idx):
+            slicer[d] = slice(i, i + 1)
+        subs.append(Mesh(mesh.devices[tuple(slicer)], names))
+    return subs
+
+
 def axis_size(mesh: Mesh, name) -> int:
     if isinstance(name, tuple):
         n = 1
@@ -206,7 +231,7 @@ def packed_sharding(node, mesh: Mesh):
         b2=None if node.b2 is None else repl,       # whole (…, d)
         d_model=node.d_model, d_ff=node.d_ff, block_f=node.block_f,
         act=node.act, s1=at(node.s1, 2), s3=at(node.s3, 2),
-        s2=at(node.s2, 2), shards=node.shards)
+        s2=at(node.s2, 2), shards=node.shards, jv=at(node.jv, 2))
 
 
 _PACKED_TYPES = (PackedSASPWeight, PackedFFN)

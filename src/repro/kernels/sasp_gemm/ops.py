@@ -16,6 +16,22 @@ from repro.kernels.sasp_gemm.kernel import (
 )
 
 
+def flush_sorted_order(ks: np.ndarray, ns: np.ndarray, nb: int):
+    """THE visit-order convention, in one place: append a k=0 flush
+    entry for every output column in [0, nb) with no visit (so every
+    output block initializes/flushes exactly once), then sort by
+    (n, k). Returns (ks', ns', order, n_flush) — callers append
+    ``n_flush`` zero-valued blocks/scales before applying ``order``.
+    Shared by :func:`kernel_block_list` (mask path) and the elastic
+    re-deploy slice path (``core.deploy._reshard_weight``), whose
+    bit-identity contract depends on the two never diverging."""
+    empty = np.setdiff1d(np.arange(nb), np.unique(ns))
+    if empty.size:
+        ks = np.concatenate([ks, np.zeros_like(empty)])
+        ns = np.concatenate([ns, empty])
+    return ks, ns, np.lexsort((ks, ns)), int(empty.size)
+
+
 def kernel_block_list(mask: np.ndarray) -> np.ndarray:
     """(2, nnz') visit list sorted by (n, k). Output column-blocks with no
     surviving weight block get one zero-value padding entry (k=0) so every
@@ -24,11 +40,7 @@ def kernel_block_list(mask: np.ndarray) -> np.ndarray:
     mask = np.asarray(mask, dtype=bool)
     KB, NB = mask.shape
     ks, ns = np.nonzero(mask)
-    empty_cols = np.setdiff1d(np.arange(NB), np.unique(ns))
-    if empty_cols.size:
-        ks = np.concatenate([ks, np.zeros_like(empty_cols)])
-        ns = np.concatenate([ns, empty_cols])
-    order = np.lexsort((ks, ns))
+    ks, ns, order, _ = flush_sorted_order(ks, ns, NB)
     return np.stack([ks[order], ns[order]]).astype(np.int32)
 
 
@@ -84,7 +96,8 @@ def pad_block_list(vals: np.ndarray, kn: np.ndarray,
 
 def build_fused_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
                     block_f: int, b1=None, b3=None, b2=None,
-                    quantize: bool = False, nv_pad: Optional[int] = None):
+                    quantize: bool = False, nv_pad: Optional[int] = None,
+                    return_visits: bool = False):
     """Offline packing for the fused gated-FFN kernel.
 
     w1/w3: (d, F) up-projections with pruned tiles already zeroed; w2:
@@ -99,6 +112,9 @@ def build_fused_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
     Returns (w1v, w3v, w2v, b1v, b3v, b2, scales) — scales is None for fp
     or (s1, s3, s2) per-visit int8 scales. ``nv_pad`` pads the visit list
     with zero-w2v entries (for layer-stacked sharing of one static nv).
+    ``return_visits`` appends jv, the (nv,) int32 d_ff block index of
+    each visit (-1 for padding/empty entries) — consumed by
+    ``core.deploy`` so packed containers stay re-shardable.
     """
     w1 = np.asarray(w1, np.float32)
     w3 = np.asarray(w3, np.float32)
@@ -127,6 +143,7 @@ def build_fused_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
             continue
         keep.append(j)
 
+    jv = np.asarray(keep if keep else [-1], np.int32)
     if keep:
         w1v = np.stack([w1[:, j * bf:(j + 1) * bf] for j in keep])
         w3v = np.stack([w3[:, j * bf:(j + 1) * bf] for j in keep])
@@ -156,6 +173,7 @@ def build_fused_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
                 [w2v, np.zeros((pad, bf, d), np.float32)])
             b1v = np.concatenate([b1v, np.zeros((pad, bf), np.float32)])
             b3v = np.concatenate([b3v, np.zeros((pad, bf), np.float32)])
+            jv = np.concatenate([jv, np.full((pad,), -1, np.int32)])
 
     scales = None
     if quantize:
@@ -170,8 +188,11 @@ def build_fused_ffn(w1: np.ndarray, w3: np.ndarray, w2: np.ndarray, *,
         w2v, s2 = q(w2v)
         scales = (jnp.asarray(s1), jnp.asarray(s3), jnp.asarray(s2))
 
-    return (jnp.asarray(w1v), jnp.asarray(w3v), jnp.asarray(w2v),
-            jnp.asarray(b1v), jnp.asarray(b3v), jnp.asarray(b2), scales)
+    out = (jnp.asarray(w1v), jnp.asarray(w3v), jnp.asarray(w2v),
+           jnp.asarray(b1v), jnp.asarray(b3v), jnp.asarray(b2), scales)
+    if return_visits:
+        out = out + (jnp.asarray(jv),)
+    return out
 
 
 @functools.partial(jax.jit,

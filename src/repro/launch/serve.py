@@ -124,6 +124,29 @@ def main():
                          "decode state carry NamedShardings, packed "
                          "visit lists are TP-sharded per output-block "
                          "shard (e.g. --mesh 1,2)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the sharded request scheduler "
+                         "(DESIGN.md §11): admission-controlled queue + "
+                         "one engine shard per DP rank + continuous "
+                         "batching")
+    ap.add_argument("--slots-per-rank", type=int, default=None,
+                    help="KV-cache slots owned by each DP-rank engine "
+                         "shard (default: --slots)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: reject submissions once "
+                         "this many requests are waiting beyond free "
+                         "slot capacity (default: unbounded)")
+    ap.add_argument("--admission", choices=("fcfs", "sjf"),
+                    default="fcfs",
+                    help="queue policy: fcfs (arrival order) or sjf "
+                         "(shortest remaining work first)")
+    ap.add_argument("--drain", action="store_true",
+                    help="drain-batch baseline: admit only when every "
+                         "slot is free (A/B control for continuous "
+                         "batching)")
+    ap.add_argument("--ranks", type=int, default=None,
+                    help="engine shards without a mesh (testing); with "
+                         "--mesh the DP axis decides")
     args = ap.parse_args()
 
     # BEFORE any backend-initializing jax call: may set XLA_FLAGS
@@ -160,11 +183,35 @@ def main():
                     eos_id=args.eos_id)
             for i in range(args.requests)]
 
-    eng = Engine(params, cfg, batch_slots=args.slots,
-                 cache_len=args.cache_len, mesh=mesh)
-    t0 = time.time()
-    done = eng.run(reqs)
-    dt = time.time() - t0
+    if args.scheduler:
+        from repro.serve.scheduler import SchedulerConfig, \
+            ShardedScheduler
+        if mesh is not None and args.ranks is not None:
+            raise SystemExit("--ranks conflicts with --mesh: under a "
+                             "mesh the DP axis decides the rank count; "
+                             "drop --ranks")
+        sched = ShardedScheduler(
+            params, cfg, mesh=mesh, ranks=args.ranks,
+            sched=SchedulerConfig(
+                slots_per_rank=args.slots_per_rank or args.slots,
+                cache_len=args.cache_len, max_queue=args.max_queue,
+                policy=args.admission, drain=args.drain))
+        t0 = time.time()
+        done = sched.run(reqs)
+        dt = time.time() - t0
+        st = sched.stats()
+        print(f"scheduler: {st['ranks']} rank(s), "
+              f"{st['accepted']}/{st['submitted']} admitted "
+              f"({st['rejected']} rejected), policy={args.admission}"
+              f"{', drain baseline' if args.drain else ''}")
+        for r_st in st["per_rank"]:
+            print(f"  rank stats: {r_st}")
+    else:
+        eng = Engine(params, cfg, batch_slots=args.slots,
+                     cache_len=args.cache_len, mesh=mesh)
+        t0 = time.time()
+        done = eng.run(reqs)
+        dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s, "

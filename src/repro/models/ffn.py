@@ -360,7 +360,7 @@ def _packed_ffn_fused_sharded(x2: jnp.ndarray, pf,
         ax(pf.b1, 3), ax(pf.b3, 3), P(*([None] * pf.b2.ndim)),
         d_model=pf.d_model, d_ff=pf.d_ff, block_f=pf.block_f,
         act=pf.act, s1=ax(pf.s1, 2), s3=ax(pf.s3, 2), s2=ax(pf.s2, 2),
-        shards=tp)
+        shards=tp, jv=ax(pf.jv, 2))
 
     def body(xx, w):
         sc = None if w.s1 is None else (

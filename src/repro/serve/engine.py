@@ -29,10 +29,27 @@ Serving fast path (DESIGN.md §9):
   NamedShardings and runs every prefill/decode under the active-mesh
   context, so the shard_map packed drivers and SDPA/TP paths engage.
   Greedy streams are bit-identical to the single-device packed path.
+
+Slot lifecycle (DESIGN.md §11): each slot moves FREE -> PREFILL ->
+DECODE -> FREE. PREFILL is transient inside :meth:`Engine._admit` (the
+prompt's cache rows are written and the first token sampled in the same
+host call); from the next :meth:`Engine.step` on the slot participates
+in the batched decode, where the ``active`` mask hides FREE slots —
+slots admitted at different times decode side by side. Under
+``admission="continuous"`` (default) a slot freed by EOS/budget is
+refilled from the queue at the very next step; ``admission="drain"`` is
+the classic batch-inference baseline that only admits when EVERY slot
+is free (used as the benchmark control for continuous batching).
+
+One Engine is one *engine shard*: in the sharded scheduler
+(``serve/scheduler.py``) each DP rank owns an Engine whose caches —
+hence slots — live on that rank's submesh, so ranks serve independent
+traffic.
 """
 from __future__ import annotations
 
 import contextlib
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import List, Optional
@@ -44,6 +61,8 @@ import numpy as np
 from repro.configs.base import MIXER_ATTN, ModelConfig
 from repro.models import lm
 
+ADMISSION_MODES = ("continuous", "drain")
+
 
 @dataclass
 class Request:
@@ -54,6 +73,23 @@ class Request:
     eos_id: Optional[int] = None    # stop token (device-side check)
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # serving metadata (filled by Engine / ShardedScheduler)
+    rank: Optional[int] = None      # engine shard that served the request
+    t_submit: Optional[float] = None   # time.monotonic() at submission
+    t_first: Optional[float] = None    # first token sampled (prefill)
+    t_done: Optional[float] = None     # retired
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-retire seconds (None until both stamps exist)."""
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    def cost_estimate(self) -> int:
+        """Admission-policy key: total tokens this request still needs
+        (prompt prefill + remaining decode budget)."""
+        return len(self.prompt) + self.max_new_tokens - len(self.out_tokens)
 
 
 def _sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray
@@ -71,7 +107,14 @@ def _sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  cache_len: int = 512, rng_seed: int = 0, mesh=None,
-                 profile: str = "tp"):
+                 profile: str = "tp", admission: str = "continuous",
+                 rank: int = 0):
+        assert admission in ADMISSION_MODES, admission
+        self.admission = admission
+        self.rank = rank
+        self.stats = {"decode_steps": 0, "admitted": 0,
+                      "prefill_tokens": 0, "generated_tokens": 0,
+                      "continuous_refills": 0}
         self.mesh = mesh
         self.profile = profile
         if mesh is not None:
@@ -98,7 +141,28 @@ class Engine:
         self._attn_only = all(m == MIXER_ATTN
                               for m in cfg.layer_mixer_kinds())
         self._decode = jax.jit(partial(self._decode_step, cfg))
+        self._prefill = jax.jit(partial(self._prefill_and_write, cfg,
+                                        cache_len))
         self._sample = jax.jit(_sample_tokens)
+
+    @staticmethod
+    def _prefill_and_write(cfg, cache_len, params, toks, poss, caches,
+                           slots):
+        """Jitted admission: prompt prefill + scatter of the new cache
+        rows into the batch caches at ``slots``, one device program.
+        (Admission used to run the forward eagerly — per-op dispatch
+        made a single refill cost ~100 decode steps, wiping out the
+        continuous-batching win under load.) Only the last-token logits
+        (G, V) come back to the host."""
+        logits, caches1 = lm.prefill(params, cfg, tokens=toks,
+                                     cache_len=cache_len,
+                                     positions=poss)
+
+        def put(batch_leaf, new_leaf):
+            return batch_leaf.at[:, slots].set(
+                new_leaf.astype(batch_leaf.dtype))
+
+        return logits[:, 0], jax.tree.map(put, caches, caches1)
 
     @staticmethod
     def _decode_step(cfg, params, toks, pos, caches, key, temps, active,
@@ -125,11 +189,40 @@ class Engine:
         stack.enter_context(dctx.use_mesh(self.mesh, self.profile))
         return stack
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request, index: Optional[int] = None):
+        """Enqueue a request. ``index`` lets a scheduler place it by
+        admission policy (e.g. SJF); default is FCFS append."""
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
+        req.rank = self.rank
+        if index is None:
+            self.queue.append(req)
+        else:
+            self.queue.insert(index, req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # -- scheduler-facing views of the slot state machine --------------
+    def slot_states(self) -> List[str]:
+        """Per-slot state: 'free' or 'decode' (PREFILL is transient
+        inside the same ``step`` that admits — see module docstring)."""
+        return ["free" if r is None else "decode" for r in self.slot_req]
+
+    def n_free(self) -> int:
+        return len(self._free_slots())
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None
+                                       for r in self.slot_req)
+
+    def outstanding_tokens(self) -> int:
+        """Load metric for scheduler routing: queued work (prompt still
+        to prefill + decode budget) plus the REMAINING decode budget of
+        every occupied slot (their prompts are already prefilled)."""
+        return (sum(r.cost_estimate() for r in self.queue)
+                + sum(r.max_new_tokens - len(r.out_tokens)
+                      for r in self.slot_req if r is not None))
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
@@ -145,16 +238,13 @@ class Engine:
         batch caches at ``slot``. Fallback path: hybrid/SSM stacks and
         prompts longer than the cache."""
         toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-        logits, caches1 = lm.prefill(self.params, self.cfg, tokens=toks,
-                                     cache_len=self.cache_len)
-
-        def put(batch_leaf, one_leaf):
-            return batch_leaf.at[:, slot].set(one_leaf[:, 0])
-
-        self.caches = jax.tree.map(put, self.caches, caches1)
+        logits_last, self.caches = self._prefill(
+            self.params, toks, None, self.caches,
+            jnp.asarray([slot], jnp.int32))
         self.pos[slot] = len(req.prompt)
-        (nxt,) = self._sample_host(logits[:, 0], [req])
+        (nxt,) = self._sample_host(logits_last, [req])
         req.out_tokens.append(nxt)
+        req.t_first = time.monotonic()
         if self._retired_at_admission(req):
             return
         self.slot_req[slot] = req
@@ -174,21 +264,15 @@ class Engine:
             pad = S - lens[g]
             toks[g, pad:] = r.prompt
             poss[g] = np.arange(S) - pad
-        logits, caches1 = lm.prefill(
-            self.params, self.cfg, tokens=jnp.asarray(toks),
-            cache_len=self.cache_len, positions=jnp.asarray(poss))
-
-        sl = jnp.asarray(np.asarray(slots, np.int32))
-
-        def put(batch_leaf, new_leaf):
-            return batch_leaf.at[:, sl].set(
-                new_leaf.astype(batch_leaf.dtype))
-
-        self.caches = jax.tree.map(put, self.caches, caches1)
-        nxts = self._sample_host(logits[:, 0], reqs)
+        logits_last, self.caches = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(poss),
+            self.caches, jnp.asarray(np.asarray(slots, np.int32)))
+        nxts = self._sample_host(logits_last, reqs)
+        now = time.monotonic()
         for slot, req, nxt, L in zip(slots, reqs, nxts, lens):
             self.pos[slot] = L
             req.out_tokens.append(nxt)
+            req.t_first = now
             if self._retired_at_admission(req):
                 continue
             self.slot_req[slot] = req
@@ -200,17 +284,24 @@ class Engine:
              and req.out_tokens[-1] == req.eos_id)
                 or len(req.out_tokens) >= req.max_new_tokens):
             req.done = True
+            req.t_done = time.monotonic()
             self._finished_at_admission.append(req)
             return True
         return False
 
     def _admit(self):
         free = self._free_slots()
+        if self.admission == "drain" and len(free) < self.B:
+            return                  # drain-batch baseline: wait for all
         take = min(len(free), len(self.queue))
         if not take:
             return
+        if len(free) < self.B:      # refill while other slots decode
+            self.stats["continuous_refills"] += take
         reqs = [self.queue.pop(0) for _ in range(take)]
         slots = free[:take]
+        self.stats["admitted"] += take
+        self.stats["prefill_tokens"] += sum(len(r.prompt) for r in reqs)
         if (take > 1 and self._attn_only
                 and max(len(r.prompt) for r in reqs) <= self.cache_len):
             self._prefill_group(slots, reqs)
@@ -255,12 +346,15 @@ class Engine:
         nxt = np.asarray(nxt)                   # (B,) int32 — the ONLY
         done = np.asarray(done)                 # per-token host traffic
 
+        self.stats["decode_steps"] += 1
+        self.stats["generated_tokens"] += len(active)
         for i in active:
             req = self.slot_req[i]
             self.pos[i] += 1
             req.out_tokens.append(int(nxt[i]))
             if bool(done[i]):
                 req.done = True
+                req.t_done = time.monotonic()
                 finished.append(req)
                 self.slot_req[i] = None
         return finished

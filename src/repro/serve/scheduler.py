@@ -1,0 +1,182 @@
+"""Sharded request scheduler with continuous batching (DESIGN.md §11).
+
+The layer above ``serve.engine`` that turns one-process batch inference
+into a serving loop with independent request lifetimes:
+
+* **Admission control** — a bounded front queue: ``submit`` rejects
+  (returns False) once the waiting backlog exceeds ``max_queue``
+  BEYOND current free slot capacity (a burst that free slots will
+  absorb on the next step is never shed), so overload sheds new
+  traffic instead of growing tail latency without bound.
+  Within a rank's queue the admission *policy* orders requests: FCFS
+  (arrival order) or SJF (shortest remaining work first — prompt +
+  decode budget — which minimizes mean latency under backlog at the
+  cost of long-request starvation).
+* **Per-DP-rank engine shards** — one :class:`~repro.serve.engine.Engine`
+  per DP rank, each owning its OWN slice of the KV-cache slots. Under a
+  mesh, rank r's engine is built on the r-th submesh from
+  ``distribution.sharding.dp_submeshes`` (the 'data'/'pod' axes collapse
+  to size 1, the full 'model' axis is kept), so its params and cache
+  slots live on exactly that rank's devices and the TP shard_map packed
+  drivers still engage inside the rank. Ranks step independently — a
+  rank with an empty queue and free slots costs nothing.
+* **Continuous batching** — each engine refills slots freed by EOS or
+  budget exhaustion from its queue mid-decode (left-padded re-prefill
+  into the freed slot; ``serve/engine.py``), instead of draining the
+  whole batch. ``SchedulerConfig(drain=True)`` switches every shard to
+  the drain-batch baseline for A/B measurement
+  (``benchmarks/bench_engine.py`` throughput-under-load rows).
+
+Routing is least-outstanding-work: a submitted request goes to the rank
+whose queue + occupied slots carry the fewest pending tokens (ties to
+the lowest rank id). Because slots are isolated bit-exactly (DESIGN.md
+§7), the scheduler preserves the engine's contract: every request's
+greedy stream is bit-identical to running it alone through a
+single-batch engine, regardless of which rank/slot served it or what
+traffic it shared the batch with.
+"""
+from __future__ import annotations
+
+import bisect
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from repro.serve.engine import Engine, Request
+
+POLICIES = ("fcfs", "sjf")
+
+
+@dataclass
+class SchedulerConfig:
+    slots_per_rank: int = 4
+    cache_len: int = 512
+    # reject once this many requests wait beyond free slot capacity
+    # (None = unbounded admission)
+    max_queue: Optional[int] = None
+    policy: str = "fcfs"              # queue order: "fcfs" | "sjf"
+    drain: bool = False               # drain-batch baseline (ablation)
+    rng_seed: int = 0
+
+
+class ShardedScheduler:
+    """Admission-controlled request queue over per-DP-rank engine shards.
+
+    ``mesh``: build one engine shard per DP rank on its submesh (see
+    module docstring). ``ranks``: shard count when meshless (testing /
+    single-device DP emulation). ``profile`` is forwarded to each
+    engine's sharding rules.
+    """
+
+    def __init__(self, params, cfg, *, sched: Optional[SchedulerConfig]
+                 = None, mesh=None, ranks: Optional[int] = None,
+                 profile: str = "tp"):
+        self.sched = sched or SchedulerConfig()
+        assert self.sched.policy in POLICIES, self.sched.policy
+        if mesh is not None:
+            from repro.distribution import sharding as shd
+            submeshes = shd.dp_submeshes(mesh, profile)
+            if ranks is not None and ranks != len(submeshes):
+                raise ValueError(
+                    f"ranks={ranks} conflicts with the mesh's "
+                    f"{len(submeshes)} DP rank(s) — under a mesh the DP "
+                    f"axis decides; omit ranks")
+        else:
+            submeshes = [None] * (ranks or 1)
+        admission = "drain" if self.sched.drain else "continuous"
+        self.shards = [
+            Engine(params, cfg, batch_slots=self.sched.slots_per_rank,
+                   cache_len=self.sched.cache_len,
+                   rng_seed=self.sched.rng_seed + r, mesh=sub,
+                   profile=profile, admission=admission, rank=r)
+            for r, sub in enumerate(submeshes)]
+        self.rejected: List[Request] = []
+        self.n_submitted = 0
+        self.n_accepted = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def ranks(self) -> int:
+        return len(self.shards)
+
+    def queued(self) -> int:
+        """Requests admitted but not yet occupying a slot."""
+        return sum(len(e.queue) for e in self.shards)
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.shards)
+
+    def _route(self, req: Request) -> Engine:
+        """Least outstanding work, ties to the lowest rank id."""
+        return min(self.shards, key=lambda e: (e.outstanding_tokens(),
+                                               e.rank))
+
+    def submit(self, req: Request) -> bool:
+        """Admission control + routing. False = rejected (queue full).
+        The cap counts WAITING work net of free slots: requests a free
+        slot will absorb on the next step are not load."""
+        self.n_submitted += 1
+        cap = self.sched.max_queue
+        if cap is not None:
+            free = sum(e.n_free() for e in self.shards)
+            if self.queued() - free >= cap:
+                self.rejected.append(req)
+                return False
+        self.n_accepted += 1
+        eng = self._route(req)
+        index = None
+        if self.sched.policy == "sjf":
+            # bisect_right: FCFS among equal-cost requests
+            index = bisect.bisect_right(
+                [q.cost_estimate() for q in eng.queue],
+                req.cost_estimate())
+        eng.submit(req, index=index)
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step on every rank that has work; returns the
+        requests retired this step (any rank)."""
+        finished: List[Request] = []
+        for eng in self.shards:
+            if eng.has_work():
+                finished.extend(eng.step())
+        return finished
+
+    def run(self, requests: Sequence[Request],
+            arrivals: Optional[Sequence[float]] = None) -> List[Request]:
+        """Serve ``requests`` to completion. ``arrivals`` (seconds from
+        start, e.g. Poisson offsets) submits each request when its time
+        comes — the open-loop load pattern of the throughput bench;
+        omitted, everything is submitted up front. Rejected requests are
+        collected on ``self.rejected`` and not waited for."""
+        timed = arrivals is not None      # (not truth-tested: numpy ok)
+        order = sorted(range(len(requests)),
+                       key=lambda i: arrivals[i] if timed else 0.0)
+        t0 = time.monotonic()
+        done: List[Request] = []
+        i = 0
+        while i < len(order) or self.has_work():
+            now = time.monotonic() - t0
+            while i < len(order) and (
+                    not timed or arrivals[order[i]] <= now):
+                self.submit(requests[order[i]])
+                i += 1
+            if not self.has_work():
+                if i < len(order):      # idle until the next arrival
+                    time.sleep(max(0.0, arrivals[order[i]] - now))
+                continue
+            done.extend(self.step())
+        return done
+
+    def stats(self) -> Dict:
+        """Per-rank serving counters + global admission counters."""
+        return {
+            "ranks": self.ranks,
+            "submitted": self.n_submitted,
+            "accepted": self.n_accepted,
+            "rejected": len(self.rejected),
+            "per_rank": [dict(e.stats, queue=len(e.queue),
+                              free_slots=e.n_free(),
+                              slots=e.slot_states())
+                         for e in self.shards],
+        }

@@ -266,5 +266,73 @@ def mode_packed_serve_mesh():
         streams_mesh={str(k): v for k, v in s_mesh.items()})
 
 
+def mode_sched_mesh():
+    """Sharded-scheduler continuous batching on mesh packed paths
+    (DESIGN.md §11 bit-identity contract): a slot freed by EOS is
+    refilled from the queue, and every greedy stream equals the solo
+    single-batch engine run on the same deployment. 1×2 mesh = one DP
+    rank with TP-sharded visit lists; 2×2 mesh = two DP-rank engine
+    shards on dp_submeshes, each with its own cache-slot slice."""
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import build_serving_params
+    from repro.models import lm
+    from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+
+    cfg0 = reduced(get_config("qwen3-32b"), layers=2, d_model=64,
+                   vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    # amplified weights: unit-scale random init greedy-decodes into a
+    # constant stream, which would make the mid-decode EOS unreachable
+    params0 = jax.tree.map(lambda a: a * 3.0, params0)
+    deploy = dict(path="packed", sparsity=0.25, block_k=8, block_n=8,
+                  scope="all", verbose=False)
+    rng = np.random.default_rng(0)
+    # 6 requests > 2 ranks × 2 slots, so BOTH mesh shapes build a queue
+    # and exercise the mid-decode refill
+    prompts = [rng.integers(0, 128, size=(6 + 4 * i,)).astype(np.int32)
+               for i in range(6)]
+    budgets = [8, 8, 4, 5, 6, 3]
+
+    def solo(params, cfg, mesh, i, eos_id=None):
+        eng = Engine(params, cfg, batch_slots=1, cache_len=64,
+                     mesh=mesh)
+        return eng.run([Request(rid=i, prompt=prompts[i],
+                                max_new_tokens=budgets[i],
+                                eos_id=eos_id)])[0].out_tokens
+
+    results = {}
+    for name, shape in (("1x2", (1, 2)), ("2x2", (2, 2))):
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        p, c = build_serving_params(params0, cfg0, mesh=mesh, **deploy)
+        # EOS for request 1: first token in its stream with no earlier
+        # occurrence, so the slot frees MID-DECODE and is refilled
+        stream1 = solo(p, c, mesh, 1)
+        eos_at = next(i for i in range(1, len(stream1) - 1)
+                      if stream1[i] not in stream1[:i])
+        eos_id = int(stream1[eos_at])
+        ref = {i: solo(p, c, mesh, i, eos_id=eos_id if i == 1 else None)
+               for i in range(len(prompts))}
+        sched = ShardedScheduler(
+            p, c, mesh=mesh,
+            sched=SchedulerConfig(slots_per_rank=2, cache_len=64))
+        done = sched.run(
+            [Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i],
+                     eos_id=eos_id if i == 1 else None)
+             for i in range(len(prompts))])
+        got = {r.rid: r.out_tokens for r in done}
+        st = sched.stats()
+        results[name] = dict(
+            equal=int(got == ref),
+            eos_early=int(len(ref[1]) == eos_at + 1),
+            refills=sum(r["continuous_refills"] for r in st["per_rank"]),
+            ranks=st["ranks"],
+            ranks_served=len({r.rank for r in done}),
+            streams_ref={str(k): v for k, v in ref.items()},
+            streams_got={str(k): v for k, v in got.items()})
+    out(**{f"{k}_{n}": v for n, res in results.items()
+           for k, v in res.items()})
+
+
 if __name__ == "__main__":
     globals()[f"mode_{sys.argv[1]}"]()

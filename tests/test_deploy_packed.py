@@ -131,6 +131,67 @@ def test_tp_sharded_deploy_single_device_parity():
                                    rtol=1e-5, atol=1e-5)
 
 
+def _assert_trees_equal(a, b):
+    """Exact (bitwise) equality of two packed param trees."""
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb), (len(la), len(lb))
+    for (pa, xa), (pb, xb) in zip(la, lb):
+        xa, xb = np.asarray(xa), np.asarray(xb)
+        assert xa.shape == xb.shape and np.array_equal(xa, xb), \
+            jax.tree_util.keystr(pa)
+
+
+@pytest.mark.parametrize("fuse_ffn", [True, False])
+def test_reshard_packed_matches_from_scratch(fuse_ffn):
+    """Elastic re-deploy fast path (ROADMAP): re-partitioning an
+    existing unsharded pack by slicing + padding its visit lists must be
+    BIT-IDENTICAL to packing from scratch at the new tp — same visit
+    sets, same empty-column flush entries, same shared-nnz padding."""
+    from repro.core.deploy import reshard_packed
+
+    pruned, cfg = _pruned(scope="all", sparsity=0.25)
+    pp1, _ = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn)
+    pp2, _ = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn, tp=2)
+    rs = reshard_packed(pp1, cfg, tp=2)
+    _assert_trees_equal(pp2["segments"], rs["segments"])
+
+
+def test_reshard_packed_quantized_and_roundtrip():
+    """int8 containers reshard exactly too (per-visit scales travel with
+    their visits; epsilon scales of flush entries match), and resharding
+    back to tp=1 reproduces the original pack — so mesh-shape changes
+    can go sharded→sharded without keeping the unsharded pack around."""
+    from repro.core.deploy import reshard_packed
+
+    pruned, cfg = _pruned(scope="all", sparsity=0.25)
+    for fuse_ffn in (True, False):
+        pp1, _ = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn,
+                               quantize=True)
+        pp2, _ = deploy_packed(pruned, cfg, fuse_ffn=fuse_ffn,
+                               quantize=True, tp=2)
+        rs = reshard_packed(pp1, cfg, tp=2)
+        _assert_trees_equal(pp2["segments"], rs["segments"])
+        back = reshard_packed(rs, cfg, tp=1)
+        _assert_trees_equal(pp1["segments"], back["segments"])
+
+
+def test_reshard_packed_forward_parity():
+    """The resharded tree must also SERVE identically: single-device
+    shard-loop forward of reshard(tp=2) matches the unsharded packed
+    forward (same contract as the from-scratch sharded deploy)."""
+    from repro.core.deploy import reshard_packed
+
+    pruned, cfg = _pruned(scope="all", sparsity=0.25)
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    pp1, c1 = deploy_packed(pruned, cfg)
+    rs = reshard_packed(pp1, cfg, tp=2)
+    ref = lm.forward(pp1, c1, toks)
+    got = lm.forward(rs, c1, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_engine_packed_matches_masked_engine_tokens():
     pruned, cfg = _pruned(scope="ffn", sparsity=0.5)
     pp, pcfg = deploy_packed(pruned, cfg)

@@ -105,3 +105,19 @@ def test_mesh_packed_serving_streams_bit_identical():
     assert r["n"] == 3
     assert r["fused_signal"] > 0      # the FFN reduction carries signal
     assert r["equal"] == 1, (r["streams_ref"], r["streams_mesh"])
+
+
+def test_sched_mesh_continuous_batching_bit_identical():
+    """Sharded scheduler on mesh packed paths (DESIGN.md §11): a slot
+    freed by EOS is refilled from the queue mid-decode, and every
+    request's greedy stream is bit-identical to running it alone
+    through the single-batch engine — on the 1×2 TP mesh (one DP rank)
+    and the 2×2 mesh (two DP-rank engine shards on submeshes)."""
+    r = run_worker("sched_mesh", timeout=560)
+    for name in ("1x2", "2x2"):
+        assert r[f"equal_{name}"] == 1, (
+            r[f"streams_ref_{name}"], r[f"streams_got_{name}"])
+        assert r[f"eos_early_{name}"] == 1
+        assert r[f"refills_{name}"] >= 1
+    assert r["ranks_2x2"] == 2
+    assert r["ranks_served_2x2"] == 2   # both DP ranks took traffic

@@ -1,0 +1,31 @@
+"""Docs freshness runs inside tier-1 too, so a stale DESIGN.md section
+list or a dangling README link fails locally before CI."""
+import os
+import sys
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+sys.path.insert(0, os.path.abspath(TOOLS))
+
+import check_docs  # noqa: E402
+
+
+def test_design_sections_match_manifest():
+    import json
+    with open(check_docs.MANIFEST, encoding="utf-8") as f:
+        manifest = json.load(f)
+    assert check_docs.check_sections(manifest) == []
+
+
+def test_readme_and_design_links_resolve():
+    import json
+    with open(check_docs.MANIFEST, encoding="utf-8") as f:
+        manifest = json.load(f)
+    assert check_docs.check_links(manifest) == []
+
+
+def test_checker_detects_drift(tmp_path):
+    """The checker itself must actually fire on a stale manifest (guards
+    against a regex rotting into match-nothing)."""
+    manifest = {"DESIGN.md": {"sections": ["§1 Overview"]}}
+    errs = check_docs.check_sections(manifest)
+    assert errs and "docs_manifest" in errs[0]

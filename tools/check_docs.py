@@ -1,0 +1,113 @@
+"""Docs-freshness checker (CI `docs` job; also tests/test_docs.py).
+
+Two guarantees, both cheap and dependency-free:
+
+1. **Section manifest** — the `## §N Title` headings of DESIGN.md must
+   match `tools/docs_manifest.json` exactly (count, order, titles).
+   Module docstrings cite sections by number, so silent renumbering is
+   the docs-rot mode this catches: adding a section without updating
+   the manifest (or vice versa) fails CI.
+2. **Links and anchors** — every local markdown link in the files
+   listed under `link_checked` must resolve: relative file targets
+   exist, and `#anchor` fragments match a GitHub-slugified heading of
+   the target document. External (http/https/mailto) links are not
+   fetched.
+
+Exit code 0 = fresh; 1 = stale, with one line per finding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MANIFEST = os.path.join(REPO, "tools", "docs_manifest.json")
+
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+SECTION_RE = re.compile(r"^##\s+(§\d+\s+.*?)\s*$", re.M)
+# [text](target) — skips images' leading ! by matching the bracket pair
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces to hyphens, punctuation
+    (other than hyphen/underscore) dropped."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def check_sections(manifest: dict) -> list:
+    errs = []
+    for fname, spec in manifest.items():
+        if not isinstance(spec, dict) or "sections" not in spec:
+            continue
+        want = spec["sections"]
+        got = SECTION_RE.findall(read(os.path.join(REPO, fname)))
+        # normalize runs of whitespace (hard-wrapped titles)
+        got = [re.sub(r"\s+", " ", g) for g in got]
+        if len(got) != len(want):
+            errs.append(f"{fname}: {len(got)} '## §N' sections, "
+                        f"manifest lists {len(want)} — update "
+                        f"tools/docs_manifest.json with the doc")
+        for i, (g, w) in enumerate(zip(got, want)):
+            if g != w:
+                errs.append(f"{fname}: section {i + 1} is {g!r}, "
+                            f"manifest says {w!r}")
+    return errs
+
+
+def check_links(manifest: dict) -> list:
+    errs = []
+    slugs = {}
+
+    def slugs_of(path):
+        if path not in slugs:
+            slugs[path] = {github_slug(h)
+                           for _, h in HEADING_RE.findall(read(path))}
+        return slugs[path]
+
+    for fname in manifest.get("link_checked", ()):
+        fpath = os.path.join(REPO, fname)
+        text = CODE_FENCE_RE.sub("", read(fpath))
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # external
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                tpath = os.path.normpath(
+                    os.path.join(os.path.dirname(fpath), path_part))
+                if not os.path.exists(tpath):
+                    errs.append(f"{fname}: dangling link {target!r} "
+                                f"({path_part} does not exist)")
+                    continue
+            else:
+                tpath = fpath
+            if anchor and tpath.endswith(".md"):
+                if anchor.lower() not in slugs_of(tpath):
+                    errs.append(f"{fname}: anchor {target!r} matches no "
+                                f"heading in {os.path.relpath(tpath, REPO)}")
+    return errs
+
+
+def main() -> int:
+    with open(MANIFEST, encoding="utf-8") as f:
+        manifest = json.load(f)
+    errs = check_sections(manifest) + check_links(manifest)
+    for e in errs:
+        print(f"docs-freshness: {e}")
+    if not errs:
+        print("docs-freshness: OK")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
