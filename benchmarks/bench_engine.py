@@ -28,6 +28,13 @@ reports tokens/sec + p50/p95 request latency for continuous batching
 vs the drain-batch baseline at the SAME slot count — the acceptance
 bar is continuous strictly faster.
 
+The mixed-SLO QoS section (DESIGN.md §12) serves an interleaved
+interactive/batch Poisson load through FCFS (the PR-3 baseline) and
+EDF + aging + preemption at the SAME slot count, reporting per-class
+p50/p95 and per-class tokens/sec — the acceptance bar is
+interactive-class p95 strictly better under EDF with batch-class
+throughput within 10% of FCFS.
+
 Standalone: PYTHONPATH=src python -m benchmarks.bench_engine
 writes BENCH_engine.json next to the repo root.
 """
@@ -168,6 +175,13 @@ LOAD_PROMPT_LEN = 10            # ONE length → admission-group shapes
 LOAD_MAX_NEW = (2, 40, 4, 48, 8, 2, 36, 4, 24, 2, 44, 6)
 
 
+def _pcts_ms(lats: List[float]):
+    """(p50, p95) in ms from sorted latencies (nearest-rank, clamped)."""
+    p50 = lats[len(lats) // 2] * 1e3
+    p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))] * 1e3
+    return p50, p95
+
+
 def _load_requests(vocab: int, n: int = LOAD_REQ,
                    max_new=None) -> List[Request]:
     rng = np.random.default_rng(7)
@@ -214,9 +228,7 @@ def bench_engine_load() -> List:
         done = sched.run(reqs, arrivals=arrivals)
         dt = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in done)
-        lats = sorted(r.latency for r in done)
-        p50 = lats[len(lats) // 2] * 1e3
-        p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))] * 1e3
+        p50, p95 = _pcts_ms(sorted(r.latency for r in done))
         tok_s = toks / dt
         results[mode] = tok_s
         print(f"  {mode:10s}: {tok_s:7.1f} tok/s  "
@@ -233,6 +245,121 @@ def bench_engine_load() -> List:
           f"({'OK' if ok else 'REGRESSION: drain not slower!'})")
     rows.append(("engine/sched_speedup/load", 0.0,
                  f"x{speedup:.3f}_vs_drain_batch"))
+    return rows
+
+
+QOS_REQ = 16
+QOS_MEAN_ARRIVAL_S = 0.004
+# batch-class budgets: long decodes for interactive traffic to leapfrog
+QOS_BATCH_NEW = (28, 44, 24, 48, 32, 40, 26, 36)
+QOS_INTER_NEW = 4
+QOS_INTER_DEADLINE_S = 0.25
+
+
+def _qos_requests(vocab: int) -> List[Request]:
+    rng = np.random.default_rng(9)
+    reqs = []
+    for i in range(QOS_REQ):
+        interactive = i % 2 == 1
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, size=(LOAD_PROMPT_LEN,))
+            .astype(np.int32),
+            max_new_tokens=(QOS_INTER_NEW if interactive
+                            else QOS_BATCH_NEW[(i // 2)
+                                               % len(QOS_BATCH_NEW)]),
+            slo="interactive" if interactive else "batch",
+            deadline=QOS_INTER_DEADLINE_S if interactive else 30.0))
+    return reqs
+
+
+def _warm_preempt(sched, vocab: int):
+    """Compile the preempt/resume path (cache snapshot + restore) so
+    the timed QoS run measures scheduling, not one-off jit. Preemption
+    only fires with EVERY slot busy, so fill the whole rank first."""
+    rng = np.random.default_rng(21)
+    mk = lambda rid, new, slo, dl: Request(
+        rid=rid, prompt=rng.integers(0, vocab, size=(LOAD_PROMPT_LEN,))
+        .astype(np.int32), max_new_tokens=new, slo=slo, deadline=dl)
+    slots = sched.sched.slots_per_rank
+    for s in range(slots):
+        sched.submit(mk(10_000 + s, 12, "batch", 30.0))
+    for _ in range(3):
+        sched.step()
+    sched.submit(mk(10_000 + slots, 2, "interactive", 0.0))
+    while sched.has_work():
+        sched.step()
+    assert sched.stats()["preemptions"] >= 1, \
+        "preempt warm-up failed to trigger a preemption"
+
+
+def _class_stats(done, klass: str, dt: float):
+    rs = [r for r in done if r.slo == klass]
+    toks = sum(len(r.out_tokens) for r in rs)
+    p50, p95 = _pcts_ms(sorted(r.latency for r in rs))
+    return dict(n=len(rs), tok_s=toks / dt, p50_ms=p50, p95_ms=p95)
+
+
+def bench_engine_qos() -> List:
+    """Mixed-SLO load (DESIGN.md §12): interleaved interactive (tight
+    deadline, short decode) and batch (long decode) Poisson traffic
+    through FCFS vs EDF + aging + preemption at the same slot count.
+    Acceptance: interactive p95 improves under EDF, batch-class
+    throughput stays within 10%."""
+    from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+
+    rows = []
+    print("\n== scheduler QoS: mixed-SLO Poisson load "
+          f"({QOS_REQ} reqs, {LOAD_SLOTS} slots, fcfs vs edf) ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    arrivals = list(np.random.default_rng(13).exponential(
+        QOS_MEAN_ARRIVAL_S, size=QOS_REQ).cumsum())
+
+    results = {}
+    for mode in ("fcfs", "edf"):
+        scfg = SchedulerConfig(
+            slots_per_rank=LOAD_SLOTS, cache_len=64,
+            policy=mode, aging=0.05 if mode == "edf" else 0.0,
+            preempt=mode == "edf", preempt_mode="kv")
+        sched = ShardedScheduler(params0, cfg0, ranks=1, sched=scfg)
+        _warm_scheduler(sched, cfg0.vocab_size)
+        if scfg.preempt:
+            _warm_preempt(sched, cfg0.vocab_size)
+        reqs = _qos_requests(cfg0.vocab_size)
+        warm_preempts = sched.stats()["preemptions"]
+        t0 = time.perf_counter()
+        done = sched.run(reqs, arrivals=arrivals)
+        dt = time.perf_counter() - t0
+        st = {k: _class_stats(done, k, dt)
+              for k in ("interactive", "batch")}
+        # delta over the warm-up: preemptions of the TIMED run only
+        st["preemptions"] = sched.stats()["preemptions"] - warm_preempts
+        results[mode] = st
+        for k in ("interactive", "batch"):
+            print(f"  {mode:5s} {k:12s}: p50={st[k]['p50_ms']:6.0f}ms "
+                  f"p95={st[k]['p95_ms']:6.0f}ms "
+                  f"{st[k]['tok_s']:6.1f} tok/s ({st[k]['n']} reqs)")
+            rows.append((
+                f"engine/sched/qos_{mode}/{k}", st[k]["p95_ms"] * 1e3,
+                f"tok_s={st[k]['tok_s']:.2f};"
+                f"p50_ms={st[k]['p50_ms']:.1f};"
+                f"p95_ms={st[k]['p95_ms']:.1f};slots={LOAD_SLOTS};"
+                f"reqs={st[k]['n']};"
+                f"preemptions={st['preemptions']}"))
+    int_p95_x = (results["fcfs"]["interactive"]["p95_ms"]
+                 / results["edf"]["interactive"]["p95_ms"])
+    batch_ratio = (results["edf"]["batch"]["tok_s"]
+                   / results["fcfs"]["batch"]["tok_s"])
+    ok = int_p95_x > 1.0 and batch_ratio >= 0.9
+    print(f"  edf vs fcfs: interactive p95 x{int_p95_x:.2f} better, "
+          f"batch throughput x{batch_ratio:.2f} "
+          f"({results['edf']['preemptions']} preemptions) "
+          f"({'OK' if ok else 'REGRESSION: QoS bar missed!'})")
+    rows.append(("engine/sched_qos_gain/load", 0.0,
+                 f"int_p95_x{int_p95_x:.3f};"
+                 f"batch_tok_ratio={batch_ratio:.3f};"
+                 f"preemptions={results['edf']['preemptions']}"))
     return rows
 
 
@@ -270,6 +397,7 @@ def bench_engine() -> List:
                      f"x{speedup:.3f}_vs_percall_repack"))
     rows.extend(_mesh_rows_subprocess())
     rows.extend(bench_engine_load())
+    rows.extend(bench_engine_qos())
     return rows
 
 

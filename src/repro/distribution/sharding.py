@@ -52,6 +52,34 @@ def dp_submeshes(mesh: Mesh, profile: str = "tp"):
     return subs
 
 
+def prefill_bucket_table(cache_len: int, n_buckets: int = 4,
+                         min_len: int = 16) -> Tuple[int, ...]:
+    """Prefill-length buckets for the jitted admission (DESIGN.md §12):
+    geometric halving down from ``cache_len`` so the longest bucket
+    always covers every cacheable prompt. Padding a prompt of length L
+    to the smallest bucket ≥ L bounds the admission jit cache at
+    O(n_buckets) programs (vs one per distinct padded length) at the
+    cost of ≤ 2× extra masked prefill columns."""
+    out = []
+    b = int(cache_len)
+    while len(out) < n_buckets and b >= min_len:
+        out.append(b)
+        b //= 2
+    return tuple(sorted(out)) if out else (int(cache_len),)
+
+
+def rank_bucket_tables(ranks: int, cache_len: int, n_buckets: int = 4,
+                       min_len: int = 16) -> Tuple[Tuple[int, ...], ...]:
+    """One bucket table per DP-rank engine shard (``serve/scheduler.py``
+    pairs these with ``dp_submeshes``). Every rank gets the same table —
+    a request must compile the same admission program no matter which
+    rank serves it, so re-routing (failover, load) never pays a fresh
+    compile — but the table rides per-rank so a heterogeneous-rank
+    policy has one place to diverge."""
+    table = prefill_bucket_table(cache_len, n_buckets, min_len)
+    return tuple(table for _ in range(ranks))
+
+
 def axis_size(mesh: Mesh, name) -> int:
     if isinstance(name, tuple):
         n = 1

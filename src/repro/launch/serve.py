@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import re
 import time
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -85,10 +86,20 @@ def parse_mesh(spec: Optional[str]):
     """'dp,tp' -> a (data, model) Mesh, forcing enough fake CPU devices
     when the host platform would otherwise come up short (harmless on
     real accelerators: the flag only affects the CPU platform, and it
-    must be set before JAX first initializes its backends)."""
+    must be set before JAX first initializes its backends). Malformed
+    specs fail HERE with a usage message, not as a downstream
+    make_mesh/submesh shape error."""
     if not spec:
         return None
-    dp, tp = (int(v) for v in spec.split(","))
+    m = re.fullmatch(r"\s*(\d+)\s*,\s*(\d+)\s*", spec)
+    if not m:
+        raise SystemExit(
+            f"--mesh expects 'DP,TP' — two comma-separated positive "
+            f"integers, e.g. --mesh 2,2 — got {spec!r}")
+    dp, tp = int(m.group(1)), int(m.group(2))
+    if dp < 1 or tp < 1:
+        raise SystemExit(
+            f"--mesh axes must both be >= 1, got {spec!r}")
     from repro.launch.mesh import ensure_fake_cpu_devices
     ensure_fake_cpu_devices(dp * tp)
     import jax
@@ -99,6 +110,61 @@ def parse_mesh(spec: Optional[str]):
             f"--xla_force_host_platform_device_count={dp * tp} before "
             "any jax import initializes the backend)")
     return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def parse_buckets(spec: Optional[str], cache_len: int
+                  ) -> Optional[Tuple[int, ...]]:
+    """--buckets 'N' -> geometric table of N lengths topping out at
+    --cache-len (distribution.sharding.prefill_bucket_table);
+    --buckets 'l1,l2,…' -> explicit lengths. None/'' -> exact shapes."""
+    if not spec:
+        return None
+    try:
+        if "," in spec:
+            lens = tuple(int(v) for v in spec.split(","))
+        else:
+            lens = int(spec)
+    except ValueError:
+        raise SystemExit(
+            f"--buckets expects an int count (e.g. --buckets 4) or "
+            f"comma-separated lengths (e.g. --buckets 32,64,128), "
+            f"got {spec!r}")
+    if isinstance(lens, int):
+        if lens < 1:
+            raise SystemExit(f"--buckets count must be >= 1, got {spec!r}")
+        from repro.distribution.sharding import prefill_bucket_table
+        return prefill_bucket_table(cache_len, lens)
+    if not lens or any(v < 1 for v in lens):
+        raise SystemExit(
+            f"--buckets lengths must all be >= 1, got {spec!r}")
+    if any(v > cache_len for v in lens):
+        raise SystemExit(
+            f"--buckets lengths must not exceed --cache-len "
+            f"({cache_len}): a bucket beyond the cache can never "
+            f"admit — got {spec!r}")
+    return lens
+
+
+def check_ranks(ranks: Optional[int], mesh, profile: str = "tp"):
+    """--ranks vs the mesh's DP size: a clear usage error instead of
+    the cryptic submesh-count ValueError from the scheduler."""
+    if ranks is None or mesh is None:
+        return
+    from repro.distribution import sharding as shd
+    dp = 1
+    for a in shd.dp_axes(mesh, profile):
+        dp *= mesh.shape[a]
+    if ranks > dp:
+        raise SystemExit(
+            f"--ranks {ranks} exceeds the mesh's DP size {dp} "
+            f"(mesh {dict(mesh.shape)}): each scheduler rank needs its "
+            f"own DP slice of the mesh; drop --ranks or grow the DP "
+            f"axis to >= {ranks}")
+    if ranks != dp:
+        raise SystemExit(
+            f"--ranks {ranks} conflicts with the mesh's DP size {dp}: "
+            f"under a mesh the DP axis decides the rank count; drop "
+            f"--ranks")
 
 
 def main():
@@ -136,21 +202,51 @@ def main():
                     help="admission control: reject submissions once "
                          "this many requests are waiting beyond free "
                          "slot capacity (default: unbounded)")
-    ap.add_argument("--admission", choices=("fcfs", "sjf"),
+    ap.add_argument("--admission", choices=("fcfs", "sjf", "edf"),
                     default="fcfs",
-                    help="queue policy: fcfs (arrival order) or sjf "
-                         "(shortest remaining work first)")
+                    help="queue policy: fcfs (arrival order), sjf "
+                         "(shortest remaining work first), or edf "
+                         "(earliest effective deadline first — the QoS "
+                         "policy, DESIGN.md §12)")
+    ap.add_argument("--aging", type=float, default=0.0,
+                    help="anti-starvation credit per second waited "
+                         "(seconds of deadline for edf, tokens for "
+                         "sjf); 0 = pure EDF/SJF")
+    ap.add_argument("--preempt", action="store_true",
+                    help="interactive-class requests may evict the "
+                         "worst-deadline batch-class decode at step "
+                         "granularity (resume is bit-identical)")
+    ap.add_argument("--preempt-mode", choices=("kv", "reprefill"),
+                    default="kv",
+                    help="preempted-slot resume: 'kv' snapshots the "
+                         "slot's cache rows, 'reprefill' re-prefills "
+                         "prompt + generated tokens")
+    ap.add_argument("--interactive-every", type=int, default=0,
+                    help="mark every Nth synthetic request "
+                         "interactive-class (0 = all batch)")
+    ap.add_argument("--buckets", default=None,
+                    help="prefill shape bucketing: an int count builds "
+                         "a geometric table up to --cache-len; "
+                         "comma-separated lengths give it explicitly. "
+                         "Bounds jitted-admission compiles at "
+                         "O(buckets) under diverse prompt lengths")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the per-token streaming "
+                         "iterator and print tokens as they retire")
     ap.add_argument("--drain", action="store_true",
                     help="drain-batch baseline: admit only when every "
                          "slot is free (A/B control for continuous "
                          "batching)")
     ap.add_argument("--ranks", type=int, default=None,
                     help="engine shards without a mesh (testing); with "
-                         "--mesh the DP axis decides")
+                         "--mesh the DP axis must agree (clear error "
+                         "otherwise)")
     args = ap.parse_args()
 
     # BEFORE any backend-initializing jax call: may set XLA_FLAGS
     mesh = parse_mesh(args.mesh)
+    check_ranks(args.ranks, mesh)
+    buckets = parse_buckets(args.buckets, args.cache_len)
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -174,43 +270,69 @@ def main():
               "devices")
 
     rng = np.random.default_rng(0)
+    every = args.interactive_every
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         size=(rng.integers(8, 48),))
                     .astype(np.int32),
                     max_new_tokens=args.max_new,
                     temperature=args.temperature,
-                    eos_id=args.eos_id)
+                    eos_id=args.eos_id,
+                    slo=("interactive" if every and i % every == 0
+                         else "batch"))
             for i in range(args.requests)]
+
+    def drive(run_fn, stream_fn) -> Sequence[Request]:
+        """--stream: print tokens as they retire; else run to done."""
+        if not args.stream:
+            return run_fn(reqs)
+        n = 0
+        for rid, tok in stream_fn(reqs):
+            if n < 12:
+                print(f"  stream: req {rid} += {tok}")
+            n += 1
+        print(f"  … streamed {n} tokens incrementally")
+        return [r for r in reqs if r.done]
 
     if args.scheduler:
         from repro.serve.scheduler import SchedulerConfig, \
             ShardedScheduler
-        if mesh is not None and args.ranks is not None:
-            raise SystemExit("--ranks conflicts with --mesh: under a "
-                             "mesh the DP axis decides the rank count; "
-                             "drop --ranks")
         sched = ShardedScheduler(
             params, cfg, mesh=mesh, ranks=args.ranks,
             sched=SchedulerConfig(
                 slots_per_rank=args.slots_per_rank or args.slots,
                 cache_len=args.cache_len, max_queue=args.max_queue,
-                policy=args.admission, drain=args.drain))
+                policy=args.admission, drain=args.drain,
+                aging=args.aging, preempt=args.preempt,
+                preempt_mode=args.preempt_mode, buckets=buckets))
         t0 = time.time()
-        done = sched.run(reqs)
+        done = drive(sched.run, sched.stream)
         dt = time.time() - t0
         st = sched.stats()
         print(f"scheduler: {st['ranks']} rank(s), "
               f"{st['accepted']}/{st['submitted']} admitted "
-              f"({st['rejected']} rejected), policy={args.admission}"
+              f"({st['rejected']} rejected, {st['failed']} failed, "
+              f"{st['preemptions']} preempted), "
+              f"policy={args.admission}"
               f"{', drain baseline' if args.drain else ''}")
         for r_st in st["per_rank"]:
             print(f"  rank stats: {r_st}")
+        if every:
+            for klass in ("interactive", "batch"):
+                lats = sorted(r.latency for r in done
+                              if r.slo == klass and r.latency)
+                if lats:
+                    p50 = lats[len(lats) // 2] * 1e3
+                    p95 = lats[min(len(lats) - 1,
+                                   int(len(lats) * 0.95))] * 1e3
+                    print(f"  {klass:12s}: n={len(lats)} "
+                          f"p50={p50:.0f}ms p95={p95:.0f}ms")
     else:
         eng = Engine(params, cfg, batch_slots=args.slots,
-                     cache_len=args.cache_len, mesh=mesh)
+                     cache_len=args.cache_len, mesh=mesh,
+                     buckets=buckets)
         t0 = time.time()
-        done = eng.run(reqs)
+        done = drive(eng.run, eng.stream)
         dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "

@@ -17,6 +17,16 @@ Serving fast path (DESIGN.md §9):
   cache). Attention-only stacks only; hybrid/SSM stacks fall back to
   per-request prefill (a padded prefix would corrupt the recurrent
   state).
+* **Prefill shape bucketing** (DESIGN.md §12) — ``buckets=(…)`` pads
+  every admission group to a fixed group size (all B slots; rows for
+  slots not being admitted are masked out of the cache scatter) and
+  pads the padded length S up to the smallest bucket ≥ S, so the
+  jitted admission compiles O(len(buckets)) programs instead of
+  O(distinct prompt lengths × group sizes) under diverse traffic.
+  Greedy streams are bit-identical to the unbucketed path: extra pad
+  columns carry negative positions (masked from attention, written to
+  disjoint ring slots with pos = -1) and masked rows rewrite each
+  untouched slot's existing cache rows verbatim.
 * **On-device sampling** — greedy argmax and temperature sampling
   (``jax.random.categorical``) run inside the jitted decode step, so
   only the sampled token ids (B int32) and done flags cross to the
@@ -41,6 +51,25 @@ refilled from the queue at the very next step; ``admission="drain"`` is
 the classic batch-inference baseline that only admits when EVERY slot
 is free (used as the benchmark control for continuous batching).
 
+Preemption (DESIGN.md §12): :meth:`Engine.preempt_slot` moves a
+DECODE-state request back to the queue at step granularity. Two resume
+modes: ``keep_kv=True`` snapshots the slot's cache rows (one on-device
+gather) and resume restores them with one scatter — exact by
+construction; ``keep_kv=False`` drops the KV and resume RE-PREFILLS
+``prompt + out_tokens[:-1]`` through the normal admission path (no new
+token is sampled — the preempted request's last token was already
+emitted), trading a prefill pass for cache memory. Either way the
+greedy stream across a preempt/resume cycle is bit-identical to an
+uninterrupted decode. Requests carry a ``status`` field
+(new/queued/running/done/failed/rejected) so schedulers and callers
+observe the lifecycle.
+
+Streaming: ``Engine.on_token`` (a ``(request, token) -> None`` sink) is
+called for every token the moment it is sampled — prefill first tokens
+and decode tokens alike; ``Engine.stream(requests)`` wraps it as a
+``(rid, token)`` iterator. The sharded scheduler fans the same sink
+across its ranks (``serve/scheduler.py``).
+
 One Engine is one *engine shard*: in the sharded scheduler
 (``serve/scheduler.py``) each DP rank owns an Engine whose caches —
 hence slots — live on that rank's submesh, so ranks serve independent
@@ -52,7 +81,7 @@ import contextlib
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import List, Optional
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,22 +91,37 @@ from repro.configs.base import MIXER_ATTN, ModelConfig
 from repro.models import lm
 
 ADMISSION_MODES = ("continuous", "drain")
+SLO_CLASSES = ("interactive", "batch")
+# request lifecycle states surfaced on Request.status
+STATUSES = ("new", "queued", "running", "done", "failed", "rejected")
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)                    # identity semantics: a Request
+class Request:                          # is a mutable in-flight object
     rid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0        # 0 = greedy
     eos_id: Optional[int] = None    # stop token (device-side check)
+    # QoS (DESIGN.md §12): SLO class + latency target. ``deadline`` is
+    # RELATIVE seconds from submission (None = the scheduler's default
+    # for the class); the scheduler stamps the absolute ``t_deadline``.
+    slo: str = "batch"              # "interactive" | "batch"
+    deadline: Optional[float] = None
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    status: str = "new"             # see STATUSES
+    error: Optional[str] = None     # set when status == "failed"
     # serving metadata (filled by Engine / ShardedScheduler)
     rank: Optional[int] = None      # engine shard that served the request
     t_submit: Optional[float] = None   # time.monotonic() at submission
     t_first: Optional[float] = None    # first token sampled (prefill)
     t_done: Optional[float] = None     # retired
+    t_deadline: Optional[float] = None  # absolute monotonic deadline
+    preemptions: int = 0            # times preempted back to the queue
+    # engine-internal resume state (set by preempt_slot)
+    _resume_pos: Optional[int] = field(default=None, repr=False)
+    _kv: Optional[object] = field(default=None, repr=False)
 
     @property
     def latency(self) -> Optional[float]:
@@ -108,13 +152,16 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  cache_len: int = 512, rng_seed: int = 0, mesh=None,
                  profile: str = "tp", admission: str = "continuous",
-                 rank: int = 0):
+                 rank: int = 0,
+                 buckets: Optional[Sequence[int]] = None):
         assert admission in ADMISSION_MODES, admission
         self.admission = admission
         self.rank = rank
+        self.dead = False               # set by the scheduler on a raise
         self.stats = {"decode_steps": 0, "admitted": 0,
                       "prefill_tokens": 0, "generated_tokens": 0,
-                      "continuous_refills": 0}
+                      "continuous_refills": 0, "preemptions": 0,
+                      "resumes": 0, "failed": 0}
         self.mesh = mesh
         self.profile = profile
         if mesh is not None:
@@ -126,6 +173,17 @@ class Engine:
         self.cfg = cfg
         self.B = batch_slots
         self.cache_len = cache_len
+        # prefill length buckets (sorted, ≤ cache_len); None = exact
+        # shapes (the pre-bucketing behavior, bit-identical programs)
+        self.buckets: Optional[Tuple[int, ...]] = None
+        if buckets:
+            bs = tuple(sorted({int(b) for b in buckets}))
+            if bs[0] < 1 or bs[-1] > cache_len:
+                raise ValueError(
+                    f"prefill buckets must lie in [1, cache_len="
+                    f"{cache_len}], got {bs} — a bucket beyond the "
+                    f"cache can never admit")
+            self.buckets = bs
         self.caches = lm.init_caches(params, cfg, batch_slots, cache_len)
         if mesh is not None:
             from repro.distribution import sharding as shd
@@ -137,6 +195,7 @@ class Engine:
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
         self._finished_at_admission: List[Request] = []
+        self.on_token: Optional[Callable[[Request, int], None]] = None
         self._key = jax.random.PRNGKey(rng_seed)
         self._attn_only = all(m == MIXER_ATTN
                               for m in cfg.layer_mixer_kinds())
@@ -144,23 +203,41 @@ class Engine:
         self._prefill = jax.jit(partial(self._prefill_and_write, cfg,
                                         cache_len))
         self._sample = jax.jit(_sample_tokens)
+        # preemption resume: one-gather snapshot / one-scatter restore of
+        # a slot's cache rows (slot index is traced — no per-slot
+        # recompilation)
+        self._snap = jax.jit(lambda caches, slot: jax.tree.map(
+            lambda leaf: leaf[:, slot], caches))
+        self._restore = jax.jit(lambda caches, saved, slot: jax.tree.map(
+            lambda leaf, s: leaf.at[:, slot].set(s), caches, saved))
 
     @staticmethod
     def _prefill_and_write(cfg, cache_len, params, toks, poss, caches,
-                           slots):
+                           slots, valid):
         """Jitted admission: prompt prefill + scatter of the new cache
         rows into the batch caches at ``slots``, one device program.
         (Admission used to run the forward eagerly — per-op dispatch
         made a single refill cost ~100 decode steps, wiping out the
         continuous-batching win under load.) Only the last-token logits
-        (G, V) come back to the host."""
+        (G, V) come back to the host.
+
+        ``valid``: optional (G,) bool mask for the bucketed fixed-shape
+        admission — rows where it is False are group padding whose
+        scatter must leave the target slot untouched, so their "new"
+        rows are replaced by the slot's EXISTING rows before the write
+        (``slots`` covers each batch slot exactly once in that mode, so
+        the scatter indices stay unique and deterministic)."""
         logits, caches1 = lm.prefill(params, cfg, tokens=toks,
                                      cache_len=cache_len,
                                      positions=poss)
 
         def put(batch_leaf, new_leaf):
-            return batch_leaf.at[:, slots].set(
-                new_leaf.astype(batch_leaf.dtype))
+            new_leaf = new_leaf.astype(batch_leaf.dtype)
+            if valid is not None:
+                keep = batch_leaf[:, slots]
+                vm = valid.reshape((1, -1) + (1,) * (new_leaf.ndim - 2))
+                new_leaf = jnp.where(vm, new_leaf, keep)
+            return batch_leaf.at[:, slots].set(new_leaf)
 
         return logits[:, 0], jax.tree.map(put, caches, caches1)
 
@@ -189,16 +266,14 @@ class Engine:
         stack.enter_context(dctx.use_mesh(self.mesh, self.profile))
         return stack
 
-    def submit(self, req: Request, index: Optional[int] = None):
-        """Enqueue a request. ``index`` lets a scheduler place it by
-        admission policy (e.g. SJF); default is FCFS append."""
+    def submit(self, req: Request):
+        """Enqueue a request (FCFS append; a scheduler imposes its own
+        queue order by re-sorting before each step)."""
         if req.t_submit is None:
             req.t_submit = time.monotonic()
         req.rank = self.rank
-        if index is None:
-            self.queue.append(req)
-        else:
-            self.queue.insert(index, req)
+        req.status = "queued"
+        self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -216,65 +291,163 @@ class Engine:
         return bool(self.queue) or any(r is not None
                                        for r in self.slot_req)
 
-    def outstanding_tokens(self) -> int:
+    def outstanding_tokens(self, slo: Optional[str] = None) -> int:
         """Load metric for scheduler routing: queued work (prompt still
         to prefill + decode budget) plus the REMAINING decode budget of
-        every occupied slot (their prompts are already prefilled)."""
-        return (sum(r.cost_estimate() for r in self.queue)
+        every occupied slot (their prompts are already prefilled).
+        ``slo`` restricts the sum to one SLO class (latency-aware
+        routing keys interactive traffic on interactive contention)."""
+        return (sum(r.cost_estimate() for r in self.queue
+                    if slo is None or r.slo == slo)
                 + sum(r.max_new_tokens - len(r.out_tokens)
-                      for r in self.slot_req if r is not None))
+                      for r in self.slot_req
+                      if r is not None and (slo is None or r.slo == slo)))
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    def _emit(self, req: Request, tok: int):
+        """Append + stream a freshly sampled token."""
+        req.out_tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(req, tok)
 
     def _sample_host(self, logits, reqs: List[Request]) -> List[int]:
         temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
         toks = self._sample(logits, self._next_key(), temps)
         return [int(t) for t in np.asarray(toks)]
 
-    def _prefill_into_slot(self, slot: int, req: Request):
+    # -- preemption (DESIGN.md §12) ------------------------------------
+    def preempt_slot(self, slot: int, *, keep_kv: bool = True) -> Request:
+        """Move the request decoding in ``slot`` back to QUEUED at step
+        granularity and free the slot. ``keep_kv=True`` snapshots the
+        slot's cache rows for a one-scatter exact resume;
+        ``keep_kv=False`` drops them — resume re-prefills
+        ``prompt + out_tokens[:-1]`` (the last emitted token becomes the
+        next decode input, exactly as if decode had never stopped). The
+        caller re-queues the returned request."""
+        req = self.slot_req[slot]
+        assert req is not None, f"preempting free slot {slot}"
+        if keep_kv:
+            with self._mesh_ctx():
+                req._kv = self._snap(self.caches, slot)
+        req._resume_pos = int(self.pos[slot])
+        req.preemptions += 1
+        req.status = "queued"
+        self.slot_req[slot] = None
+        self.stats["preemptions"] += 1
+        return req
+
+    def _finish_resume(self, slot: int, req: Request):
+        req._resume_pos = None
+        req._kv = None
+        req.status = "running"
+        self.slot_req[slot] = req
+        self.stats["resumes"] += 1
+
+    def _restore_slot(self, slot: int, req: Request):
+        """KV-snapshot resume: scatter the saved cache rows back — no
+        forward pass, bit-exact by construction."""
+        assert self.slot_req[slot] is None, \
+            f"resume into occupied slot {slot}"
+        self.caches = self._restore(self.caches, req._kv, slot)
+        self.pos[slot] = req._resume_pos
+        self._finish_resume(slot, req)
+
+    def _prefill_tokens(self, req: Request) -> np.ndarray:
+        """The token sequence admission must prefill: the prompt, or for
+        a re-prefill resume the prompt + all generated tokens but the
+        last (which is the next decode input)."""
+        if req._resume_pos is None:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([
+            np.asarray(req.prompt, np.int32),
+            np.asarray(req.out_tokens[:-1], np.int32)])
+
+    # -- prefill bucketing (DESIGN.md §12) -----------------------------
+    def _bucket_len(self, S: int) -> int:
+        """Smallest bucket ≥ S; exact S when S exceeds every bucket
+        (rare tail — one extra program, never a wrong answer)."""
+        for b in self.buckets:
+            if b >= S:
+                return b
+        return S
+
+    def _prefill_into_slot(self, slot: int, req: Request,
+                           seq: np.ndarray):
         """Single-sequence prefill; its cache rows are written into the
         batch caches at ``slot``. Fallback path: hybrid/SSM stacks and
         prompts longer than the cache."""
-        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        toks = jnp.asarray(seq[None, :], jnp.int32)
         logits_last, self.caches = self._prefill(
             self.params, toks, None, self.caches,
-            jnp.asarray([slot], jnp.int32))
-        self.pos[slot] = len(req.prompt)
+            jnp.asarray([slot], jnp.int32), None)
+        assert self.slot_req[slot] is None, \
+            f"prefill into occupied slot {slot}"
+        self.pos[slot] = len(seq)
+        if req._resume_pos is not None:
+            self._finish_resume(slot, req)
+            return
         (nxt,) = self._sample_host(logits_last, [req])
-        req.out_tokens.append(nxt)
+        self._emit(req, nxt)
         req.t_first = time.monotonic()
         if self._retired_at_admission(req):
             return
+        req.status = "running"
         self.slot_req[slot] = req
 
-    def _prefill_group(self, slots: List[int], reqs: List[Request]):
+    def _prefill_group(self, slots: List[int], reqs: List[Request],
+                       seqs: List[np.ndarray]):
         """Batched multi-slot prefill: one LEFT-padded forward pass for
         all admitted prompts. Row i of the positions array is
         [-(S-L_i) … -1, 0 … L_i-1]; negative positions are masked out of
         attention and land in the cache with pos = -1, so shorter
-        prompts are bit-exact vs solo prefill."""
+        prompts are bit-exact vs solo prefill. With ``buckets`` the
+        group is padded to a FIXED shape — all B rows, S rounded up to a
+        bucket — and a validity mask keeps the pad rows from touching
+        any slot (O(len(buckets)) compiled programs total)."""
         G = len(reqs)
-        lens = [len(r.prompt) for r in reqs]
+        lens = [len(s) for s in seqs]
         S = max(lens)
-        toks = np.zeros((G, S), np.int32)
-        poss = np.zeros((G, S), np.int32)
-        for g, r in enumerate(reqs):
+        valid = None
+        all_slots = list(slots)
+        if self.buckets:
+            S = self._bucket_len(S)
+            all_slots += [i for i in range(self.B) if i not in slots]
+            valid = jnp.asarray(np.arange(len(all_slots)) < G)
+        Gp = len(all_slots)
+        toks = np.zeros((Gp, S), np.int32)
+        poss = np.tile(np.arange(S, dtype=np.int32) - S, (Gp, 1))
+        for g, seq in enumerate(seqs):
             pad = S - lens[g]
-            toks[g, pad:] = r.prompt
+            toks[g, pad:] = seq
             poss[g] = np.arange(S) - pad
         logits_last, self.caches = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(poss),
-            self.caches, jnp.asarray(np.asarray(slots, np.int32)))
-        nxts = self._sample_host(logits_last, reqs)
+            self.caches, jnp.asarray(np.asarray(all_slots, np.int32)),
+            valid)
+        temps = np.zeros((Gp,), np.float32)
+        for g, r in enumerate(reqs):
+            temps[g] = r.temperature
+        sampled = self._sample(logits_last, self._next_key(),
+                               jnp.asarray(temps))
+        nxts = [int(t) for t in np.asarray(sampled)[:G]]
         now = time.monotonic()
         for slot, req, nxt, L in zip(slots, reqs, nxts, lens):
+            assert self.slot_req[slot] is None, \
+                f"prefill into occupied slot {slot}"
             self.pos[slot] = L
-            req.out_tokens.append(nxt)
+            if req._resume_pos is not None:
+                # re-prefill resume: the sampled token is discarded (the
+                # request's last token was emitted before preemption)
+                self._finish_resume(slot, req)
+                continue
+            self._emit(req, nxt)
             req.t_first = now
             if self._retired_at_admission(req):
                 continue
+            req.status = "running"
             self.slot_req[slot] = req
 
     def _retired_at_admission(self, req: Request) -> bool:
@@ -284,6 +457,7 @@ class Engine:
              and req.out_tokens[-1] == req.eos_id)
                 or len(req.out_tokens) >= req.max_new_tokens):
             req.done = True
+            req.status = "done"
             req.t_done = time.monotonic()
             self._finished_at_admission.append(req)
             return True
@@ -298,16 +472,39 @@ class Engine:
             return
         if len(free) < self.B:      # refill while other slots decode
             self.stats["continuous_refills"] += take
-        reqs = [self.queue.pop(0) for _ in range(take)]
+        popped = [self.queue.pop(0) for _ in range(take)]
         slots = free[:take]
         self.stats["admitted"] += take
-        self.stats["prefill_tokens"] += sum(len(r.prompt) for r in reqs)
-        if (take > 1 and self._attn_only
-                and max(len(r.prompt) for r in reqs) <= self.cache_len):
-            self._prefill_group(slots, reqs)
-        else:
-            for slot, req in zip(slots, reqs):
-                self._prefill_into_slot(slot, req)
+        try:
+            # KV-snapshot resumes restore directly (no forward pass)
+            pending = []
+            for slot, req in zip(slots, popped):
+                if req._resume_pos is not None and req._kv is not None:
+                    self._restore_slot(slot, req)
+                else:
+                    pending.append((slot, req))
+            if not pending:
+                return
+            slots = [s for s, _ in pending]
+            reqs = [r for _, r in pending]
+            seqs = [self._prefill_tokens(r) for r in reqs]
+            self.stats["prefill_tokens"] += sum(len(s) for s in seqs)
+            if (self._attn_only
+                    and max(len(s) for s in seqs) <= self.cache_len
+                    and (len(reqs) > 1 or self.buckets)):
+                self._prefill_group(slots, reqs, seqs)
+            else:
+                for slot, req, seq in zip(slots, reqs, seqs):
+                    self._prefill_into_slot(slot, req, seq)
+        except BaseException:
+            # a raising prefill/restore must not lose the popped
+            # requests: everything not yet slotted (or retired at
+            # admission) goes back to the queue front, so the
+            # scheduler's failure handler can re-route it
+            placed = {id(r) for r in self.slot_req if r is not None}
+            placed |= {id(r) for r in self._finished_at_admission}
+            self.queue[:0] = [r for r in popped if id(r) not in placed]
+            raise
 
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:
@@ -320,10 +517,14 @@ class Engine:
         self._admit()
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        finished: List[Request] = self._finished_at_admission
-        self._finished_at_admission = []
         if not active:
+            finished = self._finished_at_admission
+            self._finished_at_admission = []
             return finished
+        # requests retired AT admission stay buffered until the decode
+        # below succeeds — if it raises, the scheduler's failure handler
+        # can still recover them as completed (they are done, not lost)
+        finished: List[Request] = []
 
         last = np.zeros((self.B, 1), np.int32)
         temps = np.zeros((self.B,), np.float32)
@@ -351,18 +552,67 @@ class Engine:
         for i in active:
             req = self.slot_req[i]
             self.pos[i] += 1
-            req.out_tokens.append(int(nxt[i]))
+            self._emit(req, int(nxt[i]))
             if bool(done[i]):
                 req.done = True
+                req.status = "done"
                 req.t_done = time.monotonic()
                 finished.append(req)
                 self.slot_req[i] = None
+        finished = self._finished_at_admission + finished
+        self._finished_at_admission = []
         return finished
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        for r in requests:
-            self.submit(r)
-        done: List[Request] = []
-        while len(done) < len(requests):
-            done.extend(self.step())
-        return done
+    # -- failure containment (DESIGN.md §12) ---------------------------
+    def fail_inflight(self, err) -> List[Request]:
+        """Mark every in-flight (slot-occupying) request failed and free
+        its slot. Called by the scheduler when this shard's step raised:
+        only the requests that were mid-flight on the broken rank fail;
+        queued requests are re-routable by the caller."""
+        failed = []
+        now = time.monotonic()
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.status = "failed"
+            req.error = f"{type(err).__name__}: {err}"
+            req.t_done = now
+            self.slot_req[i] = None
+            self.stats["failed"] += 1
+            failed.append(req)
+        return failed
+
+    def run(self, requests: List[Request],
+            on_token: Optional[Callable[[Request, int], None]] = None
+            ) -> List[Request]:
+        prev = self.on_token
+        if on_token is not None:
+            self.on_token = on_token
+        try:
+            for r in requests:
+                self.submit(r)
+            done: List[Request] = []
+            while len(done) < len(requests):
+                done.extend(self.step())
+            return done
+        finally:
+            self.on_token = prev
+
+    def stream(self, requests: List[Request]
+               ) -> Iterator[Tuple[int, int]]:
+        """Per-token iterator: yields ``(rid, token)`` in sampling order
+        as decode steps retire — same serving semantics as :meth:`run`,
+        incremental visibility."""
+        buf: List[Tuple[int, int]] = []
+        prev = self.on_token
+        self.on_token = lambda req, tok: buf.append((req.rid, tok))
+        try:
+            for r in requests:
+                self.submit(r)
+            ndone = 0
+            while ndone < len(requests):
+                ndone += len(self.step())
+                while buf:
+                    yield buf.pop(0)
+        finally:
+            self.on_token = prev

@@ -1,4 +1,5 @@
-"""Sharded request scheduler with continuous batching (DESIGN.md §11).
+"""Sharded request scheduler with continuous batching and QoS
+(DESIGN.md §11–§12).
 
 The layer above ``serve.engine`` that turns one-process batch inference
 into a serving loop with independent request lifetimes:
@@ -9,9 +10,27 @@ into a serving loop with independent request lifetimes:
   absorb on the next step is never shed), so overload sheds new
   traffic instead of growing tail latency without bound.
   Within a rank's queue the admission *policy* orders requests: FCFS
-  (arrival order) or SJF (shortest remaining work first — prompt +
+  (arrival order), SJF (shortest remaining work first — prompt +
   decode budget — which minimizes mean latency under backlog at the
-  cost of long-request starvation).
+  cost of long-request starvation), or EDF (earliest effective
+  deadline first — the QoS policy; see below).
+* **SLO classes + aging (QoS, DESIGN.md §12)** — each request carries
+  an SLO class (``interactive``/``batch``) and a latency target;
+  ``submit`` stamps the absolute deadline (request ``deadline`` or the
+  class default from ``slo_latency``). Under ``policy="edf"`` queues
+  order by *effective* deadline ``t_deadline - aging * wait``: pure
+  EDF at ``aging=0``; any ``aging > 0`` drifts a waiting request's key
+  earlier relative to fresh arrivals, so neither EDF nor SJF (same
+  credit, in tokens) can starve long/late-deadline requests forever.
+* **Preemption** — with ``preempt=True``, a rank whose slots are all
+  busy and whose best-waiting request is interactive-class with an
+  earlier effective deadline than the worst-running batch-class
+  request preempts that victim at step granularity
+  (``Engine.preempt_slot``): KV snapshot (default, one gather) or
+  re-prefill resume — either way the victim's greedy stream stays
+  bit-identical across the preempt/resume cycle. ``max_preemptions``
+  bounds thrash; victims re-enter the queue and age like everyone
+  else. Meaningful under a priority-ordered queue (``edf``/``sjf``).
 * **Per-DP-rank engine shards** — one :class:`~repro.serve.engine.Engine`
   per DP rank, each owning its OWN slice of the KV-cache slots. Under a
   mesh, rank r's engine is built on the r-th submesh from
@@ -20,31 +39,50 @@ into a serving loop with independent request lifetimes:
   slots live on exactly that rank's devices and the TP shard_map packed
   drivers still engage inside the rank. Ranks step independently — a
   rank with an empty queue and free slots costs nothing.
+* **Failure containment** — a rank whose step raises is marked dead:
+  its in-flight requests fail (``Request.status == "failed"``, error
+  attached, collected on ``scheduler.failed``), its QUEUED requests
+  re-route to live ranks, and the serving loop neither deadlocks nor
+  re-dispatches to the dead shard.
 * **Continuous batching** — each engine refills slots freed by EOS or
   budget exhaustion from its queue mid-decode (left-padded re-prefill
   into the freed slot; ``serve/engine.py``), instead of draining the
   whole batch. ``SchedulerConfig(drain=True)`` switches every shard to
   the drain-batch baseline for A/B measurement
   (``benchmarks/bench_engine.py`` throughput-under-load rows).
+* **Streaming** — ``run(..., on_token=fn)`` calls ``fn(request,
+  token)`` the moment each token is sampled on any rank;
+  ``stream(requests)`` is the iterator form, yielding ``(rid, token)``
+  pairs as decode steps retire. Per-rank bucket tables
+  (``SchedulerConfig(buckets=...)``,
+  ``distribution.sharding.rank_bucket_tables``) bound the admission
+  jit cache under randomized traffic.
 
-Routing is least-outstanding-work: a submitted request goes to the rank
-whose queue + occupied slots carry the fewest pending tokens (ties to
-the lowest rank id). Because slots are isolated bit-exactly (DESIGN.md
-§7), the scheduler preserves the engine's contract: every request's
-greedy stream is bit-identical to running it alone through a
-single-batch engine, regardless of which rank/slot served it or what
-traffic it shared the batch with.
+Routing is latency-aware least-outstanding-work: batch requests go to
+the rank with the fewest pending tokens overall; interactive requests
+key on pending INTERACTIVE tokens first (batch backlog on a rank does
+not repel interactive traffic — EDF ordering and preemption leapfrog
+it), total load as tie-break, ties to the lowest rank id. Because
+slots are isolated bit-exactly (DESIGN.md §7), the scheduler preserves
+the engine's contract: every request's greedy stream is bit-identical
+to running it alone through a single-batch engine, regardless of which
+rank/slot served it, what traffic it shared the batch with, or whether
+it was preempted and resumed along the way.
 """
 from __future__ import annotations
 
-import bisect
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple
 
 from repro.serve.engine import Engine, Request
 
-POLICIES = ("fcfs", "sjf")
+POLICIES = ("fcfs", "sjf", "edf")
+PREEMPT_MODES = ("kv", "reprefill")
+# default per-class latency targets (seconds) when a request carries no
+# explicit deadline
+DEFAULT_SLO_LATENCY = {"interactive": 0.5, "batch": 30.0}
 
 
 @dataclass
@@ -54,9 +92,24 @@ class SchedulerConfig:
     # reject once this many requests wait beyond free slot capacity
     # (None = unbounded admission)
     max_queue: Optional[int] = None
-    policy: str = "fcfs"              # queue order: "fcfs" | "sjf"
+    policy: str = "fcfs"              # "fcfs" | "sjf" | "edf"
     drain: bool = False               # drain-batch baseline (ablation)
     rng_seed: int = 0
+    # --- QoS (DESIGN.md §12) -----------------------------------------
+    # anti-starvation credit per second waited, in the policy's native
+    # unit (seconds of deadline for edf, tokens of cost for sjf);
+    # 0 = pure EDF/SJF
+    aging: float = 0.0
+    # per-class default latency targets; None = DEFAULT_SLO_LATENCY
+    slo_latency: Optional[Dict[str, float]] = None
+    preempt: bool = False             # interactive may evict batch
+    preempt_mode: str = "kv"          # "kv" snapshot | "reprefill"
+    max_preemptions: int = 4          # per-request preemption cap
+    preempt_margin: float = 0.0       # required deadline gap (seconds)
+    # prefill shape bucketing: an int builds the geometric table per
+    # rank (distribution.sharding.rank_bucket_tables); a sequence is an
+    # explicit table of lengths; None = exact shapes
+    buckets: Optional[object] = None
 
 
 class ShardedScheduler:
@@ -73,6 +126,8 @@ class ShardedScheduler:
                  profile: str = "tp"):
         self.sched = sched or SchedulerConfig()
         assert self.sched.policy in POLICIES, self.sched.policy
+        assert self.sched.preempt_mode in PREEMPT_MODES, \
+            self.sched.preempt_mode
         if mesh is not None:
             from repro.distribution import sharding as shd
             submeshes = shd.dp_submeshes(mesh, profile)
@@ -83,79 +138,215 @@ class ShardedScheduler:
                     f"axis decides; omit ranks")
         else:
             submeshes = [None] * (ranks or 1)
+        self.bucket_tables = self._resolve_buckets(len(submeshes))
         admission = "drain" if self.sched.drain else "continuous"
         self.shards = [
             Engine(params, cfg, batch_slots=self.sched.slots_per_rank,
                    cache_len=self.sched.cache_len,
                    rng_seed=self.sched.rng_seed + r, mesh=sub,
-                   profile=profile, admission=admission, rank=r)
+                   profile=profile, admission=admission, rank=r,
+                   buckets=self.bucket_tables[r])
             for r, sub in enumerate(submeshes)]
         self.rejected: List[Request] = []
+        self.failed: List[Request] = []
         self.n_submitted = 0
         self.n_accepted = 0
+
+    def _resolve_buckets(self, ranks: int
+                         ) -> Tuple[Optional[Tuple[int, ...]], ...]:
+        b = self.sched.buckets
+        if b is None:
+            return (None,) * ranks
+        from repro.distribution import sharding as shd
+        if isinstance(b, int):
+            return shd.rank_bucket_tables(ranks, self.sched.cache_len,
+                                          n_buckets=b)
+        table = tuple(sorted(int(x) for x in b))
+        return (table,) * ranks
 
     # ------------------------------------------------------------------
     @property
     def ranks(self) -> int:
         return len(self.shards)
 
+    def _live(self) -> List[Engine]:
+        return [e for e in self.shards if not e.dead]
+
     def queued(self) -> int:
         """Requests admitted but not yet occupying a slot."""
         return sum(len(e.queue) for e in self.shards)
 
     def has_work(self) -> bool:
-        return any(e.has_work() for e in self.shards)
+        return any(e.has_work() for e in self._live())
+
+    # -- QoS priorities ------------------------------------------------
+    def _slo_target(self, req: Request) -> float:
+        if req.deadline is not None:
+            return req.deadline
+        lat = self.sched.slo_latency or DEFAULT_SLO_LATENCY
+        return lat.get(req.slo, DEFAULT_SLO_LATENCY["batch"])
+
+    def _deadline_key(self, req: Request, now: float) -> float:
+        """Effective deadline: absolute deadline minus aging credit for
+        time already waited. Used by EDF ordering AND the preemption
+        test (whatever the queue policy)."""
+        sub = req.t_submit if req.t_submit is not None else now
+        dl = req.t_deadline if req.t_deadline is not None \
+            else sub + self._slo_target(req)
+        return dl - self.sched.aging * max(0.0, now - sub)
+
+    def _priority(self, req: Request, now: float) -> float:
+        """Queue-ordering key (smaller = sooner) for the active policy."""
+        p = self.sched.policy
+        if p == "sjf":
+            sub = req.t_submit if req.t_submit is not None else now
+            return req.cost_estimate() \
+                - self.sched.aging * max(0.0, now - sub)
+        if p == "edf":
+            return self._deadline_key(req, now)
+        return req.t_submit if req.t_submit is not None else now
 
     def _route(self, req: Request) -> Engine:
-        """Least outstanding work, ties to the lowest rank id."""
-        return min(self.shards, key=lambda e: (e.outstanding_tokens(),
-                                               e.rank))
+        """Latency-aware least outstanding work (ties to lowest rank)."""
+        live = self._live()
+        if req.slo == "interactive":
+            return min(live, key=lambda e: (
+                e.outstanding_tokens("interactive"),
+                e.outstanding_tokens(), e.rank))
+        return min(live, key=lambda e: (e.outstanding_tokens(), e.rank))
 
     def submit(self, req: Request) -> bool:
-        """Admission control + routing. False = rejected (queue full).
-        The cap counts WAITING work net of free slots: requests a free
-        slot will absorb on the next step are not load."""
+        """Admission control + routing. False = rejected (queue full or
+        no live rank). The cap counts WAITING work net of free slots:
+        requests a free slot will absorb on the next step are not
+        load."""
         self.n_submitted += 1
+        now = time.monotonic()
+        if req.t_submit is None:
+            req.t_submit = now
+        if req.t_deadline is None:
+            req.t_deadline = req.t_submit + self._slo_target(req)
+        if not self._live():
+            req.status = "failed"
+            req.error = "no live engine shards"
+            req._kv = None              # release any snapshot memory
+            self.failed.append(req)
+            return False
         cap = self.sched.max_queue
         if cap is not None:
-            free = sum(e.n_free() for e in self.shards)
+            free = sum(e.n_free() for e in self._live())
             if self.queued() - free >= cap:
+                req.status = "rejected"
                 self.rejected.append(req)
                 return False
         self.n_accepted += 1
-        eng = self._route(req)
-        index = None
-        if self.sched.policy == "sjf":
-            # bisect_right: FCFS among equal-cost requests
-            index = bisect.bisect_right(
-                [q.cost_estimate() for q in eng.queue],
-                req.cost_estimate())
-        eng.submit(req, index=index)
+        self._route(req).submit(req)
         return True
 
+    # -- preemption (DESIGN.md §12) ------------------------------------
+    def _maybe_preempt(self, eng: Engine, now: float):
+        """Evict the worst-running batch-class request when an
+        interactive request with a strictly earlier effective deadline
+        waits and no slot is free. At most one eviction per rank per
+        step; victims re-queue (and re-sort) like fresh arrivals."""
+        if not self.sched.preempt or not eng.queue or eng.n_free() > 0:
+            return
+        head = min(eng.queue, key=lambda r: self._deadline_key(r, now))
+        if head.slo != "interactive":
+            return
+        cands = [(i, r) for i, r in enumerate(eng.slot_req)
+                 if r is not None and r.slo == "batch"
+                 and r.preemptions < self.sched.max_preemptions]
+        if not cands:
+            return
+        slot, victim = max(cands,
+                           key=lambda c: self._deadline_key(c[1], now))
+        if (self._deadline_key(head, now) + self.sched.preempt_margin
+                < self._deadline_key(victim, now)):
+            # the freed slot must go to the triggering head, not to
+            # whatever sits at queue[0] under the active policy — move
+            # it to the front, and the victim to the back
+            i = next(i for i, r in enumerate(eng.queue) if r is head)
+            eng.queue.insert(0, eng.queue.pop(i))
+            eng.queue.append(eng.preempt_slot(
+                slot, keep_kv=self.sched.preempt_mode == "kv"))
+
+    # -- failure containment -------------------------------------------
+    def _on_rank_failure(self, eng: Engine, err: BaseException
+                         ) -> List[Request]:
+        """Contain a raising shard: fail ONLY its in-flight requests,
+        re-route its queued (not-yet-started) requests to live ranks.
+        Returns requests that had already COMPLETED at admission inside
+        the raising step — they are done, not casualties."""
+        eng.dead = True
+        done_at_admission = list(eng._finished_at_admission)
+        eng._finished_at_admission = []
+        self.failed.extend(eng.fail_inflight(err))
+        requeue, eng.queue = list(eng.queue), []
+        live = self._live()
+        for req in requeue:
+            if live:
+                # a KV snapshot taken on the dead rank's caches cannot
+                # restore elsewhere — drop it; _resume_pos survives, so
+                # the new rank resumes by re-prefill (still bit-exact)
+                req._kv = None
+                self._route(req).submit(req)
+            else:
+                req.status = "failed"
+                req.error = (f"rank {eng.rank} died "
+                             f"({type(err).__name__}: {err}); "
+                             "no live shards to re-route to")
+                req._kv = None          # release any snapshot memory
+                self.failed.append(req)
+        return done_at_admission
+
     def step(self) -> List[Request]:
-        """One decode step on every rank that has work; returns the
-        requests retired this step (any rank)."""
+        """One decode step on every live rank that has work; returns the
+        requests retired this step (any rank). Applies queue policy
+        (re-sorting time-varying priorities) and preemption first."""
         finished: List[Request] = []
+        now = time.monotonic()
         for eng in self.shards:
-            if eng.has_work():
+            if eng.dead:
+                continue
+            try:
+                if self.sched.policy != "fcfs" and len(eng.queue) > 1:
+                    eng.queue.sort(key=lambda r: self._priority(r, now))
+                # inside the containment: the KV snapshot in
+                # preempt_slot is a device op and can raise like a step
+                self._maybe_preempt(eng, now)
+                if not eng.has_work():
+                    continue
                 finished.extend(eng.step())
+            except Exception as err:    # noqa: BLE001 — rank containment
+                finished.extend(self._on_rank_failure(eng, err))
         return finished
 
-    def run(self, requests: Sequence[Request],
-            arrivals: Optional[Sequence[float]] = None) -> List[Request]:
-        """Serve ``requests`` to completion. ``arrivals`` (seconds from
-        start, e.g. Poisson offsets) submits each request when its time
-        comes — the open-loop load pattern of the throughput bench;
-        omitted, everything is submitted up front. Rejected requests are
-        collected on ``self.rejected`` and not waited for."""
+    # -- serving loops -------------------------------------------------
+    def _set_sink(self, fn: Optional[Callable[[Request, int], None]]):
+        for e in self.shards:
+            e.on_token = fn
+
+    def _serve_loop(self, requests: Sequence[Request],
+                    arrivals: Optional[Sequence[float]]
+                    ) -> Iterator[List[Request]]:
+        """Shared arrival/step loop: submits each request when its time
+        comes (``arrivals`` in seconds from start, e.g. Poisson offsets;
+        omitted = everything up front), yields the requests retired by
+        each step. Stops when nothing is pending or every rank died."""
         timed = arrivals is not None      # (not truth-tested: numpy ok)
         order = sorted(range(len(requests)),
                        key=lambda i: arrivals[i] if timed else 0.0)
         t0 = time.monotonic()
-        done: List[Request] = []
         i = 0
         while i < len(order) or self.has_work():
+            if not self._live():
+                # total failure: the not-yet-submitted arrivals must
+                # still resolve — submit routes them to self.failed
+                while i < len(order):
+                    self.submit(requests[order[i]])
+                    i += 1
+                return
             now = time.monotonic() - t0
             while i < len(order) and (
                     not timed or arrivals[order[i]] <= now):
@@ -165,18 +356,55 @@ class ShardedScheduler:
                 if i < len(order):      # idle until the next arrival
                     time.sleep(max(0.0, arrivals[order[i]] - now))
                 continue
-            done.extend(self.step())
-        return done
+            yield self.step()
+
+    def run(self, requests: Sequence[Request],
+            arrivals: Optional[Sequence[float]] = None,
+            on_token: Optional[Callable[[Request, int], None]] = None
+            ) -> List[Request]:
+        """Serve ``requests`` to completion; returns the COMPLETED ones.
+        Rejected requests land on ``self.rejected``, failed ones (dead
+        rank) on ``self.failed`` — neither is waited for. ``on_token``
+        streams every sampled token as ``fn(request, token)``."""
+        self._set_sink(on_token)
+        try:
+            done: List[Request] = []
+            for finished in self._serve_loop(requests, arrivals):
+                done.extend(finished)
+            return done
+        finally:
+            self._set_sink(None)
+
+    def stream(self, requests: Sequence[Request],
+               arrivals: Optional[Sequence[float]] = None
+               ) -> Iterator[Tuple[int, int]]:
+        """Per-token iterator over the whole sharded serving loop:
+        yields ``(rid, token)`` in sampling order as decode steps retire
+        across ranks. Completed/rejected/failed requests are found where
+        :meth:`run` leaves them (the request objects themselves,
+        ``self.rejected``, ``self.failed``)."""
+        buf: List[Tuple[int, int]] = []
+        self._set_sink(lambda req, tok: buf.append((req.rid, tok)))
+        try:
+            for _ in self._serve_loop(requests, arrivals):
+                while buf:
+                    yield buf.pop(0)
+        finally:
+            self._set_sink(None)
 
     def stats(self) -> Dict:
-        """Per-rank serving counters + global admission counters."""
+        """Per-rank serving counters + global admission/QoS counters."""
         return {
             "ranks": self.ranks,
+            "live_ranks": len(self._live()),
             "submitted": self.n_submitted,
             "accepted": self.n_accepted,
             "rejected": len(self.rejected),
+            "failed": len(self.failed),
+            "preemptions": sum(e.stats["preemptions"]
+                               for e in self.shards),
             "per_rank": [dict(e.stats, queue=len(e.queue),
                               free_slots=e.n_free(),
-                              slots=e.slot_states())
+                              slots=e.slot_states(), dead=e.dead)
                          for e in self.shards],
         }

@@ -302,6 +302,7 @@ def mode_sched_mesh():
                                 eos_id=eos_id)])[0].out_tokens
 
     results = {}
+    stash = {}
     for name, shape in (("1x2", (1, 2)), ("2x2", (2, 2))):
         mesh = jax.make_mesh(shape, ("data", "model"))
         p, c = build_serving_params(params0, cfg0, mesh=mesh, **deploy)
@@ -330,7 +331,42 @@ def mode_sched_mesh():
             ranks_served=len({r.rank for r in done}),
             streams_ref={str(k): v for k, v in ref.items()},
             streams_got={str(k): v for k, v in got.items()})
-    out(**{f"{k}_{n}": v for n, res in results.items()
+        stash[name] = (mesh, p, c, ref, eos_id)
+
+    # streaming + prefill bucketing + EDF on the mesh path
+    # (DESIGN.md §12): the per-token iterator over the 1×2 TP-sharded
+    # deployment must yield every request's greedy stream bit-identical
+    # to the solo mesh engine, with bucketed admission bounding the jit
+    # cache (every admission shape (B, bucket))
+    mesh, p, c, ref, eos_id = stash["1x2"]
+    buckets = (16, 32, 64)
+    sched = ShardedScheduler(
+        p, c, mesh=mesh,
+        sched=SchedulerConfig(slots_per_rank=2, cache_len=64,
+                              policy="edf", buckets=buckets))
+    shapes = set()
+    eng = sched.shards[0]
+    orig_prefill = eng._prefill
+
+    def counting(params, toks, poss, caches, slots, valid):
+        shapes.add(tuple(toks.shape))
+        return orig_prefill(params, toks, poss, caches, slots, valid)
+
+    eng._prefill = counting
+    per = {}
+    for rid, tok in sched.stream(
+            [Request(rid=i, prompt=prompts[i],
+                     max_new_tokens=budgets[i],
+                     eos_id=eos_id if i == 1 else None,
+                     slo="interactive" if i % 2 else "batch")
+             for i in range(len(prompts))]):
+        per.setdefault(rid, []).append(tok)
+    out(stream_equal=int(per == ref),
+        stream_events=sum(len(v) for v in per.values()),
+        admit_shapes=sorted(shapes),
+        admit_shapes_ok=int(len(shapes) <= len(buckets) and all(
+            g == 2 and s in buckets for g, s in shapes)),
+        **{f"{k}_{n}": v for n, res in results.items()
            for k, v in res.items()})
 
 

@@ -1,12 +1,22 @@
 """Packed deployment pipeline: deploy_packed parity vs the masked-dense
 reference across forward/prefill/decode, engine fast-path semantics
-(batched left-padded prefill, on-device sampling, EOS masking)."""
+(batched left-padded prefill, on-device sampling, EOS masking), and
+hypothesis property tests over random (tp, sparsity, block size,
+int8/fp32) packing configs — visit-count conservation and
+reshard↔from-scratch bit-identity as PROPERTIES, with fixed-grid twins
+that run even where hypothesis is unavailable."""
 import dataclasses
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # twins below still run
+    HAVE_HYPOTHESIS = False
 
 from repro.configs import SASPConfig, get_config, reduced
 from repro.core.deploy import deploy_packed, packed_summary
@@ -190,6 +200,122 @@ def test_reshard_packed_forward_parity():
     got = lm.forward(rs, c1, toks)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random packing configs (hypothesis + fixed twins)
+# ---------------------------------------------------------------------------
+
+
+def _random_blockmasked(seed, K, N, bk, bn, sparsity, layers=2):
+    """(L, K, N) weights with a random block mask applied — the input
+    contract of pack_weight (pruned tiles already zeroed)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(layers, K, N)).astype(np.float32)
+    mask = rng.random((layers, K // bk, N // bn)) >= sparsity
+    wz = (w.reshape(layers, K // bk, bk, N // bn, bn)
+          * mask[:, :, None, :, None]).reshape(layers, K, N)
+    return wz, mask
+
+
+def _assert_packed_equal(a, b, ctx):
+    for name in ("vals", "kn", "scale", "bias"):
+        xa, xb = getattr(a, name), getattr(b, name)
+        assert (xa is None) == (xb is None), (name, ctx)
+        if xa is not None:
+            assert np.array_equal(np.asarray(xa), np.asarray(xb)), \
+                (name, ctx)
+    assert a.shards == b.shards and a.shard_kind == b.shard_kind, ctx
+    assert a.shape == b.shape and a.block == b.block, ctx
+
+
+def _check_pack_properties(tp, sparsity, block, quantize, kind, seed):
+    """The two properties, on one random config:
+
+    1. **Visit conservation** — per layer, the shards' live (nonzero-
+       valued) visits sum to the mask's surviving block count: no block
+       dropped, none double-visited, at ANY shard count/sparsity
+       (including entirely-empty shards, which carry only zero-valued
+       flush/padding visits).
+    2. **Reshard ↔ from-scratch bit-identity** — slicing + re-padding
+       an existing pack to ``tp`` equals packing the dense weight from
+       scratch at ``tp`` bit-for-bit (values, coords, int8 scales), and
+       resharding back to 1 reproduces the original pack.
+    """
+    from repro.core.deploy import _reshard_weight, pack_weight
+
+    K = N = 32
+    wz, mask = _random_blockmasked(seed, K, N, block, block, sparsity)
+    base = pack_weight(wz, block_k=block, block_n=block,
+                       quantize=quantize)
+    scratch = pack_weight(wz, block_k=block, block_n=block, tp=tp,
+                          shard_kind=kind, quantize=quantize)
+    ctx = dict(tp=tp, sparsity=sparsity, block=block,
+               quantize=quantize, kind=kind, seed=seed)
+    for layer in range(wz.shape[0]):
+        ref = int(mask[layer].sum())
+        v = np.asarray(scratch.vals)[layer]
+        got = _live_visits(v) if tp == 1 else sum(
+            _live_visits(v[s]) for s in range(tp))
+        assert got == ref, (layer, got, ref, ctx)
+    rs = _reshard_weight(base, tp, kind)
+    _assert_packed_equal(rs, scratch, ctx)
+    back = _reshard_weight(rs, 1, kind)
+    _assert_packed_equal(back, base, ctx)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(tp=st.sampled_from([1, 2, 4]),
+           sparsity=st.floats(0.0, 0.97),
+           block=st.sampled_from([4, 8]),
+           quantize=st.booleans(),
+           kind=st.sampled_from(["col", "row"]),
+           seed=st.integers(0, 2**16))
+    def test_pack_weight_properties_random_configs(
+            tp, sparsity, block, quantize, kind, seed):
+        _check_pack_properties(tp, sparsity, block, quantize, kind, seed)
+
+
+@pytest.mark.parametrize("tp,kind", [(2, "col"), (4, "row")])
+@pytest.mark.parametrize("quantize", [False, True])
+def test_pack_weight_properties_fixed_grid(tp, kind, quantize):
+    """Hypothesis-free twin of the property test (runs everywhere),
+    including a high-sparsity case that forces empty shards."""
+    for sparsity, seed in ((0.3, 0), (0.9, 1)):
+        _check_pack_properties(tp, sparsity, 8, quantize, kind, seed)
+
+
+def _check_deploy_reshard_property(tp, sparsity, quantize):
+    """Deploy-level property: for a whole deployed tree (fused FFN +
+    attention containers), reshard_packed to ``tp`` is bit-identical to
+    deploy_packed from scratch at ``tp``, and round-trips back."""
+    from repro.core.deploy import reshard_packed
+
+    pruned, cfg = _pruned(scope="all", sparsity=sparsity)
+    pp1, _ = deploy_packed(pruned, cfg, quantize=quantize)
+    pp2, _ = deploy_packed(pruned, cfg, quantize=quantize, tp=tp)
+    rs = reshard_packed(pp1, cfg, tp=tp)
+    _assert_trees_equal(pp2["segments"], rs["segments"])
+    back = reshard_packed(rs, cfg, tp=1)
+    _assert_trees_equal(pp1["segments"], back["segments"])
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=5, deadline=None)
+    @given(tp=st.sampled_from([1, 2]),
+           sparsity=st.sampled_from([0.25, 0.5]),
+           quantize=st.booleans())
+    def test_deploy_reshard_property_random_configs(
+            tp, sparsity, quantize):
+        _check_deploy_reshard_property(tp, sparsity, quantize)
+
+
+def test_deploy_reshard_property_fixed():
+    """Hypothesis-free twin of the deploy-level reshard property."""
+    _check_deploy_reshard_property(2, 0.25, quantize=True)
 
 
 def test_engine_packed_matches_masked_engine_tokens():

@@ -121,3 +121,9 @@ def test_sched_mesh_continuous_batching_bit_identical():
         assert r[f"refills_{name}"] >= 1
     assert r["ranks_2x2"] == 2
     assert r["ranks_served_2x2"] == 2   # both DP ranks took traffic
+    # streaming + bucketed EDF admission on the 1×2 mesh (DESIGN.md
+    # §12): per-token iterator bit-identical to the solo mesh engine,
+    # admission jit cache bounded by the bucket table
+    assert r["stream_equal"] == 1, r
+    assert r["stream_events"] > 0
+    assert r["admit_shapes_ok"] == 1, r["admit_shapes"]

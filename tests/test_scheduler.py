@@ -1,9 +1,12 @@
-"""Sharded request scheduler (DESIGN.md §11): continuous-batching
+"""Sharded request scheduler (DESIGN.md §11–§12): continuous-batching
 bit-identity (a slot freed by EOS is refilled from the queue and every
 stream matches the solo single-batch engine), per-rank queue sharding,
-admission control, SJF vs FCFS ordering, and the drain-batch baseline.
-The 1×2-mesh packed variant of the bit-identity contract lives in
-tests/test_distribution.py (``sched_mesh`` worker)."""
+admission control, SJF vs FCFS vs EDF ordering, aging, preemption
+(exact resume via KV snapshot AND re-prefill), prefill bucketing
+(bounded jit cache), per-token streaming, rank-failure containment,
+and the drain-batch baseline. The 1×2-mesh packed variant of the
+bit-identity + streaming contract lives in tests/test_distribution.py
+(``sched_mesh`` worker)."""
 import dataclasses
 
 import numpy as np
@@ -155,6 +158,258 @@ def test_sjf_policy_runs_shortest_queued_request_first():
 
     assert completion_order("fcfs") == [0, 1, 2]   # arrival order
     assert completion_order("sjf") == [1, 2, 0]    # shortest first
+
+
+@pytest.mark.parametrize("mode", ["kv", "reprefill"])
+def test_preempt_resume_bit_identical(mode):
+    """QoS acceptance (DESIGN.md §12): an interactive request evicts a
+    mid-decode batch request at step granularity; the victim resumes —
+    KV-snapshot restore or re-prefill of prompt + generated tokens —
+    and BOTH streams stay bit-identical to the solo single-batch
+    engine. The interactive request must also retire first."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    batch = Request(rid=0,
+                    prompt=rng.integers(0, 64, size=(8,))
+                    .astype(np.int32),
+                    max_new_tokens=12, slo="batch")
+    inter = Request(rid=1,
+                    prompt=rng.integers(0, 64, size=(6,))
+                    .astype(np.int32),
+                    max_new_tokens=3, slo="interactive", deadline=0.01)
+    solo = {r.rid: _solo(params, cfg, r) for r in (batch, inter)}
+
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode=mode))
+    assert sched.submit(batch)
+    for _ in range(4):              # batch decodes a while first
+        sched.step()
+    assert sched.submit(inter)      # late interactive arrival
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+
+    st = sched.stats()
+    assert st["preemptions"] >= 1
+    assert st["per_rank"][0]["resumes"] >= 1
+    assert batch.preemptions >= 1 and inter.preemptions == 0
+    order = [r.rid for r in done]
+    assert order.index(1) < order.index(0), order
+    assert {r.rid: r.out_tokens for r in done} == solo
+    assert batch.status == "done" and inter.status == "done"
+    assert batch._kv is None        # resume state fully cleared
+
+
+def test_edf_orders_by_deadline_and_aging_prevents_starvation():
+    """policy='edf': tight-deadline interactive requests run before a
+    long-deadline batch request submitted earlier (pure EDF, aging=0);
+    with a large aging credit, waiting time dominates and the oldest
+    (batch) request runs first — the anti-starvation knob."""
+    cfg, params = _setup()
+    prompt = np.arange(1, 7, dtype=np.int32)
+
+    def completion_order(aging):
+        sched = ShardedScheduler(
+            params, cfg, ranks=1,
+            sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                                  policy="edf", aging=aging))
+        sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=2,
+                             slo="batch"))            # earliest arrival
+        for i in (1, 2):
+            sched.submit(Request(rid=i, prompt=prompt, max_new_tokens=2,
+                                 slo="interactive", deadline=0.05))
+        return [r.rid for r in sched.run([])]
+
+    assert completion_order(aging=0.0) == [1, 2, 0]    # pure EDF
+    # huge credit (1e9 s of deadline per second waited: even a µs of
+    # extra wait outweighs the 30s deadline gap): arrival order wins
+    # and the batch request is never starved
+    assert completion_order(aging=1e9) == [0, 1, 2]
+
+
+def test_rank_failure_contains_to_inflight_requests():
+    """Fault injection: an engine shard raising mid-step fails ONLY its
+    in-flight requests (status + error surfaced on the Request), its
+    queued requests re-route to the surviving rank, and the serving
+    loop terminates (no deadlock on the admission queue)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6,))
+                    .astype(np.int32), max_new_tokens=6)
+            for i in range(6)]
+    sched = ShardedScheduler(
+        params, cfg, ranks=2,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+    eng0 = sched.shards[0]
+    calls = {"n": 0}
+    orig = eng0._decode
+
+    def faulty(*a, **k):
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise RuntimeError("injected shard fault")
+        return orig(*a, **k)
+
+    eng0._decode = faulty
+    done = sched.run(reqs)
+
+    st = sched.stats()
+    assert st["live_ranks"] == 1 and eng0.dead
+    assert len(sched.failed) >= 1
+    for r in sched.failed:
+        assert r.status == "failed"
+        assert "injected shard fault" in r.error
+    # every request resolved exactly one way — no deadlock, no loss
+    assert len(done) + len(sched.failed) == len(reqs)
+    assert all(r.status == "done" for r in done)
+    assert not eng0.queue           # dead rank's queue was re-routed
+    # the survivor took over and actually served traffic
+    assert sched.shards[1].stats["admitted"] >= len(done)
+
+
+@pytest.mark.slow
+def test_rank_failure_during_admission_requeues_popped_requests():
+    """A shard raising inside ADMISSION (jitted prefill) must not lose
+    the requests it had already popped off its queue: they return to
+    the queue and re-route to the survivor, so every request still
+    resolves as done or failed."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(8)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6,))
+                    .astype(np.int32), max_new_tokens=4)
+            for i in range(6)]
+    sched = ShardedScheduler(
+        params, cfg, ranks=2,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+    eng0 = sched.shards[0]
+    calls = {"n": 0}
+    orig = eng0._prefill
+
+    def faulty(*a):
+        calls["n"] += 1
+        if calls["n"] >= 2:       # first admission fine, refill raises
+            raise RuntimeError("injected prefill fault")
+        return orig(*a)
+
+    eng0._prefill = faulty
+    done = sched.run(reqs)
+    assert eng0.dead and not eng0.queue
+    assert len(done) + len(sched.failed) == len(reqs)
+    statuses = {r.rid: r.status for r in reqs}
+    assert all(s in ("done", "failed") for s in statuses.values()), \
+        statuses
+
+
+def test_total_failure_resolves_every_request():
+    """All ranks dead mid-run with arrivals still pending: the pending
+    requests must still resolve (status 'failed' on scheduler.failed),
+    never stranded as status 'new' — and run() must return."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(10)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6,))
+                    .astype(np.int32), max_new_tokens=4)
+            for i in range(5)]
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+    eng = sched.shards[0]
+    eng._decode = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("total failure"))
+    # last arrival far in the future: the rank dies long before it
+    done = sched.run(reqs, arrivals=[0.0, 0.0, 0.0, 5.0, 9.0])
+    assert len(done) + len(sched.failed) == len(reqs)
+    assert all(r.status in ("done", "failed") for r in reqs), \
+        {r.rid: r.status for r in reqs}
+    assert all(r.error for r in sched.failed)
+
+
+def test_preempt_effective_under_fcfs_policy():
+    """--preempt with the default fcfs policy: the preemption-
+    triggering interactive request (not an older queued batch request)
+    must get the freed slot, or the eviction is wasted work."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(9)
+    mk = lambda rid, new, slo, dl: Request(
+        rid=rid, prompt=rng.integers(0, 64, size=(6,)).astype(np.int32),
+        max_new_tokens=new, slo=slo, deadline=dl)
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="fcfs", preempt=True))
+    running = mk(0, 10, "batch", 30.0)
+    queued_batch = mk(1, 4, "batch", 30.0)
+    sched.submit(running)
+    sched.step()                    # rid 0 occupies the only slot
+    sched.submit(queued_batch)      # older queued batch request
+    inter = mk(2, 2, "interactive", 0.01)
+    sched.submit(inter)
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    assert sched.stats()["preemptions"] >= 1
+    order = [r.rid for r in done]
+    assert order.index(2) < order.index(0), order
+    assert order.index(2) < order.index(1), order
+
+
+def test_jit_cache_bounded_by_buckets_under_random_lengths():
+    """Acceptance (DESIGN.md §12): with prefill bucketing, ≥50 random
+    prompt lengths compile at most len(buckets) admission programs
+    (every admission shape is (B, bucket)), and the streams stay
+    bit-identical to the unbucketed engine."""
+    cfg, params = _setup()
+    buckets = (8, 16, 32, 64)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 64, size=(int(rng.integers(2, 60)),))
+               .astype(np.int32) for _ in range(50)]
+
+    def run(eng):
+        shapes = set()
+        orig = eng._prefill
+
+        def counting(params, toks, poss, caches, slots, valid):
+            shapes.add(tuple(toks.shape))
+            return orig(params, toks, poss, caches, slots, valid)
+
+        eng._prefill = counting
+        done = eng.run([Request(rid=i, prompt=p, max_new_tokens=2)
+                        for i, p in enumerate(prompts)])
+        return {r.rid: r.out_tokens for r in done}, shapes
+
+    plain, _ = run(Engine(params, cfg, batch_slots=2, cache_len=64))
+    bucketed, shapes = run(Engine(params, cfg, batch_slots=2,
+                                  cache_len=64, buckets=buckets))
+    assert bucketed == plain
+    assert len(shapes) <= len(buckets), shapes
+    # fixed group size: every admission pass is (B, bucket)
+    assert all(g == 2 and s in buckets for g, s in shapes), shapes
+
+
+@pytest.mark.slow
+def test_scheduler_streaming_matches_out_tokens():
+    """stream() yields every sampled token exactly once, per-request
+    order preserved, across 2 ranks — and the per-rid sequences equal
+    both Request.out_tokens and the solo engine streams."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(5 + i,))
+                    .astype(np.int32), max_new_tokens=4)
+            for i in range(4)]
+    solo = {r.rid: _solo(params, cfg, r) for r in reqs}
+    sched = ShardedScheduler(
+        params, cfg, ranks=2,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+    per = {}
+    for rid, tok in sched.stream(reqs):
+        per.setdefault(rid, []).append(tok)
+    assert per == solo
+    assert {r.rid: r.out_tokens for r in reqs} == solo
+    assert all(r.done and r.status == "done" for r in reqs)
+    for e in sched.shards:          # sink detached after the loop
+        assert e.on_token is None
 
 
 def test_drain_baseline_takes_more_steps_than_continuous():

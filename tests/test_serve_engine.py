@@ -1,5 +1,5 @@
 """Serving engine: continuous batching semantics + decode fidelity +
-int8-KV path."""
+int8-KV path + slot-lifecycle state machine + per-token streaming."""
 import dataclasses
 
 import numpy as np
@@ -66,6 +66,95 @@ def test_slot_isolation():
          Request(rid=1, prompt=p2, max_new_tokens=5)])
     got = [r.out_tokens for r in together if r.rid == 0][0]
     assert got == solo
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_slot_lifecycle_state_machine(seed):
+    """FREE→PREFILL→DECODE→FREE invariants under randomized EOS
+    patterns (DESIGN.md §11): an occupied slot keeps its request until
+    that request retires; a slot is refilled only after it was observed
+    FREE at the start of a step (no refill into an occupied slot, no
+    double-free); every request resolves exactly once."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, 64, size=(int(
+                        rng.integers(3, 12)),)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(1, 7)),
+                    # random EOS id: some streams stop early, some at
+                    # admission, some never hit it
+                    eos_id=int(rng.integers(0, 64)))
+            for i in range(9)]
+    eng = Engine(params, cfg, batch_slots=3, cache_len=32)
+    for r in reqs:
+        eng.submit(r)
+
+    retired, seen_done = [], set()
+    prev_occ = [None] * eng.B                    # rid or None per slot
+    while eng.has_work():
+        finished = eng.step()
+        occ = [r.rid if r is not None else None for r in eng.slot_req]
+        fin = {r.rid for r in finished}
+        for s in range(eng.B):
+            if occ[s] is not None and occ[s] != prev_occ[s]:
+                # admission happens at step START: a slot can only take
+                # a new request if it was FREE before this step
+                assert prev_occ[s] is None, \
+                    (s, prev_occ[s], occ[s], "refill into occupied slot")
+            if prev_occ[s] is not None and occ[s] != prev_occ[s]:
+                # a slot only empties/swaps by retiring its request
+                assert prev_occ[s] in fin, (s, prev_occ[s])
+        # occupancy is exclusive: one slot per live request
+        live = [o for o in occ if o is not None]
+        assert len(live) == len(set(live))
+        for r in finished:
+            assert r.done and r.status == "done"
+            assert r.rid not in seen_done, (r.rid, "double retire")
+            seen_done.add(r.rid)
+            assert r.rid not in live, (r.rid, "retired but still in slot")
+        retired.extend(finished)
+        prev_occ = occ
+    assert sorted(r.rid for r in retired) == list(range(len(reqs)))
+    assert eng.slot_req == [None] * eng.B        # all slots back to FREE
+    assert eng.stats["admitted"] == len(reqs)
+    for r in retired:                            # EOS semantics honored
+        if r.eos_id in r.out_tokens:
+            assert r.out_tokens.index(r.eos_id) == len(r.out_tokens) - 1
+        else:
+            assert len(r.out_tokens) == r.max_new_tokens
+
+
+@pytest.mark.slow
+def test_engine_stream_iterator_and_callback():
+    """Engine.stream yields (rid, token) per sampled token in order;
+    run(on_token=...) sees the identical event sequence; both match
+    Request.out_tokens and the non-streaming engine bit-for-bit."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    mk = lambda: [Request(rid=i,
+                          prompt=rng.integers(0, 64, size=(5 + i,))
+                          .astype(np.int32),
+                          max_new_tokens=4) for i in range(4)]
+    rng = np.random.default_rng(3)
+    base = {r.rid: r.out_tokens for r in Engine(
+        params, cfg, batch_slots=2, cache_len=64).run(mk())}
+
+    rng = np.random.default_rng(3)
+    reqs = mk()
+    eng = Engine(params, cfg, batch_slots=2, cache_len=64)
+    events = list(eng.stream(reqs))
+    per = {}
+    for rid, tok in events:
+        per.setdefault(rid, []).append(tok)
+    assert per == base
+    assert {r.rid: r.out_tokens for r in reqs} == base
+    assert eng.on_token is None                  # sink detached
+
+    rng = np.random.default_rng(3)
+    cb_events = []
+    Engine(params, cfg, batch_slots=2, cache_len=64).run(
+        mk(), on_token=lambda req, tok: cb_events.append((req.rid, tok)))
+    assert cb_events == events
 
 
 def test_int8_kv_engine_agrees_on_greedy_tokens():

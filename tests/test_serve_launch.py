@@ -1,0 +1,71 @@
+"""launch/serve.py argument validation: malformed --mesh and
+--ranks/--buckets misuse must fail with a clear usage error at parse
+time, not as a cryptic make_mesh / submesh shape failure downstream."""
+import jax
+import pytest
+
+from repro.launch.serve import check_ranks, parse_buckets, parse_mesh
+
+
+@pytest.mark.parametrize("spec", ["2", "a,b", "1,2,3", ",2", "2,"])
+def test_parse_mesh_rejects_malformed_spec(spec, monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")       # parse_mesh may touch it
+    with pytest.raises(SystemExit, match="--mesh expects 'DP,TP'"):
+        parse_mesh(spec)
+
+
+@pytest.mark.parametrize("spec", ["0,2", "2,0", "0,0"])
+def test_parse_mesh_rejects_zero_axes(spec, monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    with pytest.raises(SystemExit, match="must both be >= 1"):
+        parse_mesh(spec)
+
+
+def test_parse_mesh_none_and_valid(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    assert parse_mesh(None) is None
+    assert parse_mesh("") is None
+    mesh = parse_mesh("1,1")                  # fits any device count
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+def test_check_ranks_exceeding_dp_size_is_a_clear_error():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(SystemExit, match="exceeds the mesh's DP size"):
+        check_ranks(2, mesh)
+
+
+def test_check_ranks_accepts_match_and_meshless():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    check_ranks(None, mesh)                   # omitted: mesh decides
+    check_ranks(1, mesh)                      # equals DP size: fine
+    check_ranks(7, None)                      # meshless: any count
+
+
+def test_parse_buckets_forms():
+    assert parse_buckets(None, 512) is None
+    assert parse_buckets("", 512) is None
+    assert parse_buckets("4", 512) == (64, 128, 256, 512)
+    assert parse_buckets("32,64,128", 512) == (32, 64, 128)
+    for bad in ("x", "0", "8,0", "-1"):
+        with pytest.raises(SystemExit, match="--buckets"):
+            parse_buckets(bad, 512)
+    # a bucket beyond the cache could never admit: loud error, not a
+    # silent fall-back to exact shapes
+    with pytest.raises(SystemExit, match="cache-len"):
+        parse_buckets("128,256", 64)
+
+
+def test_engine_rejects_buckets_beyond_cache_len():
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import lm
+    from repro.serve.engine import Engine
+
+    cfg = reduced(get_config("qwen3-32b"), layers=1, d_model=32,
+                  vocab=32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="cache_len"):
+        Engine(params, cfg, batch_slots=1, cache_len=32,
+               buckets=(16, 64))
