@@ -363,6 +363,119 @@ def bench_engine_qos() -> List:
     return rows
 
 
+MEM_CACHE = 64
+MEM_PAGE = 8                    # tile-aligned: NB = 8 pages per ring
+MEM_BUDGET_SLOTS = 3            # contiguous rings the budget pays for
+MEM_PAGES = MEM_BUDGET_SLOTS * (MEM_CACHE // MEM_PAGE)
+MEM_OVERSUB_SLOTS = 8           # paged engine oversubscribes slots
+MEM_REQ = 10
+
+
+def _mem_requests(vocab: int) -> List[Request]:
+    rng = np.random.default_rng(17)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab,
+                                        size=(8 + (3 * i) % 10,))
+                    .astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(MEM_REQ)]
+
+
+def _drive_tracking(eng, reqs):
+    """(streams, max concurrent occupied slots, tok/s) for one pass."""
+    for r in reqs:
+        eng.submit(r)
+    done, conc = [], 0
+    t0 = time.perf_counter()
+    while eng.has_work():
+        done.extend(eng.step())
+        conc = max(conc, sum(r is not None for r in eng.slot_req))
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    return {r.rid: list(r.out_tokens) for r in done}, conc, toks / dt
+
+
+def bench_engine_memory() -> List:
+    """Paged KV memory (DESIGN.md §13): capacity at a FIXED device KV
+    budget — a contiguous engine affords budget/ring slots; the paged
+    engine shares the same pages through block tables and oversubscribes
+    slots (spilling cold pages to host RAM under pressure) — plus the
+    spill→host / fault→device page-move latency. Acceptance: ≥1.5×
+    concurrent slots at the same budget, streams bit-identical."""
+    rows = []
+    print("\n== paged KV memory: capacity at fixed device budget "
+          f"({MEM_PAGES} pages × {MEM_PAGE} tokens) ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+
+    contig = Engine(params0, cfg0, batch_slots=MEM_BUDGET_SLOTS,
+                    cache_len=MEM_CACHE)
+    contig.run(_mem_requests(cfg0.vocab_size))          # warm-up
+    ref_streams, conc_c, tok_c = _drive_tracking(
+        contig, _mem_requests(cfg0.vocab_size))
+
+    paged = Engine(params0, cfg0, batch_slots=MEM_OVERSUB_SLOTS,
+                   cache_len=MEM_CACHE, kv_pages=MEM_PAGES,
+                   kv_page_len=MEM_PAGE, kv_host_pages=MEM_PAGES)
+    paged.run(_mem_requests(cfg0.vocab_size))           # warm-up
+    streams, conc_p, tok_p = _drive_tracking(
+        paged, _mem_requests(cfg0.vocab_size))
+    mem = paged.memory_stats()
+    agree = int(streams == ref_streams)
+    ratio = conc_p / conc_c
+    ok = ratio >= 1.5 and agree
+    print(f"  contiguous: {conc_c} concurrent slots, {tok_c:7.1f} tok/s"
+          f"  |  paged: {conc_p} concurrent, {tok_p:7.1f} tok/s "
+          f"(x{ratio:.2f} capacity, streams "
+          f"{'==' if agree else '!='}, {mem.spills} spills) "
+          f"({'OK' if ok else 'REGRESSION: capacity bar missed!'})")
+    rows.append((f"engine/mem/contig/slots{MEM_BUDGET_SLOTS}",
+                 1e6 / tok_c,
+                 f"tok_s={tok_c:.2f};concurrent={conc_c};"
+                 f"pages={MEM_PAGES}"))
+    rows.append((f"engine/mem/paged/slots{MEM_OVERSUB_SLOTS}",
+                 1e6 / tok_p,
+                 f"tok_s={tok_p:.2f};concurrent={conc_p};"
+                 f"pages={MEM_PAGES};page_len={MEM_PAGE};"
+                 f"spills={mem.spills};faults={mem.faults};"
+                 f"contig_agree={agree}"))
+    rows.append(("engine/mem/capacity", 0.0,
+                 f"x{ratio:.3f}_concurrent_slots_at_fixed_budget;"
+                 f"agree={agree}"))
+
+    # spill→fault latency: whole-ring page set through the host pool
+    from repro.serve.memory import PagedKVPool
+    pool = PagedKVPool(params0, cfg0, cache_len=MEM_CACHE,
+                       device_pages=MEM_CACHE // MEM_PAGE,
+                       page_len=MEM_PAGE,
+                       host_pages=MEM_CACHE // MEM_PAGE)
+    nb = pool.NB
+    pool.admit(0, nb)
+    pool.preempt(0)
+    pool.admit(1, nb)                   # warm the move kernels
+    pool.free(1)
+    pool.resume(0)
+    pool.preempt(0)
+    t0 = time.perf_counter()
+    pool.admit(1, nb)                   # forces nb spills to host
+    spill_us = (time.perf_counter() - t0) / nb * 1e6
+    pool.free(1)
+    t0 = time.perf_counter()
+    pool.resume(0)                      # faults nb pages back
+    fault_us = (time.perf_counter() - t0) / nb * 1e6
+    st = pool.stats()
+    print(f"  spill {spill_us:7.1f} us/page -> host, fault "
+          f"{fault_us:7.1f} us/page -> device "
+          f"({st.spills} spills, {st.faults} faults total)")
+    rows.append(("engine/mem/spill_latency", spill_us,
+                 f"us_per_page={spill_us:.1f};page_len={MEM_PAGE};"
+                 f"pages={nb}"))
+    rows.append(("engine/mem/fault_latency", fault_us,
+                 f"us_per_page={fault_us:.1f};page_len={MEM_PAGE};"
+                 f"pages={nb}"))
+    return rows
+
+
 def bench_engine() -> List:
     rows = []
     print("\n== serving engine (CPU; interpret-mode kernels) ==")
@@ -398,6 +511,7 @@ def bench_engine() -> List:
     rows.extend(_mesh_rows_subprocess())
     rows.extend(bench_engine_load())
     rows.extend(bench_engine_qos())
+    rows.extend(bench_engine_memory())
     return rows
 
 

@@ -359,6 +359,30 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
     return jax.tree_util.tree_map_with_path(fn, caches_shape)
 
 
+def pool_shardings(cfg: ModelConfig, mesh: Mesh, pool_shape):
+    """Paged KV page-pool placement (serve/memory.py, DESIGN.md §13).
+
+    Pool leaves are (R, P, page_len, …): the physical page dim P shards
+    over the DP axes when it divides them — each DP rank's engine owns
+    its OWN pool, so on a scheduler rank's submesh (DP collapsed to 1)
+    this degrades to replication and only the trailing dims shard — and
+    KV heads (axis 3 of k/v/scale leaves) shard over 'model' when they
+    divide it, matching the contiguous cache layout so the TP SDPA path
+    sees the same head placement with paging on or off."""
+    dp = dp_axes(mesh)
+
+    def fn(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if axis_size(mesh, dp) > 1 and _fits(shape[1], mesh, dp):
+            spec[1] = dp
+        if len(shape) >= 4 and _fits(shape[3], mesh, "model"):
+            spec[3] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(fn, pool_shape)
+
+
 def constraint(x, mesh: Mesh, *spec):
     """with_sharding_constraint that degrades to no-op off-mesh."""
     try:

@@ -224,6 +224,30 @@ def main():
     ap.add_argument("--interactive-every", type=int, default=0,
                     help="mark every Nth synthetic request "
                          "interactive-class (0 = all batch)")
+    ap.add_argument("--shed", choices=("count", "deadline"),
+                    default="count",
+                    help="overload shedding once --max-queue overflows: "
+                         "'count' rejects the newcomer, 'deadline' "
+                         "evicts the waiting request least likely to "
+                         "meet its deadline (batch before interactive)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="paged KV cache (DESIGN.md §13): device page "
+                         "pool size per rank engine; slots share pages "
+                         "through block tables and become "
+                         "oversubscribable (default: contiguous "
+                         "per-slot rings)")
+    ap.add_argument("--kv-page-len", type=int, default=None,
+                    help="page length in tokens — must be a multiple "
+                         "of the SASP tile and divide --cache-len "
+                         "(default: tile-aligned automatic)")
+    ap.add_argument("--kv-watermark", type=float, default=1.0,
+                    help="high-watermark fraction of --kv-pages that "
+                         "may stay resident; allocations beyond it "
+                         "spill cold (preempted) pages to host RAM")
+    ap.add_argument("--kv-host-pool", type=int, default=0,
+                    help="host-RAM spill pool size in pages (0 = no "
+                         "spill; cold pages drop to re-prefill resume "
+                         "under pressure instead)")
     ap.add_argument("--buckets", default=None,
                     help="prefill shape bucketing: an int count builds "
                          "a geometric table up to --cache-len; "
@@ -247,6 +271,12 @@ def main():
     mesh = parse_mesh(args.mesh)
     check_ranks(args.ranks, mesh)
     buckets = parse_buckets(args.buckets, args.cache_len)
+    if not 0.0 < args.kv_watermark <= 1.0:
+        raise SystemExit(
+            f"--kv-watermark must lie in (0, 1], got "
+            f"{args.kv_watermark}")
+    if args.kv_pages is not None and args.kv_pages < 1:
+        raise SystemExit(f"--kv-pages must be >= 1, got {args.kv_pages}")
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -304,7 +334,11 @@ def main():
                 cache_len=args.cache_len, max_queue=args.max_queue,
                 policy=args.admission, drain=args.drain,
                 aging=args.aging, preempt=args.preempt,
-                preempt_mode=args.preempt_mode, buckets=buckets))
+                preempt_mode=args.preempt_mode, buckets=buckets,
+                shed=args.shed, kv_pages=args.kv_pages,
+                kv_page_len=args.kv_page_len,
+                kv_watermark=args.kv_watermark,
+                kv_host_pages=args.kv_host_pool))
         t0 = time.time()
         done = drive(sched.run, sched.stream)
         dt = time.time() - t0
@@ -330,10 +364,18 @@ def main():
     else:
         eng = Engine(params, cfg, batch_slots=args.slots,
                      cache_len=args.cache_len, mesh=mesh,
-                     buckets=buckets)
+                     buckets=buckets, kv_pages=args.kv_pages,
+                     kv_page_len=args.kv_page_len,
+                     kv_watermark=args.kv_watermark,
+                     kv_host_pages=args.kv_host_pool)
         t0 = time.time()
         done = drive(eng.run, eng.stream)
         dt = time.time() - t0
+        mem = eng.memory_stats()
+        if mem is not None:
+            print(f"paged KV: {mem.device_pages} device pages × "
+                  f"{eng.pool.page_len} tokens, {mem.spills} spills, "
+                  f"{mem.faults} faults, {mem.drops} drops")
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s, "

@@ -361,6 +361,65 @@ def attn_apply_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     return _proj(p, "wo", out, cfg), cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV layout primitives (serve/memory.py, DESIGN.md §13)
+#
+# A page pool leaf stacks fixed-size token pages: (R, P, L, …) where R is
+# the layer-repeat scan dim, P the physical page count and L the page
+# length in tokens (a multiple of the SASP tile). A slot's logical ring
+# of C = NB·L tokens is assembled by gathering its NB pages through a
+# block table — the gathered view is bit-identical to the contiguous
+# ring cache, so the existing attention math runs unchanged on top.
+# ---------------------------------------------------------------------------
+
+
+def gather_kv_pages(leaf: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    """Assemble logical ring caches from a page pool leaf.
+
+    leaf: (R, P, L, …) pool pages; bt: (B, NB) int32 physical page ids.
+    Returns (R, B, NB·L, …) — exactly the contiguous ring-cache layout
+    the decode path expects (unallocated logical pages point at the
+    reserved zero page: zeros with pos = -1, masked from attention)."""
+    R, _, L = leaf.shape[:3]
+    B, NB = bt.shape
+    g = jnp.take(leaf, bt.reshape(-1), axis=1)
+    return g.reshape((R, B, NB * L) + leaf.shape[3:])
+
+
+def scatter_kv_written_page(leaf: jnp.ndarray, new_leaf: jnp.ndarray,
+                            bt: jnp.ndarray, page_idx: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Write back the ONE page per slot that a decode step touched.
+
+    new_leaf: (R, B, C, …) updated logical caches; page_idx: (B,) the
+    logical page holding each slot's freshly written ring position.
+    The destination is bt[i, page_idx[i]] — idle slots' tables point at
+    the reserved trash page (never read), so duplicate trash writes are
+    harmless."""
+    R = leaf.shape[0]
+    L = leaf.shape[2]
+    B, NB = bt.shape
+    r = new_leaf.reshape((R, B, NB, L) + new_leaf.shape[3:])
+    pages = r[:, jnp.arange(B), page_idx]            # (R, B, L, …)
+    dest = bt[jnp.arange(B), page_idx]               # (B,)
+    return leaf.at[:, dest].set(pages.astype(leaf.dtype))
+
+
+def scatter_prefill_pages(leaf: jnp.ndarray, new_leaf: jnp.ndarray,
+                          dests: jnp.ndarray) -> jnp.ndarray:
+    """Scatter freshly prefilled ring caches into the page pool.
+
+    new_leaf: (R, G, C, …) per-request prefill caches; dests: (G, NB)
+    physical destination per logical page — the trash page where a
+    logical page is unallocated (beyond the prompt) or the row is
+    admission-group padding."""
+    R, G = new_leaf.shape[0], new_leaf.shape[1]
+    NB = dests.shape[1]
+    L = new_leaf.shape[2] // NB
+    r = new_leaf.reshape((R, G * NB, L) + new_leaf.shape[3:])
+    return leaf.at[:, dests.reshape(-1)].set(r.astype(leaf.dtype))
+
+
 def build_cache_from_prefill(k: jnp.ndarray, v: jnp.ndarray,
                              capacity: int, quant: bool = False,
                              positions: Optional[jnp.ndarray] = None

@@ -151,7 +151,8 @@ def _slot_window(cfg: ModelConfig, spec: LayerSpec, seq_len: int) -> int:
 
 def _apply_slot_full(sp: Dict, spec: LayerSpec, cfg: ModelConfig,
                      x: jnp.ndarray, positions: jnp.ndarray,
-                     want_cache: bool, cache_len: int):
+                     want_cache: bool, cache_len: int,
+                     uniform_cache: bool = False):
     mixer, _, ffn_kind = spec
     S = x.shape[1]
     h = rmsnorm_apply(sp["norm1"], x, eps=cfg.norm_eps)
@@ -161,7 +162,13 @@ def _apply_slot_full(sp: Dict, spec: LayerSpec, cfg: ModelConfig,
         y, (k, v) = attn_mod.attn_apply_full(sp["mixer"], cfg, h, positions,
                                              window)
         if want_cache:
-            cap = min(window, cache_len) if spec[1] == ATTN_LOCAL \
+            # uniform_cache: every attention layer gets the FULL
+            # cache_len ring (the paged KV pool needs one token-page
+            # geometry across layers, serve/memory.py). The local-window
+            # cap is a pure memory optimization — the decode window mask
+            # governs which entries attend, so outputs are identical.
+            cap = min(window, cache_len) if (
+                spec[1] == ATTN_LOCAL and not uniform_cache) \
                 else cache_len
             cache = attn_mod.build_cache_from_prefill(
                 k, v, cap, quant=cfg.kv_quant,
@@ -209,7 +216,8 @@ def _maybe_remat(fn, cfg: ModelConfig):
 
 
 def _run_segments_full(params, cfg: ModelConfig, x, positions,
-                       want_cache: bool, cache_len: int):
+                       want_cache: bool, cache_len: int,
+                       uniform_cache: bool = False):
     plan = segment_plan(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     all_caches = []
@@ -223,7 +231,7 @@ def _run_segments_full(params, cfg: ModelConfig, x, positions,
             for slot, spec in enumerate(pattern):
                 xc, a, c = _apply_slot_full(
                     slot_params[f"slot{slot}"], spec, cfg, xc, positions,
-                    want_cache, cache_len)
+                    want_cache, cache_len, uniform_cache)
                 aux = aux + a
                 if want_cache:
                     caches[f"slot{slot}"] = c
@@ -345,7 +353,8 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
-            cache_len: Optional[int] = None, positions=None):
+            cache_len: Optional[int] = None, positions=None,
+            uniform_cache: bool = False):
     """Process the prompt; returns (last-token logits (B, 1, V), caches).
 
     positions: optional per-batch (B, S) absolute positions for the
@@ -354,6 +363,10 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
     Pad columns are masked out of attention and written to the KV cache
     with pos = -1; the last column is every sequence's final real token,
     so the returned logits stay (B, 1, V). Default: shared arange(S).
+
+    uniform_cache: build every attention layer's ring at the FULL
+    cache_len (no local-window cap) — required by the paged KV pool
+    (serve/memory.py), bit-identical outputs (the window mask governs).
     """
     x = _embed_in(params, cfg, tokens, embeds)
     B, S = x.shape[0], x.shape[1]
@@ -363,7 +376,7 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
     else:
         positions = jnp.asarray(positions, jnp.int32)
     x, _, caches = _run_segments_full(params, cfg, x, positions, True,
-                                      cache_len)
+                                      cache_len, uniform_cache)
     logits = logits_fn(params, cfg, x[:, -1:])
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
@@ -382,8 +395,13 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, caches,
     return logits, caches
 
 
-def init_caches(params, cfg: ModelConfig, batch: int, cache_len: int):
-    """Zero-initialized cache pytree matching the segment plan."""
+def init_caches(params, cfg: ModelConfig, batch: int, cache_len: int,
+                uniform_cap: bool = False):
+    """Zero-initialized cache pytree matching the segment plan.
+
+    uniform_cap: every attention layer gets capacity = cache_len (the
+    paged KV pool's page geometry must be shared across layers; the
+    window mask keeps local-attention semantics identical)."""
     cdt = as_dtype(cfg.compute_dtype)
     plan = segment_plan(cfg)
     caches = []
@@ -391,7 +409,8 @@ def init_caches(params, cfg: ModelConfig, batch: int, cache_len: int):
         seg = {}
         for slot, spec in enumerate(pattern):
             if spec[0] == MIXER_ATTN:
-                cap = min(_slot_window(cfg, spec, cache_len), cache_len)
+                cap = cache_len if uniform_cap else min(
+                    _slot_window(cfg, spec, cache_len), cache_len)
                 c = attn_mod.init_kv_cache(batch, cap, cfg.num_kv_heads,
                                            cfg.attn_head_dim, cdt,
                                            quant=cfg.kv_quant)

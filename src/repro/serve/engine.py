@@ -64,6 +64,17 @@ uninterrupted decode. Requests carry a ``status`` field
 (new/queued/running/done/failed/rejected) so schedulers and callers
 observe the lifecycle.
 
+Paged KV (DESIGN.md §13): ``Engine(..., kv_pages=N)`` replaces the
+per-slot contiguous ring with a shared device page pool plus per-slot
+block tables (``serve/memory.py``): decode gathers each slot's pages
+into the exact ring layout (streams bit-identical to the contiguous
+cache), admission allocates just the prompt's pages and decode grows
+by one page at a boundary crossing, EOS frees. Slots become
+oversubscribable: admission defers (instead of pinning a full ring)
+when the pool is exhausted, preemption unmaps pages instead of copying
+a snapshot, and a high-watermark policy spills cold (preempted) pages
+to a host-RAM pool, faulting them back on resume.
+
 Streaming: ``Engine.on_token`` (a ``(request, token) -> None`` sink) is
 called for every token the moment it is sampled — prefill first tokens
 and decode tokens alike; ``Engine.stream(requests)`` wraps it as a
@@ -153,7 +164,11 @@ class Engine:
                  cache_len: int = 512, rng_seed: int = 0, mesh=None,
                  profile: str = "tp", admission: str = "continuous",
                  rank: int = 0,
-                 buckets: Optional[Sequence[int]] = None):
+                 buckets: Optional[Sequence[int]] = None,
+                 kv_pages: Optional[int] = None,
+                 kv_page_len: Optional[int] = None,
+                 kv_watermark: float = 1.0,
+                 kv_host_pages: int = 0):
         assert admission in ADMISSION_MODES, admission
         self.admission = admission
         self.rank = rank
@@ -184,28 +199,48 @@ class Engine:
                     f"{cache_len}], got {bs} — a bucket beyond the "
                     f"cache can never admit")
             self.buckets = bs
-        self.caches = lm.init_caches(params, cfg, batch_slots, cache_len)
-        if mesh is not None:
-            from repro.distribution import sharding as shd
-            csh = shd.cache_shardings(
-                cfg, mesh, batch_slots,
-                jax.eval_shape(lambda: self.caches))
-            self.caches = jax.device_put(self.caches, csh)
+        self._attn_only = all(m == MIXER_ATTN
+                              for m in cfg.layer_mixer_kinds())
+        # paged KV (DESIGN.md §13): shared page pool + block tables
+        # instead of per-slot contiguous rings
+        self.pool = None
+        if kv_pages:
+            from repro.serve.memory import PagedKVPool
+            self.pool = PagedKVPool(
+                params, cfg, cache_len=cache_len,
+                device_pages=kv_pages, page_len=kv_page_len,
+                watermark=kv_watermark, host_pages=kv_host_pages,
+                mesh=mesh, profile=profile)
+            self.caches = None
+        else:
+            self.caches = lm.init_caches(params, cfg, batch_slots,
+                                         cache_len)
+            if mesh is not None:
+                from repro.distribution import sharding as shd
+                csh = shd.cache_shardings(
+                    cfg, mesh, batch_slots,
+                    jax.eval_shape(lambda: self.caches))
+                self.caches = jax.device_put(self.caches, csh)
         self.pos = np.zeros((batch_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
         self._finished_at_admission: List[Request] = []
         self.on_token: Optional[Callable[[Request, int], None]] = None
         self._key = jax.random.PRNGKey(rng_seed)
-        self._attn_only = all(m == MIXER_ATTN
-                              for m in cfg.layer_mixer_kinds())
-        self._decode = jax.jit(partial(self._decode_step, cfg))
-        self._prefill = jax.jit(partial(self._prefill_and_write, cfg,
-                                        cache_len))
+        if self.pool is not None:
+            self._decode = jax.jit(partial(
+                self._paged_decode_step, cfg, self.pool.NB,
+                self.pool.page_len))
+            self._prefill = jax.jit(partial(
+                self._paged_prefill_write, cfg, cache_len))
+        else:
+            self._decode = jax.jit(partial(self._decode_step, cfg))
+            self._prefill = jax.jit(partial(self._prefill_and_write, cfg,
+                                            cache_len))
         self._sample = jax.jit(_sample_tokens)
         # preemption resume: one-gather snapshot / one-scatter restore of
         # a slot's cache rows (slot index is traced — no per-slot
-        # recompilation)
+        # recompilation). Paged engines unmap pages instead (no copy).
         self._snap = jax.jit(lambda caches, slot: jax.tree.map(
             lambda leaf: leaf[:, slot], caches))
         self._restore = jax.jit(lambda caches, saved, slot: jax.tree.map(
@@ -253,6 +288,37 @@ class Engine:
         done = active & ((nxt == eos) | (remaining <= 1))
         return nxt, done, caches, key
 
+    # -- paged-KV twins (DESIGN.md §13) --------------------------------
+    @staticmethod
+    def _paged_prefill_write(cfg, cache_len, params, toks, poss, data,
+                             dests):
+        """Jitted paged admission: prompt prefill + scatter of the new
+        cache PAGES into the pool at ``dests`` (G, NB) — the trash page
+        absorbs unallocated logical pages and admission-group padding
+        rows, so no validity mask is needed."""
+        from repro.serve import memory as kvmem
+        logits, caches1 = lm.prefill(params, cfg, tokens=toks,
+                                     cache_len=cache_len,
+                                     positions=poss, uniform_cache=True)
+        return logits[:, 0], kvmem.scatter_prefill_pages(data, caches1,
+                                                         dests)
+
+    @staticmethod
+    def _paged_decode_step(cfg, NB, L, params, toks, pos, data, bt, key,
+                           temps, active, eos, remaining):
+        """One decode step over the page pool: gather each slot's pages
+        into the exact contiguous ring layout, run the unchanged decode
+        math, scatter back the one page per slot that was written."""
+        from repro.serve import memory as kvmem
+        caches = kvmem.gather_block_tables(data, bt)
+        logits, caches = lm.decode_step(params, cfg, toks, pos, caches)
+        key, sub = jax.random.split(key)
+        nxt = _sample_tokens(logits[:, 0], sub, temps)
+        nxt = jnp.where(active, nxt, 0)
+        done = active & ((nxt == eos) | (remaining <= 1))
+        data = kvmem.scatter_written_pages(data, caches, bt, pos, NB, L)
+        return nxt, done, data, key
+
     # ------------------------------------------------------------------
     def _mesh_ctx(self):
         """Active-mesh scope for every traced/executed model call: the
@@ -286,6 +352,20 @@ class Engine:
 
     def n_free(self) -> int:
         return len(self._free_slots())
+
+    def admission_capacity(self) -> int:
+        """Requests this engine could plausibly admit RIGHT NOW: free
+        slots, capped by page-pool headroom when KV is paged — the
+        scheduler's admission control consults this instead of raw slot
+        count (a free slot with no pages behind it absorbs nothing)."""
+        free = self.n_free()
+        if self.pool is None:
+            return free
+        return min(free, self.pool.admissible_requests())
+
+    def memory_stats(self):
+        """Paged-KV pool accounting (None when KV is contiguous)."""
+        return None if self.pool is None else self.pool.stats()
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None
@@ -326,10 +406,20 @@ class Engine:
         ``keep_kv=False`` drops them — resume re-prefills
         ``prompt + out_tokens[:-1]`` (the last emitted token becomes the
         next decode input, exactly as if decode had never stopped). The
-        caller re-queues the returned request."""
+        caller re-queues the returned request.
+
+        Paged KV (DESIGN.md §13): no data moves — ``keep_kv=True``
+        merely UNMAPS the slot (its pages stay allocated, turn cold, and
+        may spill to host RAM under memory pressure; resume faults them
+        back); ``keep_kv=False`` frees the pages outright."""
         req = self.slot_req[slot]
         assert req is not None, f"preempting free slot {slot}"
-        if keep_kv:
+        if self.pool is not None:
+            if keep_kv:
+                self.pool.preempt(req.rid)
+            else:
+                self.pool.free(req.rid)
+        elif keep_kv:
             with self._mesh_ctx():
                 req._kv = self._snap(self.caches, slot)
         req._resume_pos = int(self.pos[slot])
@@ -355,6 +445,26 @@ class Engine:
         self.pos[slot] = req._resume_pos
         self._finish_resume(slot, req)
 
+    def _attach_paged_resume(self, slot: int, req: Request):
+        """Paged resume: the request's pages were just pinned resident
+        (host-spilled ones faulted back) — only the block table changes;
+        no cache copy at all."""
+        assert self.slot_req[slot] is None, \
+            f"resume into occupied slot {slot}"
+        self.pos[slot] = req._resume_pos
+        self._finish_resume(slot, req)
+
+    def _paged_reserve(self, req: Request) -> Tuple[bool, str]:
+        """Acquire the pages an admission needs. Returns (ok, mode):
+        mode 'resume' re-attached a preempted request's live pages
+        (skip prefill entirely), 'prefill' allocated pages for a fresh
+        prompt or a re-prefill resume (dropped/never-kept pages). Not
+        ok = pool exhausted; the caller defers the request."""
+        if req._resume_pos is not None and self.pool.has_pages(req.rid):
+            return self.pool.resume(req.rid), "resume"
+        n = self.pool.pages_for(len(self._prefill_tokens(req)))
+        return self.pool.admit(req.rid, n), "prefill"
+
     def _prefill_tokens(self, req: Request) -> np.ndarray:
         """The token sequence admission must prefill: the prompt, or for
         a re-prefill resume the prompt + all generated tokens but the
@@ -374,15 +484,32 @@ class Engine:
                 return b
         return S
 
+    def _run_prefill(self, toks, poss, all_slots, reqs, valid):
+        """Dispatch one jitted admission pass: contiguous engines
+        scatter cache ROWS into the batch caches at ``all_slots``
+        (``valid`` masks bucketed padding rows); paged engines scatter
+        cache PAGES into the pool at each request's allocated pages
+        (padding rows write to the trash page — no mask needed).
+        Returns the last-token logits (G, V)."""
+        if self.pool is not None:
+            dests = self.pool.dest_table([r.rid for r in reqs],
+                                         toks.shape[0])
+            logits_last, self.pool.data = self._prefill(
+                self.params, toks, poss, self.pool.data,
+                jnp.asarray(dests))
+        else:
+            logits_last, self.caches = self._prefill(
+                self.params, toks, poss, self.caches,
+                jnp.asarray(np.asarray(all_slots, np.int32)), valid)
+        return logits_last
+
     def _prefill_into_slot(self, slot: int, req: Request,
                            seq: np.ndarray):
         """Single-sequence prefill; its cache rows are written into the
         batch caches at ``slot``. Fallback path: hybrid/SSM stacks and
         prompts longer than the cache."""
         toks = jnp.asarray(seq[None, :], jnp.int32)
-        logits_last, self.caches = self._prefill(
-            self.params, toks, None, self.caches,
-            jnp.asarray([slot], jnp.int32), None)
+        logits_last = self._run_prefill(toks, None, [slot], [req], None)
         assert self.slot_req[slot] is None, \
             f"prefill into occupied slot {slot}"
         self.pos[slot] = len(seq)
@@ -423,10 +550,9 @@ class Engine:
             pad = S - lens[g]
             toks[g, pad:] = seq
             poss[g] = np.arange(S) - pad
-        logits_last, self.caches = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(poss),
-            self.caches, jnp.asarray(np.asarray(all_slots, np.int32)),
-            valid)
+        logits_last = self._run_prefill(jnp.asarray(toks),
+                                        jnp.asarray(poss), all_slots,
+                                        reqs, valid)
         temps = np.zeros((Gp,), np.float32)
         for g, r in enumerate(reqs):
             temps[g] = r.temperature
@@ -459,6 +585,8 @@ class Engine:
             req.done = True
             req.status = "done"
             req.t_done = time.monotonic()
+            if self.pool is not None:
+                self.pool.free(req.rid)
             self._finished_at_admission.append(req)
             return True
         return False
@@ -470,19 +598,31 @@ class Engine:
         take = min(len(free), len(self.queue))
         if not take:
             return
-        if len(free) < self.B:      # refill while other slots decode
-            self.stats["continuous_refills"] += take
         popped = [self.queue.pop(0) for _ in range(take)]
         slots = free[:take]
-        self.stats["admitted"] += take
         try:
-            # KV-snapshot resumes restore directly (no forward pass)
+            # KV-snapshot / page resumes restore directly (no forward
+            # pass); paged admissions acquire their pages first and
+            # DEFER (back to the queue, in order) once the pool is
+            # exhausted — slots are oversubscribable, pages are not
             pending = []
-            for slot, req in zip(slots, popped):
+            for k, (slot, req) in enumerate(zip(slots, popped)):
+                if self.pool is not None:
+                    ok, mode = self._paged_reserve(req)
+                    if not ok:
+                        self.queue[:0] = popped[k:]
+                        popped = popped[:k]
+                        break
+                    if mode == "resume":
+                        self._attach_paged_resume(slot, req)
+                        continue
                 if req._resume_pos is not None and req._kv is not None:
                     self._restore_slot(slot, req)
                 else:
                     pending.append((slot, req))
+            if len(free) < self.B:  # refill while other slots decode
+                self.stats["continuous_refills"] += len(popped)
+            self.stats["admitted"] += len(popped)
             if not pending:
                 return
             slots = [s for s, _ in pending]
@@ -503,7 +643,19 @@ class Engine:
             # scheduler's failure handler can re-route it
             placed = {id(r) for r in self.slot_req if r is not None}
             placed |= {id(r) for r in self._finished_at_admission}
-            self.queue[:0] = [r for r in popped if id(r) not in placed]
+            back = [r for r in popped if id(r) not in placed]
+            if self.pool is not None:
+                # unwind page state: un-prefilled admissions release
+                # their pages; unplaced page-holding resumes turn cold
+                # again (spillable) instead of leaking resident pages
+                for r in back:
+                    if not self.pool.has_pages(r.rid):
+                        continue
+                    if r._resume_pos is not None:
+                        self.pool.mark_preempted(r.rid)
+                    else:
+                        self.pool.free(r.rid)
+            self.queue[:0] = back
             raise
 
     # ------------------------------------------------------------------
@@ -517,9 +669,25 @@ class Engine:
         self._admit()
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if self.pool is not None and active:
+            # decode growth: the page holding this step's write position
+            # must be resident BEFORE the step. A slot that cannot grow
+            # (pool exhausted, nothing cold to spill) is preempted with
+            # its pages kept — they turn cold, so some other slot's
+            # growth (or this one's later resume) can evict them.
+            # watermark >= one ring guarantees a lone slot always fits.
+            C, L = self.cache_len, self.pool.page_len
+            for i in list(active):
+                req = self.slot_req[i]
+                if not self.pool.ensure_page(req.rid,
+                                             (int(self.pos[i]) % C) // L):
+                    self.queue.insert(0, self.preempt_slot(i))
+                    active.remove(i)
         if not active:
             finished = self._finished_at_admission
             self._finished_at_admission = []
+            if self.pool is not None:
+                self.stats["memory"] = self.pool.stats().as_dict()
             return finished
         # requests retired AT admission stay buffered until the decode
         # below succeeds — if it raises, the scheduler's failure handler
@@ -539,11 +707,22 @@ class Engine:
             eos[i] = -1 if req.eos_id is None else req.eos_id
             remaining[i] = req.max_new_tokens - len(req.out_tokens)
 
-        nxt, done, self.caches, self._key = self._decode(
-            self.params, jnp.asarray(last),
-            jnp.asarray(self.pos, jnp.int32), self.caches, self._key,
-            jnp.asarray(temps), jnp.asarray(act),
-            jnp.asarray(eos.astype(np.int32)), jnp.asarray(remaining))
+        if self.pool is not None:
+            bt = jnp.asarray(self.pool.block_table(
+                [r.rid if r is not None else None
+                 for r in self.slot_req]))
+            nxt, done, self.pool.data, self._key = self._decode(
+                self.params, jnp.asarray(last),
+                jnp.asarray(self.pos, jnp.int32), self.pool.data, bt,
+                self._key, jnp.asarray(temps), jnp.asarray(act),
+                jnp.asarray(eos.astype(np.int32)),
+                jnp.asarray(remaining))
+        else:
+            nxt, done, self.caches, self._key = self._decode(
+                self.params, jnp.asarray(last),
+                jnp.asarray(self.pos, jnp.int32), self.caches, self._key,
+                jnp.asarray(temps), jnp.asarray(act),
+                jnp.asarray(eos.astype(np.int32)), jnp.asarray(remaining))
         nxt = np.asarray(nxt)                   # (B,) int32 — the ONLY
         done = np.asarray(done)                 # per-token host traffic
 
@@ -557,10 +736,14 @@ class Engine:
                 req.done = True
                 req.status = "done"
                 req.t_done = time.monotonic()
+                if self.pool is not None:       # EOS frees the pages
+                    self.pool.free(req.rid)
                 finished.append(req)
                 self.slot_req[i] = None
         finished = self._finished_at_admission + finished
         self._finished_at_admission = []
+        if self.pool is not None:
+            self.stats["memory"] = self.pool.stats().as_dict()
         return finished
 
     # -- failure containment (DESIGN.md §12) ---------------------------
@@ -577,6 +760,8 @@ class Engine:
             req.status = "failed"
             req.error = f"{type(err).__name__}: {err}"
             req.t_done = now
+            if self.pool is not None and self.pool.has_pages(req.rid):
+                self.pool.free(req.rid)
             self.slot_req[i] = None
             self.stats["failed"] += 1
             failed.append(req)

@@ -1,0 +1,569 @@
+"""Paged KV-cache memory subsystem (DESIGN.md §13).
+
+The contiguous serving engine pins a full ``cache_len`` ring of KV
+memory per slot for the slot's whole lifetime — queued, preempted,
+half-empty, it all costs the same. This module converts KV memory into
+a *scheduled* resource: a shared device **page pool** plus per-slot
+**block tables**, with the page size tile-aligned to the SASP pruning
+block (the same granularity the systolic-array tile-skip kernels use —
+the paper's co-design move applied to memory instead of FLOPs).
+
+Layout. One *page* holds ``page_len`` consecutive ring positions of
+every attention layer at once (all scan repeats, all segment slots) —
+pool leaves are ``(R, P, page_len, …)``, built by
+``models.lm.init_caches(..., uniform_cap=True)``. A slot's logical ring
+of ``cache_len = NB · page_len`` tokens is assembled by a jitted
+block-table gather (``models.attention.gather_kv_pages``), which is
+bit-identical to the contiguous ring, so prefill/decode math runs
+unchanged and greedy streams match the unpaged engine exactly.
+
+Two physical pages are reserved:
+
+* ``ZERO_PAGE`` — all zeros, ``pos = -1`` everywhere; unallocated
+  logical pages point here for READS (masked out of attention, same
+  content as an unwritten ring region). Never a write target.
+* ``TRASH_PAGE`` — the write target for idle batch rows and
+  admission-group padding; never read by a live slot.
+
+Policy. Pages are allocated on admission growth (``pages_for`` the
+prompt, then one page each time decode crosses a page boundary) and
+freed on EOS/failure. A high-watermark cap bounds resident device
+pages; when an allocation would cross it, *cold* pages spill to a
+host-RAM pool — preempted requests first, longest-idle first — via a
+``jax.device_put``/``device_get`` round-trip, and fault back on resume.
+When the host pool is also full, the coldest preempted request's pages
+are **dropped** and it falls back to re-prefill resume (still exact —
+the same fallback PR 4 uses for cross-rank resume). ``MemoryStats``
+(device/host pages, spills, faults, drops, residency) is surfaced
+through ``Engine.stats["memory"]`` and the scheduler's per-rank stats.
+
+Bookkeeping and data movement are split: :class:`PageAllocator` is a
+pure host-side state machine (property-tested with hypothesis in
+``tests/test_memory.py``) that returns *moves*; :class:`PagedKVPool`
+owns the arrays and executes the moves.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MIXER_ATTN, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import lm
+
+ZERO_PAGE = 0
+TRASH_PAGE = 1
+RESERVED_PAGES = 2
+
+
+def systolic_tile(cfg: ModelConfig) -> int:
+    """The tile the page size must align to: the SASP pruning block
+    (paper: the systolic-array dimension) when SASP is deployed, else 1
+    (no tiling constraint to compose with)."""
+    if cfg.sasp.enabled:
+        return max(int(cfg.sasp.block_k), int(cfg.sasp.block_n))
+    return 1
+
+
+def tile_aligned_page_len(cfg: ModelConfig, cache_len: int,
+                          page_len: Optional[int] = None) -> int:
+    """Resolve the page length in tokens: a multiple of the systolic
+    tile that divides ``cache_len`` (so NB = cache_len / page_len is
+    whole and paging granularity composes with the packed-kernel
+    tiling). Default: one tile when SASP is deployed (clamped to the
+    cache), else cache_len / 8-ish."""
+    tile = systolic_tile(cfg)
+    if page_len is None:
+        page_len = min(tile, cache_len) if cfg.sasp.enabled \
+            else max(1, cache_len // 8)
+        # grow to the nearest divisor of cache_len (tile already divides
+        # cache_len or we fail below with the explicit-arg message)
+        while cache_len % page_len:
+            page_len += 1
+    page_len = int(page_len)
+    if page_len < 1 or page_len > cache_len:
+        raise ValueError(
+            f"kv page_len={page_len} must lie in [1, cache_len="
+            f"{cache_len}]")
+    if page_len % tile:
+        raise ValueError(
+            f"kv page_len={page_len} must be a multiple of the SASP "
+            f"tile {tile} (block_k/block_n) so paging granularity "
+            f"composes with the packed-kernel tiling")
+    if cache_len % page_len:
+        raise ValueError(
+            f"cache_len={cache_len} must be a multiple of kv "
+            f"page_len={page_len} (whole pages per ring)")
+    return page_len
+
+
+@dataclass
+class MemoryStats:
+    """Per-pool accounting, surfaced through ``Engine.stats['memory']``
+    and ``ShardedScheduler.stats()['per_rank']``."""
+    device_pages: int        # allocatable device pages (excl. reserved)
+    host_pages: int          # host-RAM spill pool capacity
+    watermark: int           # resident-page cap (high-watermark policy)
+    device_used: int
+    host_used: int
+    preempted_resident: int  # device pages pinned by preempted requests
+    spills: int              # pages spilled device -> host (cumulative)
+    faults: int              # pages faulted host -> device (cumulative)
+    drops: int               # preempted requests dropped to re-prefill
+
+    @property
+    def device_free(self) -> int:
+        return self.device_pages - self.device_used
+
+    @property
+    def residency(self) -> float:
+        """Fraction of the device pool resident."""
+        return self.device_used / max(1, self.device_pages)
+
+    def as_dict(self) -> Dict:
+        import dataclasses
+        return dict(dataclasses.asdict(self),
+                    device_free=self.device_free,
+                    residency=round(self.residency, 4))
+
+
+# page-table entries: ("dev", page_id) | ("host", host_slot) | None
+_Move = Tuple  # ("spill", rid, j, dev, host) | ("fault", rid, j, host, dev)
+
+
+class PageAllocator:
+    """Host-side page bookkeeping — no arrays, no jax.
+
+    Tracks per-request page tables, the device/host free lists, the
+    resident/preempted split, and the high-watermark cap. Mutating ops
+    return the ordered data-movement *moves* the pool must execute (or
+    None when the operation cannot be satisfied). Invariants (checked
+    by :meth:`check`, property-tested in tests/test_memory.py):
+
+    * every device page is free or owned by exactly one request;
+    * every host slot is free or owned by exactly one request;
+    * resident device pages never exceed the watermark cap;
+    * a request is resident XOR preempted; resident requests hold no
+      host (spilled) pages.
+    """
+
+    def __init__(self, device_ids: Sequence[int], host_slots: int,
+                 watermark_cap: int, slot_pages: int):
+        self._all_dev = sorted(int(p) for p in device_ids)
+        self.free_dev: List[int] = list(self._all_dev)
+        self.n_device = len(self.free_dev)
+        self.cap = int(watermark_cap)
+        self.NB = int(slot_pages)          # logical pages per slot
+        if self.cap < self.NB:
+            raise ValueError(
+                f"watermark cap {self.cap} pages < one slot's ring "
+                f"({self.NB} pages): a single slot could never be "
+                f"fully resident — raise kv_pages / kv_watermark")
+        self.free_host: List[int] = list(range(int(host_slots)))
+        self.n_host = int(host_slots)
+        self.tables: Dict[int, List[Optional[Tuple]]] = {}
+        self.resident: set = set()
+        self.preempted: List[int] = []     # oldest (coldest) first
+        self.spills = 0
+        self.faults = 0
+        self.drops = 0
+
+    # -- views ---------------------------------------------------------
+    @property
+    def used_dev(self) -> int:
+        return self.n_device - len(self.free_dev)
+
+    @property
+    def used_host(self) -> int:
+        return self.n_host - len(self.free_host)
+
+    def has(self, rid: int) -> bool:
+        return rid in self.tables
+
+    def dev_pages(self, rid: int) -> List[Optional[int]]:
+        """Per-logical-page device ids (None = unallocated). Only valid
+        for resident requests (no host entries)."""
+        out = []
+        for e in self.tables[rid]:
+            assert e is None or e[0] == "dev", (rid, e)
+            out.append(None if e is None else e[1])
+        return out
+
+    def preempted_dev_pages(self) -> int:
+        return sum(1 for rid in self.preempted
+                   for e in self.tables[rid] if e and e[0] == "dev")
+
+    def _room(self) -> int:
+        """Device pages allocatable right now without spilling."""
+        return min(len(self.free_dev), self.cap - self.used_dev)
+
+    def headroom(self) -> int:
+        """Device pages allocatable after spilling/dropping every cold
+        (preempted) page — the admission-control view of the pool."""
+        return self._room() + self.preempted_dev_pages()
+
+    def admissible_requests(self, pages_per_req: int = 2) -> int:
+        """Rough admission headroom in requests (prompt page + growth
+        page); the scheduler consults this instead of raw slot count."""
+        return self.headroom() // max(1, pages_per_req)
+
+    # -- room making (spill-then-drop policy) --------------------------
+    def _spill_victim(self, protect) -> Optional[int]:
+        for rid in self.preempted:          # oldest preempt first
+            if rid == protect:
+                continue
+            if any(e and e[0] == "dev" for e in self.tables[rid]):
+                return rid
+        return None
+
+    def _drop(self, rid: int):
+        """Release ALL of a preempted request's pages (device + host):
+        it will resume by re-prefill instead of page fault."""
+        for e in self.tables.pop(rid):
+            if e is None:
+                continue
+            (self.free_dev if e[0] == "dev" else self.free_host) \
+                .append(e[1])
+        self.preempted.remove(rid)
+        self.drops += 1
+
+    def _make_room(self, n: int, moves: List[_Move],
+                   protect=None) -> bool:
+        """Spill cold pages (preempted requests, oldest first) to host
+        until ``n`` device pages are allocatable; drop whole preempted
+        requests to re-prefill once the host pool is full. False = no
+        cold pages left to evict."""
+        while self._room() < n:
+            victim = self._spill_victim(protect)
+            if victim is None:
+                return False
+            refs = self.tables[victim]
+            if self.free_host:
+                j = max(j for j, e in enumerate(refs)
+                        if e and e[0] == "dev")
+                dev = refs[j][1]
+                host = self.free_host.pop()
+                moves.append(("spill", victim, j, dev, host))
+                refs[j] = ("host", host)
+                self.free_dev.append(dev)
+                self.spills += 1
+            else:
+                self._drop(victim)
+        return True
+
+    # -- lifecycle ops -------------------------------------------------
+    #
+    # Every op returns (ok, moves). The moves list MUST be executed by
+    # the caller even when ok is False: _make_room commits spills to
+    # the bookkeeping as it goes, so a failed allocation may still have
+    # moved cold pages to "host" state — dropping those moves would
+    # leave the host pool without the data and a later resume would
+    # fault back zeros (silent KV corruption). Spilling cold pages is
+    # never wrong, so partial room-making simply stands.
+
+    def admit(self, rid: int, n: int) -> Tuple[bool, List[_Move]]:
+        """Allocate the first ``n`` logical pages for a new (or
+        re-prefilling) request. not ok = pool exhausted (caller
+        defers; any partial spill moves still execute)."""
+        assert rid not in self.tables, f"rid {rid} already has pages"
+        assert 1 <= n <= self.NB, (rid, n)
+        moves: List[_Move] = []
+        if not self._make_room(n, moves):
+            return False, moves
+        refs: List[Optional[Tuple]] = [None] * self.NB
+        for j in range(n):
+            refs[j] = ("dev", self.free_dev.pop())
+        self.tables[rid] = refs
+        self.resident.add(rid)
+        return True, moves
+
+    def ensure(self, rid: int, j: int) -> Tuple[bool, List[_Move]]:
+        """Decode growth: allocate logical page ``j`` if absent. not
+        ok = no room (caller preempts the slot)."""
+        refs = self.tables[rid]
+        assert rid in self.resident, f"growing non-resident rid {rid}"
+        if refs[j] is not None:
+            assert refs[j][0] == "dev", (rid, j, refs[j])
+            return True, []
+        moves: List[_Move] = []
+        if not self._make_room(1, moves, protect=rid):
+            return False, moves
+        refs[j] = ("dev", self.free_dev.pop())
+        return True, moves
+
+    def free(self, rid: int):
+        """EOS / failure: return every page to the free lists."""
+        assert rid in self.tables, f"double free of rid {rid}"
+        self.resident.discard(rid)
+        if rid in self.preempted:
+            self.preempted.remove(rid)
+        for e in self.tables.pop(rid):
+            if e is None:
+                continue
+            (self.free_dev if e[0] == "dev" else self.free_host) \
+                .append(e[1])
+
+    def preempt(self, rid: int):
+        """Unmap from its slot: pages stay allocated but become cold
+        (spillable). No data moves — this is the paged replacement for
+        the KV-snapshot copy."""
+        self.resident.remove(rid)
+        self.preempted.append(rid)
+
+    def mark_preempted(self, rid: int):
+        """Idempotent preempt (admission-failure unwind path)."""
+        if rid in self.resident:
+            self.preempt(rid)
+
+    def resume(self, rid: int) -> Tuple[bool, List[_Move]]:
+        """Fault a preempted request's spilled pages back and pin it
+        resident. not ok = no room yet (caller retries later) — the
+        request keeps its preempted position, partial spill moves of
+        OTHER requests still execute. Callers must check :meth:`has`
+        first (dropped requests re-prefill)."""
+        refs = self.tables[rid]
+        need = sum(1 for e in refs if e and e[0] == "host")
+        moves: List[_Move] = []
+        if not self._make_room(need, moves, protect=rid):
+            return False, moves
+        for j, e in enumerate(refs):
+            if e and e[0] == "host":
+                dev = self.free_dev.pop()
+                moves.append(("fault", rid, j, e[1], dev))
+                self.free_host.append(e[1])
+                refs[j] = ("dev", dev)
+                self.faults += 1
+        self.preempted.remove(rid)
+        self.resident.add(rid)
+        return True, moves
+
+    # -- invariants ----------------------------------------------------
+    def check(self):
+        owned_dev, owned_host = [], []
+        for rid, refs in self.tables.items():
+            for e in refs:
+                if e is None:
+                    continue
+                (owned_dev if e[0] == "dev" else owned_host).append(e[1])
+        assert sorted(owned_dev + self.free_dev) == self._all_dev, \
+            "device pages leaked or double-owned"
+        assert sorted(owned_host + self.free_host) == \
+            list(range(self.n_host)), "host slots leaked or double-owned"
+        assert len(set(owned_dev)) == len(owned_dev)
+        assert len(set(owned_host)) == len(owned_host)
+        assert self.used_dev <= self.cap, \
+            f"watermark breached: {self.used_dev} > {self.cap}"
+        assert set(self.preempted).isdisjoint(self.resident)
+        assert set(self.tables) == self.resident | set(self.preempted)
+        for rid in self.resident:
+            assert all(e is None or e[0] == "dev"
+                       for e in self.tables[rid]), \
+                f"resident rid {rid} holds spilled pages"
+
+
+# ---------------------------------------------------------------------------
+# The pool: arrays + jitted movement on top of the allocator
+# ---------------------------------------------------------------------------
+
+
+def gather_block_tables(data, bt: jnp.ndarray):
+    """Pool pytree + (B, NB) block table -> logical ring caches
+    (R, B, C, …) per leaf; jit-traceable."""
+    return jax.tree.map(lambda a: attn_mod.gather_kv_pages(a, bt), data)
+
+
+def scatter_written_pages(data, caches, bt: jnp.ndarray,
+                          pos: jnp.ndarray, NB: int, L: int):
+    """Write back the one page per slot a decode step touched (the page
+    holding ring position ``pos % C``)."""
+    pj = ((pos % (NB * L)) // L).astype(jnp.int32)
+    return jax.tree.map(
+        lambda a, c: attn_mod.scatter_kv_written_page(a, c, bt, pj),
+        data, caches)
+
+
+def scatter_prefill_pages(data, caches, dests: jnp.ndarray):
+    """Scatter per-request prefill caches into the pool at ``dests``
+    (G, NB) — trash where unallocated/invalid."""
+    return jax.tree.map(
+        lambda a, c: attn_mod.scatter_prefill_pages(a, c, dests),
+        data, caches)
+
+
+class PagedKVPool:
+    """Shared device page pool + host-RAM spill pool for one Engine.
+
+    ``data`` is the pool pytree (leaves (R, P, L, …), P = device_pages
+    + 2 reserved); the engine's jitted prefill/decode read and write it
+    through block tables. All policy lives in the embedded
+    :class:`PageAllocator`; this class executes the data moves.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, cache_len: int,
+                 device_pages: int, page_len: Optional[int] = None,
+                 watermark: float = 1.0, host_pages: int = 0,
+                 mesh=None, profile: str = "tp"):
+        if any(m != MIXER_ATTN for m in cfg.layer_mixer_kinds()):
+            raise ValueError(
+                "paged KV requires an attention-only stack (SSM/hybrid "
+                "recurrent state has no ring to page)")
+        if device_pages < 1:
+            raise ValueError(f"device_pages={device_pages} must be >= 1")
+        if not 0.0 < watermark <= 1.0:
+            raise ValueError(
+                f"kv watermark={watermark} must lie in (0, 1]")
+        self.cfg = cfg
+        self.cache_len = int(cache_len)
+        self.page_len = tile_aligned_page_len(cfg, cache_len, page_len)
+        self.NB = self.cache_len // self.page_len
+        self.n_device = int(device_pages)
+        cap = max(1, int(math.floor(self.n_device * watermark)))
+        self.alloc = PageAllocator(
+            range(RESERVED_PAGES, RESERVED_PAGES + self.n_device),
+            host_pages, cap, self.NB)
+        P = self.n_device + RESERVED_PAGES
+        self.data = lm.init_caches(params, cfg, P, self.page_len,
+                                   uniform_cap=True)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distribution import sharding as shd
+            psh = shd.pool_shardings(
+                cfg, mesh, jax.eval_shape(lambda: self.data))
+            self.data = jax.device_put(self.data, psh)
+        # host-RAM spill pool: same structure, numpy, (R, H, L, …)
+        self._host = None
+        if host_pages > 0:
+            self._host = jax.tree.map(
+                lambda s: np.zeros(
+                    (s.shape[0], host_pages) + s.shape[2:], s.dtype),
+                jax.eval_shape(lambda: self.data))
+        self._read = jax.jit(
+            lambda data, ids: jax.tree.map(lambda a: a[:, ids], data))
+        self._write = jax.jit(
+            lambda data, ids, vals: jax.tree.map(
+                lambda a, v: a.at[:, ids].set(v.astype(a.dtype)),
+                data, vals))
+        # page scrub: recycled pages carry the previous owner's stale
+        # contents — in particular pos values >= 0 that the ring mask
+        # would attend to. Prefill and fault writes cover whole pages,
+        # but decode-growth pages get only ONE token written, so they
+        # are reset to the pristine zero page (zeros, pos = -1) first.
+        self._scrub = jax.jit(
+            lambda data, ids: jax.tree.map(
+                lambda a: a.at[:, ids].set(a[:, ZERO_PAGE][:, None]),
+                data))
+
+    # -- sizing --------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        """Logical pages a prefill of ``n_tokens`` writes (the ring
+        keeps at most cache_len of them)."""
+        n = min(int(n_tokens), self.cache_len)
+        return max(1, -(-n // self.page_len))
+
+    # -- lifecycle (delegates to the allocator, executes moves) --------
+    # the allocator's moves execute even when the op fails: partial
+    # spills committed by its room-making must reach the host pool, or
+    # a later resume would fault back never-written zeros
+
+    def admit(self, rid: int, n_pages: int) -> bool:
+        ok, moves = self.alloc.admit(rid, n_pages)
+        self._execute(moves)
+        return ok
+
+    def ensure_page(self, rid: int, j: int) -> bool:
+        fresh = self.alloc.tables[rid][j] is None
+        ok, moves = self.alloc.ensure(rid, j)
+        self._execute(moves)
+        if ok and fresh:
+            self.data = self._scrub(
+                self.data,
+                jnp.asarray([self.alloc.tables[rid][j][1]], jnp.int32))
+        return ok
+
+    def resume(self, rid: int) -> bool:
+        ok, moves = self.alloc.resume(rid)
+        self._execute(moves)
+        return ok
+
+    def free(self, rid: int):
+        self.alloc.free(rid)
+
+    def preempt(self, rid: int):
+        self.alloc.preempt(rid)
+
+    def mark_preempted(self, rid: int):
+        self.alloc.mark_preempted(rid)
+
+    def has_pages(self, rid: int) -> bool:
+        return self.alloc.has(rid)
+
+    def admissible_requests(self) -> int:
+        return self.alloc.admissible_requests()
+
+    # -- tables for the jitted paths -----------------------------------
+    def block_table(self, slot_rids: Sequence[Optional[int]]
+                    ) -> np.ndarray:
+        """(B, NB) physical page ids for the decode gather: occupied
+        slots map their allocated pages (zero page where unallocated —
+        read as masked emptiness), free slots map the trash page (their
+        writes are discarded)."""
+        B = len(slot_rids)
+        bt = np.full((B, self.NB), TRASH_PAGE, np.int32)
+        for i, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            for j, p in enumerate(self.alloc.dev_pages(rid)):
+                bt[i, j] = ZERO_PAGE if p is None else p
+        return bt
+
+    def dest_table(self, rids: Sequence[int], n_rows: int) -> np.ndarray:
+        """(n_rows, NB) prefill WRITE destinations: allocated pages for
+        each admitted request, trash everywhere else (unallocated
+        logical pages, admission-group padding rows)."""
+        dests = np.full((n_rows, self.NB), TRASH_PAGE, np.int32)
+        for i, rid in enumerate(rids):
+            for j, p in enumerate(self.alloc.dev_pages(rid)):
+                if p is not None:
+                    dests[i, j] = p
+        return dests
+
+    # -- data movement -------------------------------------------------
+    def _execute(self, moves: List[_Move]):
+        """Run the allocator's spill/fault moves: one batched gather to
+        host per call, one batched scatter from host per call."""
+        spills = [(m[3], m[4]) for m in moves if m[0] == "spill"]
+        faults = [(m[3], m[4]) for m in moves if m[0] == "fault"]
+        if spills:
+            dev_ids = jnp.asarray([d for d, _ in spills], jnp.int32)
+            out = self._read(self.data, dev_ids)
+            for leaf in jax.tree.leaves(out):   # overlap D2H copies
+                if hasattr(leaf, "copy_to_host_async"):
+                    leaf.copy_to_host_async()
+            vals = jax.device_get(out)
+            hs = [h for _, h in spills]
+
+            def put_host(hleaf, v):
+                hleaf[:, hs] = v
+                return hleaf
+            jax.tree.map(put_host, self._host, vals)
+        if faults:
+            host_ids = [h for h, _ in faults]
+            dev_ids = jnp.asarray([d for _, d in faults], jnp.int32)
+            vals = jax.tree.map(lambda h: jnp.asarray(h[:, host_ids]),
+                                self._host)
+            self.data = self._write(self.data, dev_ids, vals)
+
+    # -- accounting ----------------------------------------------------
+    def stats(self) -> MemoryStats:
+        a = self.alloc
+        return MemoryStats(
+            device_pages=a.n_device, host_pages=a.n_host,
+            watermark=a.cap, device_used=a.used_dev,
+            host_used=a.used_host,
+            preempted_resident=a.preempted_dev_pages(),
+            spills=a.spills, faults=a.faults, drops=a.drops)

@@ -44,6 +44,18 @@ into a serving loop with independent request lifetimes:
   attached, collected on ``scheduler.failed``), its QUEUED requests
   re-route to live ranks, and the serving loop neither deadlocks nor
   re-dispatches to the dead shard.
+* **Paged-KV admission (DESIGN.md §13)** — with
+  ``SchedulerConfig(kv_pages=…)`` each rank engine backs its slots
+  with a shared page pool; the ``max_queue`` cap counts
+  ``Engine.admission_capacity()`` (free slots ∩ pool headroom), so a
+  rank whose pool is exhausted sheds instead of queueing onto phantom
+  free slots, and per-rank ``stats()`` carry the pool's
+  ``MemoryStats``. ``shed="deadline"`` evicts the waiting request
+  least likely to meet its deadline (batch before interactive) on
+  overflow instead of rejecting the newcomer.
+  ``revive_rank`` rebuilds a dead shard (fresh caches/page pool) and
+  re-admits it to routing; ``prompt_length_histogram`` feeds
+  ``tools/suggest_buckets.py``.
 * **Continuous batching** — each engine refills slots freed by EOS or
   budget exhaustion from its queue mid-decode (left-padded re-prefill
   into the freed slot; ``serve/engine.py``), instead of draining the
@@ -72,6 +84,7 @@ it was preempted and resumed along the way.
 from __future__ import annotations
 
 import time
+from collections import Counter
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, \
     Tuple
@@ -80,6 +93,7 @@ from repro.serve.engine import Engine, Request
 
 POLICIES = ("fcfs", "sjf", "edf")
 PREEMPT_MODES = ("kv", "reprefill")
+SHED_POLICIES = ("count", "deadline")
 # default per-class latency targets (seconds) when a request carries no
 # explicit deadline
 DEFAULT_SLO_LATENCY = {"interactive": 0.5, "batch": 30.0}
@@ -110,6 +124,21 @@ class SchedulerConfig:
     # rank (distribution.sharding.rank_bucket_tables); a sequence is an
     # explicit table of lengths; None = exact shapes
     buckets: Optional[object] = None
+    # overload shedding once max_queue overflows: "count" rejects the
+    # newcomer (PR-4 behavior); "deadline" sheds the waiting request
+    # LEAST likely to meet its deadline — batch class before
+    # interactive, then smallest slack per unit of remaining work — so
+    # interactive SLO attainment holds under overload
+    shed: str = "count"
+    # --- paged KV (DESIGN.md §13) -------------------------------------
+    # device pages per rank engine (None = contiguous per-slot rings);
+    # page length in tokens (None = tile-aligned default); high-
+    # watermark fraction of device pages that may stay resident; host-
+    # RAM spill pool size in pages
+    kv_pages: Optional[int] = None
+    kv_page_len: Optional[int] = None
+    kv_watermark: float = 1.0
+    kv_host_pages: int = 0
 
 
 class ShardedScheduler:
@@ -128,6 +157,7 @@ class ShardedScheduler:
         assert self.sched.policy in POLICIES, self.sched.policy
         assert self.sched.preempt_mode in PREEMPT_MODES, \
             self.sched.preempt_mode
+        assert self.sched.shed in SHED_POLICIES, self.sched.shed
         if mesh is not None:
             from repro.distribution import sharding as shd
             submeshes = shd.dp_submeshes(mesh, profile)
@@ -139,18 +169,53 @@ class ShardedScheduler:
         else:
             submeshes = [None] * (ranks or 1)
         self.bucket_tables = self._resolve_buckets(len(submeshes))
-        admission = "drain" if self.sched.drain else "continuous"
-        self.shards = [
-            Engine(params, cfg, batch_slots=self.sched.slots_per_rank,
-                   cache_len=self.sched.cache_len,
-                   rng_seed=self.sched.rng_seed + r, mesh=sub,
-                   profile=profile, admission=admission, rank=r,
-                   buckets=self.bucket_tables[r])
-            for r, sub in enumerate(submeshes)]
+        # kept for engine-raise recovery (revive_rank rebuilds a shard)
+        self._params = params
+        self._cfg = cfg
+        self._profile = profile
+        self._submeshes = submeshes
+        self._sink: Optional[Callable[[Request, int], None]] = None
+        self.shards = [self._build_engine(r)
+                       for r in range(len(submeshes))]
         self.rejected: List[Request] = []
         self.failed: List[Request] = []
         self.n_submitted = 0
         self.n_accepted = 0
+        self.n_shed = 0                 # victims evicted by shed policy
+        self.n_revived = 0
+        # observed prompt-length histogram (tools/suggest_buckets.py
+        # fits a bucket table to this — ROADMAP: continuous bucket
+        # tuning, first half)
+        self.prompt_hist: Counter = Counter()
+
+    def _build_engine(self, r: int) -> Engine:
+        s = self.sched
+        eng = Engine(self._params, self._cfg,
+                     batch_slots=s.slots_per_rank,
+                     cache_len=s.cache_len, rng_seed=s.rng_seed + r,
+                     mesh=self._submeshes[r], profile=self._profile,
+                     admission="drain" if s.drain else "continuous",
+                     rank=r, buckets=self.bucket_tables[r],
+                     kv_pages=s.kv_pages, kv_page_len=s.kv_page_len,
+                     kv_watermark=s.kv_watermark,
+                     kv_host_pages=s.kv_host_pages)
+        eng.on_token = self._sink
+        return eng
+
+    def revive_rank(self, rank: int) -> Engine:
+        """Engine-raise recovery (ROADMAP): rebuild a dead rank's engine
+        shard — fresh caches/page pool on the same submesh, params
+        re-placed — and re-admit it to the routing set. In-flight
+        requests the dead shard failed stay failed (already resolved);
+        new traffic routes to the revived shard immediately."""
+        old = self.shards[rank]
+        if not old.dead:
+            raise ValueError(f"rank {rank} is alive — refusing to "
+                             f"rebuild a serving engine shard")
+        assert not old.queue, "dead rank still holds queued requests"
+        self.shards[rank] = self._build_engine(rank)
+        self.n_revived += 1
+        return self.shards[rank]
 
     def _resolve_buckets(self, ranks: int
                          ) -> Tuple[Optional[Tuple[int, ...]], ...]:
@@ -217,10 +282,14 @@ class ShardedScheduler:
 
     def submit(self, req: Request) -> bool:
         """Admission control + routing. False = rejected (queue full or
-        no live rank). The cap counts WAITING work net of free slots:
-        requests a free slot will absorb on the next step are not
-        load."""
+        no live rank). The cap counts WAITING work net of ABSORBABLE
+        capacity — free slots, further capped by page-pool headroom on
+        paged-KV engines (a free slot with no pages behind it absorbs
+        nothing). Under ``shed="deadline"`` an overflow evicts the
+        waiting request least likely to meet its deadline instead of
+        always rejecting the newcomer."""
         self.n_submitted += 1
+        self.prompt_hist[len(req.prompt)] += 1
         now = time.monotonic()
         if req.t_submit is None:
             req.t_submit = now
@@ -234,14 +303,47 @@ class ShardedScheduler:
             return False
         cap = self.sched.max_queue
         if cap is not None:
-            free = sum(e.n_free() for e in self._live())
+            free = sum(e.admission_capacity() for e in self._live())
             if self.queued() - free >= cap:
-                req.status = "rejected"
-                self.rejected.append(req)
-                return False
+                victim = req
+                if self.sched.shed == "deadline":
+                    victim = self._shed_victim(req, now)
+                if victim is req:
+                    req.status = "rejected"
+                    self.rejected.append(req)
+                    return False
+                # evict the queued victim, admit the newcomer
+                for e in self._live():
+                    if victim in e.queue:
+                        e.queue.remove(victim)
+                        break
+                victim.status = "rejected"
+                victim._kv = None
+                self.rejected.append(victim)
+                self.n_shed += 1
         self.n_accepted += 1
         self._route(req).submit(req)
         return True
+
+    def _shed_victim(self, incoming: Request, now: float) -> Request:
+        """Deadline-aware shedding (ROADMAP): among every WAITING
+        request (each live rank's queue, plus the newcomer), pick the
+        one least likely to meet its deadline — batch class sheds
+        before interactive, then smallest slack per unit of remaining
+        work (a request that will blow its deadline anyway wastes the
+        least SLO value when dropped)."""
+        cands = [r for e in self._live() for r in e.queue
+                 if r._resume_pos is None]      # never shed mid-decode
+        cands.append(incoming)
+
+        def key(r: Request):
+            dl = r.t_deadline if r.t_deadline is not None \
+                else now + self._slo_target(r)
+            slack = dl - now
+            return (0 if r.slo == "batch" else 1,
+                    slack / max(1, r.cost_estimate()))
+
+        return min(cands, key=key)
 
     # -- preemption (DESIGN.md §12) ------------------------------------
     def _maybe_preempt(self, eng: Engine, now: float):
@@ -324,6 +426,7 @@ class ShardedScheduler:
 
     # -- serving loops -------------------------------------------------
     def _set_sink(self, fn: Optional[Callable[[Request, int], None]]):
+        self._sink = fn                 # revived shards inherit the sink
         for e in self.shards:
             e.on_token = fn
 
@@ -392,19 +495,34 @@ class ShardedScheduler:
         finally:
             self._set_sink(None)
 
+    def prompt_length_histogram(self) -> Dict[int, int]:
+        """Observed prompt lengths (all submissions, admitted or not) —
+        the input ``tools/suggest_buckets.py`` fits a bucket table to."""
+        return dict(self.prompt_hist)
+
     def stats(self) -> Dict:
-        """Per-rank serving counters + global admission/QoS counters."""
+        """Per-rank serving counters + global admission/QoS counters.
+        Paged-KV ranks carry a ``memory`` dict (MemoryStats)."""
+        def rank_stats(e: Engine) -> Dict:
+            d = dict(e.stats, queue=len(e.queue),
+                     free_slots=e.n_free(),
+                     slots=e.slot_states(), dead=e.dead)
+            mem = e.memory_stats()
+            if mem is not None:
+                d["memory"] = mem.as_dict()
+            return d
+
         return {
             "ranks": self.ranks,
             "live_ranks": len(self._live()),
             "submitted": self.n_submitted,
             "accepted": self.n_accepted,
             "rejected": len(self.rejected),
+            "shed": self.n_shed,
+            "revived": self.n_revived,
             "failed": len(self.failed),
+            "prompt_lengths_seen": sum(self.prompt_hist.values()),
             "preemptions": sum(e.stats["preemptions"]
                                for e in self.shards),
-            "per_rank": [dict(e.stats, queue=len(e.queue),
-                              free_slots=e.n_free(),
-                              slots=e.slot_states(), dead=e.dead)
-                         for e in self.shards],
+            "per_rank": [rank_stats(e) for e in self.shards],
         }

@@ -370,5 +370,78 @@ def mode_sched_mesh():
            for k, v in res.items()})
 
 
+def mode_paged_mesh():
+    """Paged KV on the 1×2-mesh packed path (DESIGN.md §13 acceptance):
+    greedy streams with the page pool + block tables must equal the
+    contiguous-cache mesh engine bit-for-bit, including across a forced
+    preempt (page unmap) → spill (device→host) → fault → resume cycle
+    driven by the QoS scheduler on the TP-sharded packed deployment."""
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import build_serving_params
+    from repro.models import lm
+    from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+
+    cfg0 = reduced(get_config("qwen3-32b"), layers=2, d_model=64,
+                   vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    params0 = jax.tree.map(lambda a: a * 3.0, params0)
+    deploy = dict(path="packed", sparsity=0.25, block_k=8, block_n=8,
+                  scope="all", verbose=False)
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    p, c = build_serving_params(params0, cfg0, mesh=mesh, **deploy)
+
+    def streams(**kv):
+        eng = Engine(p, c, batch_slots=2, cache_len=64, mesh=mesh, **kv)
+        rngs = np.random.default_rng(0)
+        done = eng.run([Request(
+            rid=i, prompt=rngs.integers(0, 128, size=(8 + 7 * i,))
+            .astype(np.int32), max_new_tokens=6) for i in range(4)])
+        return {r.rid: r.out_tokens for r in done}, eng
+
+    s_ref, _ = streams()
+    # tile-aligned pages (block 8): oversubscribed pool + host spill
+    s_paged, eng = streams(kv_pages=12, kv_page_len=8, kv_host_pages=8)
+    mem = eng.memory_stats()
+    equal = int(s_paged == s_ref)
+    drained = int(mem.device_used == 0 and mem.host_used == 0)
+
+    # forced preempt → spill → fault → resume on the mesh deployment
+    def solo(req):
+        e = Engine(p, c, batch_slots=1, cache_len=64, mesh=mesh)
+        return e.run([Request(rid=req.rid, prompt=req.prompt,
+                              max_new_tokens=req.max_new_tokens)]
+                     )[0].out_tokens
+
+    rngq = np.random.default_rng(4)
+    batch = Request(rid=0, prompt=rngq.integers(0, 128, size=(18,))
+                    .astype(np.int32), max_new_tokens=12, slo="batch")
+    inter = Request(rid=1, prompt=rngq.integers(0, 128, size=(40,))
+                    .astype(np.int32), max_new_tokens=3,
+                    slo="interactive", deadline=0.01)
+    ref_q = {r.rid: solo(r) for r in (batch, inter)}
+    sched = ShardedScheduler(
+        p, c, mesh=mesh,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode="kv", kv_pages=8,
+                              kv_page_len=8, kv_host_pages=8))
+    assert sched.submit(batch)
+    for _ in range(4):
+        sched.step()
+    assert sched.submit(inter)
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    st = sched.stats()
+    memq = st["per_rank"][0]["memory"]
+    out(equal=equal, drained=drained, spills_run1=mem.spills,
+        cycle_equal=int({r.rid: r.out_tokens for r in done} == ref_q),
+        preemptions=st["preemptions"], spills=memq["spills"],
+        faults=memq["faults"], device_used=memq["device_used"],
+        streams_ref={str(k): v for k, v in s_ref.items()},
+        streams_paged={str(k): v for k, v in s_paged.items()})
+
+
 if __name__ == "__main__":
     globals()[f"mode_{sys.argv[1]}"]()

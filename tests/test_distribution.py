@@ -107,6 +107,20 @@ def test_mesh_packed_serving_streams_bit_identical():
     assert r["equal"] == 1, (r["streams_ref"], r["streams_mesh"])
 
 
+def test_paged_kv_mesh_packed_bit_identical():
+    """Paged KV on the 1×2-mesh packed path (DESIGN.md §13): block-table
+    gather + page pool must reproduce the contiguous mesh engine's
+    greedy streams bit-for-bit — under oversubscription, and across a
+    forced preempt → spill(host) → fault → resume cycle."""
+    r = run_worker("paged_mesh", timeout=560)
+    assert r["equal"] == 1, (r["streams_ref"], r["streams_paged"])
+    assert r["drained"] == 1          # every page back on the free list
+    assert r["cycle_equal"] == 1, r
+    assert r["preemptions"] >= 1
+    assert r["spills"] >= 1 and r["faults"] >= 1, r
+    assert r["device_used"] == 0
+
+
 def test_sched_mesh_continuous_batching_bit_identical():
     """Sharded scheduler on mesh packed paths (DESIGN.md §11): a slot
     freed by EOS is refilled from the queue mid-decode, and every

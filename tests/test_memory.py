@@ -1,0 +1,487 @@
+"""Paged KV-cache memory subsystem (DESIGN.md §13): tile-aligned page
+geometry, allocator bookkeeping (hypothesis state machine: no leaks, no
+double-frees, watermark held after every step), and the engine-level
+bit-identity contract — greedy streams with paging on must equal the
+contiguous-cache engine exactly, including across forced spill→fault
+cycles, preempt/resume (page unmap), drop-to-reprefill, bucketed
+admission, int8 KV, and local-window stacks. The 1×2-mesh packed twin
+lives in tests/test_distribution.py (``paged_mesh`` worker)."""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, invariant, \
+        precondition, rule
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # the fixed twin below still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import SASPConfig, get_config, reduced
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+from repro.serve.memory import PageAllocator, PagedKVPool, \
+    tile_aligned_page_len
+from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="qwen3-32b", kv_quant=False, amplify=True):
+    cfg = reduced(get_config(arch), layers=2, d_model=64, vocab=64)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    params = lm.init_params(KEY, cfg)
+    if amplify:     # position-dependent streams (see test_scheduler.py)
+        params = jax.tree.map(lambda a: a * 3.0, params)
+    return cfg, params
+
+
+def _solo(params, cfg, req: Request):
+    r = Request(rid=req.rid, prompt=req.prompt,
+                max_new_tokens=req.max_new_tokens, eos_id=req.eos_id)
+    return Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [r])[0].out_tokens
+
+
+def _mk_requests(n, rng, max_new=6, eos=False):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 64, size=(int(
+                        rng.integers(4, 30)),)).astype(np.int32),
+                    max_new_tokens=max_new,
+                    eos_id=int(rng.integers(0, 64)) if eos else None)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Page geometry
+# ---------------------------------------------------------------------------
+
+
+def test_tile_aligned_page_len():
+    cfg, _ = _setup()
+    # no SASP: any divisor of cache_len is legal; default ~C/8
+    assert tile_aligned_page_len(cfg, 64) == 8
+    assert tile_aligned_page_len(cfg, 64, 16) == 16
+    # SASP deployed: page must be a multiple of the pruning tile
+    sasp = SASPConfig(enabled=True, block_k=8, block_n=8, sparsity=0.25)
+    cfg8 = dataclasses.replace(cfg, sasp=sasp)
+    assert tile_aligned_page_len(cfg8, 64) == 8       # one tile
+    assert tile_aligned_page_len(cfg8, 64, 16) == 16  # 2 tiles
+    with pytest.raises(ValueError, match="multiple of the SASP tile"):
+        tile_aligned_page_len(cfg8, 64, 12)
+    with pytest.raises(ValueError, match="multiple of kv page_len"):
+        tile_aligned_page_len(cfg, 64, 24)            # 64 % 24 != 0
+    with pytest.raises(ValueError):
+        tile_aligned_page_len(cfg, 64, 128)           # > cache_len
+
+
+def test_pool_rejects_hybrid_stacks():
+    cfg, params = _setup("mamba2-780m", amplify=False)
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(params, cfg, batch_slots=2, cache_len=64, kv_pages=8,
+               kv_page_len=8)
+
+
+# ---------------------------------------------------------------------------
+# Allocator bookkeeping (fixed twin + hypothesis state machine)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_basic_lifecycle():
+    a = PageAllocator(range(2, 10), host_slots=4, watermark_cap=6,
+                      slot_pages=4)
+    assert a.admit(0, 3) == (True, [])          # no moves needed
+    assert a.used_dev == 3
+    assert a.ensure(0, 3) == (True, [])         # growth, room available
+    assert a.used_dev == 4
+    # watermark: cap 6, so a 3-page admit must fail (nothing to spill)
+    assert a.admit(1, 3) == (False, [])
+    assert a.admit(1, 2) == (True, [])
+    a.preempt(0)
+    # rid 0's cold pages spill to host to make room
+    ok, moves = a.admit(2, 4)
+    assert ok
+    assert moves and all(m[0] == "spill" and m[1] == 0 for m in moves)
+    assert a.spills == len(moves)
+    a.free(2)
+    ok, moves = a.resume(0)                     # faults them back
+    assert ok
+    assert moves and all(m[0] == "fault" and m[1] == 0 for m in moves)
+    a.check()
+    a.free(0)
+    a.free(1)
+    assert a.used_dev == 0 and a.used_host == 0
+    with pytest.raises(AssertionError, match="double free"):
+        a.free(0)
+    a.check()
+
+
+def test_allocator_drops_to_reprefill_when_host_full():
+    a = PageAllocator(range(2, 8), host_slots=0, watermark_cap=6,
+                      slot_pages=4)
+    assert a.admit(0, 4) == (True, [])
+    a.preempt(0)
+    assert a.admit(1, 4) == (True, [])          # 0 dropped, not spilled
+    assert a.drops == 1 and not a.has(0)
+    a.check()
+    a.free(1)
+    assert a.used_dev == 0
+
+
+def test_failed_admit_still_executes_partial_spills():
+    """A failed allocation may have ALREADY spilled cold pages in the
+    allocator's bookkeeping; those moves must still reach the host
+    pool, or the victim's later resume would fault back never-written
+    zeros (silent KV corruption — caught in review)."""
+    import jax.numpy as jnp
+
+    cfg, params = _setup()
+    pool = PagedKVPool(params, cfg, cache_len=64, device_pages=4,
+                       page_len=16, host_pages=4)     # NB = 4, cap = 4
+    assert pool.admit(0, 2)                     # A resident, 2 pages
+    assert pool.admit(1, 2)                     # B, 2 pages
+    b_pages = jnp.asarray([p for p in pool.alloc.dev_pages(1)
+                           if p is not None])
+    # stamp B's pages with a recognizable marker on every leaf
+    pool.data = jax.tree.map(
+        lambda a: a.at[:, b_pages].set(jnp.asarray(7, a.dtype)),
+        pool.data)
+    pool.preempt(1)
+    # C wants 3 pages: both of B's cold pages spill, room is still
+    # only 2 — the admit FAILS but the spills must have executed
+    assert not pool.admit(2, 3)
+    assert pool.stats().spills == 2
+    assert pool.stats().host_used == 2
+    assert pool.resume(1)                       # faults B back
+    got = pool._read(pool.data,
+                     jnp.asarray([p for p in pool.alloc.dev_pages(1)
+                                  if p is not None]))
+    for leaf in jax.tree.leaves(got):
+        assert (np.asarray(leaf) == 7).all(), "spilled data lost"
+    pool.alloc.check()
+
+
+if HAVE_HYPOTHESIS:
+
+    class PoolMachine(RuleBasedStateMachine):
+        """Random admission / growth / EOS / preemption / resume over
+        the allocator: after EVERY step no page is leaked or
+        double-owned and the device-page count stays ≤ the watermark
+        (the ISSUE's acceptance invariants)."""
+
+        def __init__(self):
+            super().__init__()
+            self.a = PageAllocator(range(2, 14), host_slots=5,
+                                   watermark_cap=10, slot_pages=4)
+            self.next_rid = 0
+
+        @rule(n=st.integers(1, 4))
+        def admit(self, n):
+            rid = self.next_rid
+            self.next_rid += 1
+            ok, _ = self.a.admit(rid, n)
+            if not ok:
+                assert not self.a.has(rid)      # failed admit is clean
+
+        @precondition(lambda self: self.a.resident)
+        @rule(data=st.data())
+        def grow(self, data):
+            rid = data.draw(st.sampled_from(sorted(self.a.resident)))
+            js = [j for j, e in enumerate(self.a.tables[rid])
+                  if e is None]
+            if js:
+                self.a.ensure(rid, js[0])
+
+        @precondition(lambda self: self.a.tables)
+        @rule(data=st.data())
+        def eos(self, data):
+            rid = data.draw(st.sampled_from(sorted(self.a.tables)))
+            self.a.free(rid)
+
+        @precondition(lambda self: self.a.resident)
+        @rule(data=st.data())
+        def preempt(self, data):
+            rid = data.draw(st.sampled_from(sorted(self.a.resident)))
+            self.a.preempt(rid)
+
+        @precondition(lambda self: self.a.preempted)
+        @rule(data=st.data())
+        def resume(self, data):
+            rid = data.draw(st.sampled_from(list(self.a.preempted)))
+            before = list(self.a.preempted)
+            ok, _ = self.a.resume(rid)
+            if not ok:
+                # failed resume must leave the request preempted (its
+                # pages may have been dropped by room-making for OTHERS
+                # only — never by its own protected resume)
+                assert self.a.has(rid) and rid in self.a.preempted
+                assert self.a.preempted.index(rid) == \
+                    before.index(rid) - sum(
+                        1 for r in before[:before.index(rid)]
+                        if r not in self.a.preempted)
+
+        @invariant()
+        def no_leaks_no_double_free_watermark_held(self):
+            self.a.check()
+
+    PoolMachine.TestCase.settings = settings(
+        max_examples=60, stateful_step_count=40, deadline=None)
+    TestPoolMachine = PoolMachine.TestCase
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity: paging on == contiguous cache, exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_pages,host", [(24, 0), (10, 8)])
+def test_paged_streams_bit_identical_and_no_leak(kv_pages, host):
+    """Ample pool AND oversubscribed pool (admission defers, slots
+    refill as pages free): every greedy stream equals the contiguous
+    engine; every page is back on the free list at the end."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    reqs = _mk_requests(7, rng, eos=True)
+    ref = {r.rid: _solo(params, cfg, r) for r in reqs}
+    eng = Engine(params, cfg, batch_slots=4, cache_len=64,
+                 kv_pages=kv_pages, kv_page_len=8, kv_host_pages=host)
+    rng = np.random.default_rng(0)
+    done = eng.run(_mk_requests(7, rng, eos=True))
+    assert {r.rid: r.out_tokens for r in done} == ref
+    mem = eng.memory_stats()
+    assert mem.device_used == 0 and mem.host_used == 0, mem.as_dict()
+    eng.pool.alloc.check()
+
+
+def test_paged_bucketed_admission_bit_identical_and_bounded():
+    """Paging composes with prefill bucketing: fixed admission shapes
+    (jit cache ≤ len(buckets)) and streams equal to the plain engine."""
+    cfg, params = _setup()
+    buckets = (8, 16, 32, 64)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 64, size=(int(rng.integers(2, 60)),))
+               .astype(np.int32) for _ in range(20)]
+    mk = lambda: [Request(rid=i, prompt=p, max_new_tokens=2)
+                  for i, p in enumerate(prompts)]
+    plain = {r.rid: r.out_tokens for r in Engine(
+        params, cfg, batch_slots=2, cache_len=64).run(mk())}
+    eng = Engine(params, cfg, batch_slots=2, cache_len=64,
+                 buckets=buckets, kv_pages=16, kv_page_len=8)
+    shapes = set()
+    orig = eng._prefill
+
+    def counting(params_, toks, poss, data, dests):
+        shapes.add(tuple(toks.shape))
+        return orig(params_, toks, poss, data, dests)
+
+    eng._prefill = counting
+    done = eng.run(mk())
+    assert {r.rid: r.out_tokens for r in done} == plain
+    assert len(shapes) <= len(buckets), shapes
+    assert all(g == 2 and s in buckets for g, s in shapes), shapes
+
+
+def test_paged_int8_kv_bit_identical_to_contiguous_int8():
+    cfg, params = _setup(kv_quant=True)
+    rng = np.random.default_rng(2)
+    reqs = _mk_requests(4, rng)
+    ref = {r.rid: r.out_tokens for r in Engine(
+        params, cfg, batch_slots=2, cache_len=64).run(
+        [Request(rid=r.rid, prompt=r.prompt,
+                 max_new_tokens=r.max_new_tokens) for r in reqs])}
+    got = {r.rid: r.out_tokens for r in Engine(
+        params, cfg, batch_slots=2, cache_len=64, kv_pages=16,
+        kv_page_len=8).run(reqs)}
+    assert got == ref
+
+
+def test_paged_local_window_stack_bit_identical():
+    """gemma3-style local:global interleave: the paged pool forces a
+    UNIFORM ring capacity (local layers lose their min(window, C) cap);
+    the window mask must keep streams identical anyway."""
+    cfg, params = _setup("gemma3-4b")
+    assert cfg.sliding_window, "arch no longer exercises local layers"
+    rng = np.random.default_rng(3)
+    reqs = _mk_requests(4, rng, max_new=8)
+    ref = {r.rid: r.out_tokens for r in Engine(
+        params, cfg, batch_slots=2, cache_len=64).run(
+        [Request(rid=r.rid, prompt=r.prompt,
+                 max_new_tokens=r.max_new_tokens) for r in reqs])}
+    got = {r.rid: r.out_tokens for r in Engine(
+        params, cfg, batch_slots=2, cache_len=64, kv_pages=20,
+        kv_page_len=8).run(reqs)}
+    assert got == ref
+
+
+def test_forced_spill_fault_and_preempt_resume_bit_identical():
+    """The ISSUE's acceptance cycle: a batch request is preempted (page
+    unmap), its pages SPILL to host RAM when the interactive working
+    set needs the room, FAULT back on resume — both streams equal the
+    solo contiguous engine bit-for-bit."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    batch = Request(rid=0, prompt=rng.integers(0, 64, size=(18,))
+                    .astype(np.int32), max_new_tokens=14, slo="batch")
+    inter = Request(rid=1, prompt=rng.integers(0, 64, size=(40,))
+                    .astype(np.int32), max_new_tokens=3,
+                    slo="interactive", deadline=0.01)
+    ref = {r.rid: _solo(params, cfg, r) for r in (batch, inter)}
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode="kv", kv_pages=8,
+                              kv_page_len=8, kv_host_pages=8))
+    assert sched.submit(batch)
+    for _ in range(4):
+        sched.step()
+    assert sched.submit(inter)
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    st = sched.stats()
+    mem = st["per_rank"][0]["memory"]
+    assert {r.rid: r.out_tokens for r in done} == ref
+    assert st["preemptions"] >= 1
+    assert mem["spills"] >= 1 and mem["faults"] >= 1, mem
+    assert mem["device_used"] == 0 and mem["host_used"] == 0
+
+
+def test_drop_to_reprefill_when_host_pool_full_still_exact():
+    """No host pool: under pressure the preempted victim's pages are
+    DROPPED and it resumes by re-prefill — still bit-exact, with the
+    drop counted."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    batch = Request(rid=0, prompt=rng.integers(0, 64, size=(18,))
+                    .astype(np.int32), max_new_tokens=14, slo="batch")
+    inter = Request(rid=1, prompt=rng.integers(0, 64, size=(40,))
+                    .astype(np.int32), max_new_tokens=3,
+                    slo="interactive", deadline=0.01)
+    ref = {r.rid: _solo(params, cfg, r) for r in (batch, inter)}
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode="kv", kv_pages=8,
+                              kv_page_len=8, kv_host_pages=0))
+    assert sched.submit(batch)
+    for _ in range(4):
+        sched.step()
+    assert sched.submit(inter)
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    st = sched.stats()
+    mem = st["per_rank"][0]["memory"]
+    assert {r.rid: r.out_tokens for r in done} == ref
+    assert mem["drops"] >= 1 and mem["spills"] == 0, mem
+    assert mem["device_used"] == 0
+
+
+def test_preempt_keep_kv_false_frees_pages_immediately():
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    req = Request(rid=0, prompt=rng.integers(0, 64, size=(12,))
+                  .astype(np.int32), max_new_tokens=8)
+    ref = _solo(params, cfg, req)
+    eng = Engine(params, cfg, batch_slots=1, cache_len=64, kv_pages=8,
+                 kv_page_len=8)
+    eng.submit(req)
+    for _ in range(3):
+        eng.step()
+    victim = eng.preempt_slot(0, keep_kv=False)
+    assert eng.memory_stats().device_used == 0      # freed outright
+    eng.submit(victim)
+    done = []
+    while eng.has_work():
+        done.extend(eng.step())
+    assert done[0].out_tokens == ref
+    assert eng.stats["resumes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission consults pool headroom (scheduler co-op)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_capacity_consults_pool_headroom():
+    """A paged engine with free SLOTS but an exhausted POOL must report
+    zero absorbable capacity, so the scheduler's max_queue check sheds
+    instead of counting phantom free slots."""
+    cfg, params = _setup()
+    eng = Engine(params, cfg, batch_slots=4, cache_len=64, kv_pages=8,
+                 kv_page_len=8)
+    assert eng.admission_capacity() == 4            # empty pool: slots
+    rng = np.random.default_rng(8)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, 64, size=(60,))
+                       .astype(np.int32), max_new_tokens=4))
+    eng.step()                                      # 8/8 pages resident
+    assert eng.n_free() == 3
+    assert eng.admission_capacity() == 0            # no pages left
+
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=4, cache_len=64,
+                              max_queue=1, kv_pages=8, kv_page_len=8))
+    assert sched.submit(Request(
+        rid=0, prompt=rng.integers(0, 64, size=(60,)).astype(np.int32),
+        max_new_tokens=4))
+    sched.step()
+    # pool exhausted: only max_queue=1 waiter is absorbable despite 3
+    # free slots; the third submission sheds
+    assert sched.submit(Request(
+        rid=1, prompt=rng.integers(0, 64, size=(10,)).astype(np.int32),
+        max_new_tokens=2))
+    assert not sched.submit(Request(
+        rid=2, prompt=rng.integers(0, 64, size=(10,)).astype(np.int32),
+        max_new_tokens=2))
+    done = sched.run([])
+    assert sorted(r.rid for r in done) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Memory stress (slow): sustained churn through a tiny pool
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_memory_stress_churn_no_leaks_bit_identical():
+    """Sustained oversubscribed churn: 24 requests with random lengths,
+    budgets and EOS through 4 slots backed by a 12-page pool + host
+    spill, EDF + preemption on. Every stream must match the solo
+    engine; the watermark must hold after every step; the pool must
+    drain empty."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, 64, size=(int(
+                        rng.integers(4, 50)),)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 12)),
+                    eos_id=int(rng.integers(0, 64)),
+                    slo="interactive" if i % 3 == 0 else "batch",
+                    deadline=0.02 if i % 3 == 0 else 30.0)
+            for i in range(24)]
+    ref = {r.rid: _solo(params, cfg, r) for r in reqs}
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=4, cache_len=64,
+                              policy="edf", aging=0.01, preempt=True,
+                              kv_pages=12, kv_page_len=8,
+                              kv_host_pages=12))
+    for r in reqs:
+        assert sched.submit(r)
+    eng = sched.shards[0]
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+        mem = eng.memory_stats()
+        assert mem.device_used <= mem.watermark
+        eng.pool.alloc.check()
+    assert {r.rid: r.out_tokens for r in done} == ref
+    mem = eng.memory_stats()
+    assert mem.device_used == 0 and mem.host_used == 0

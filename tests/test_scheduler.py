@@ -412,6 +412,87 @@ def test_scheduler_streaming_matches_out_tokens():
         assert e.on_token is None
 
 
+def test_deadline_shed_improves_interactive_attainment():
+    """Deadline-aware admission shedding (ROADMAP): under overload the
+    'deadline' policy evicts the waiting BATCH request least likely to
+    meet its deadline instead of rejecting the newcomer, so a late
+    interactive burst is admitted and its SLO attainment beats FCFS
+    count-shedding at the same max_queue."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(12)
+    mk = lambda rid, slo, dl, new: Request(
+        rid=rid, prompt=rng.integers(0, 64, size=(6,)).astype(np.int32),
+        max_new_tokens=new, slo=slo, deadline=dl)
+
+    def attainment(shed):
+        sched = ShardedScheduler(
+            params, cfg, ranks=1,
+            sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                                  max_queue=3, shed=shed))
+        # batch flood fills the queue past the cap…
+        for i in range(5):
+            sched.submit(mk(i, "batch", 30.0, 8))
+        # …then the interactive burst arrives (generous deadline: an
+        # admitted interactive request always attains its SLO here, so
+        # attainment == admission under overload)
+        inter = [mk(10 + i, "interactive", 10.0, 2) for i in range(3)]
+        for r in inter:
+            sched.submit(r)
+        done = {r.rid for r in sched.run([])}
+        met = sum(1 for r in inter
+                  if r.rid in done and r.latency <= 10.0)
+        return met / len(inter), sched
+
+    fcfs_att, s0 = attainment("count")
+    edf_att, s1 = attainment("deadline")
+    assert fcfs_att == 0.0          # count-shed rejects the late burst
+    assert edf_att == 1.0, s1.stats()
+    assert s1.n_shed >= 3           # batch victims evicted instead
+    for r in s1.rejected:           # victims resolved, never stranded
+        assert r.status == "rejected" and r.slo == "batch"
+
+
+def test_revive_rank_rebuilds_dead_shard_and_serves_again():
+    """Engine-raise recovery (ROADMAP): a rank killed by an injected
+    fault is rebuilt by revive_rank — fresh caches, re-placed params —
+    re-enters routing, and serves bit-identical streams again."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(13)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6 + i,))
+                    .astype(np.int32), max_new_tokens=4)
+            for i in range(3)]
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=2, cache_len=64))
+    eng0 = sched.shards[0]
+    eng0._decode = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("injected rank death"))
+    sched.run(reqs[:1])
+    assert eng0.dead and sched.stats()["live_ranks"] == 0
+    # a submission while dead fails fast (no live shards)…
+    assert not sched.submit(reqs[1])
+    assert reqs[1].status == "failed"
+
+    revived = sched.revive_rank(0)
+    assert revived is sched.shards[0] and not revived.dead
+    assert sched.stats()["live_ranks"] == 1
+    assert sched.stats()["revived"] == 1
+    # …and the revived shard serves bit-identically
+    solo = _solo(params, cfg, reqs[2])
+    done = sched.run([reqs[2]])
+    assert len(done) == 1 and done[0].out_tokens == solo
+    assert revived.stats["admitted"] == 1
+
+
+def test_revive_rank_refuses_live_shard():
+    cfg, params = _setup()
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+    with pytest.raises(ValueError, match="alive"):
+        sched.revive_rank(0)
+
+
 def test_drain_baseline_takes_more_steps_than_continuous():
     """The drain-batch control: same slots, same requests, strictly more
     decode steps (slots idle while the batch drains) — the effect the

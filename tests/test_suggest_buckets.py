@@ -1,0 +1,87 @@
+"""Histogram-fitted prefill bucket tables (tools/suggest_buckets.py +
+the scheduler's prompt-length capture): the DP must be exactly optimal
+on small cases, beat the geometric default on skewed traffic, and
+round-trip through the scheduler's observed histogram."""
+import itertools
+import os
+import sys
+
+import numpy as np
+import jax
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+sys.path.insert(0, os.path.abspath(TOOLS))
+
+from suggest_buckets import pad_waste, suggest_buckets  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.distribution.sharding import prefill_bucket_table  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.serve.engine import Request  # noqa: E402
+from repro.serve.scheduler import SchedulerConfig, \
+    ShardedScheduler  # noqa: E402
+
+
+def test_fitted_table_beats_geometric_on_skewed_histogram():
+    """Chat-like skew: 80% of prompts at 9–12 tokens, a 100–120 tail.
+    The geometric table (64,128,256,512) pads the head to 64 every
+    time; the fitted table puts boundaries on the mass."""
+    hist = {9: 400, 10: 250, 11: 100, 12: 50,
+            100: 60, 110: 25, 120: 15}
+    cache_len, k = 512, 4
+    fitted = suggest_buckets(hist, k, cache_len)
+    geo = prefill_bucket_table(cache_len, k)
+    assert len(fitted) <= k
+    assert fitted[-1] == cache_len          # always covers the cache
+    assert fitted == tuple(sorted(fitted))
+    w_fit = pad_waste(hist, fitted, cache_len)
+    w_geo = pad_waste(hist, geo, cache_len)
+    assert w_fit < w_geo / 5, (fitted, w_fit, w_geo)
+
+
+def test_dp_is_exactly_optimal_vs_brute_force():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        lengths = sorted(rng.choice(np.arange(1, 30), size=5,
+                                    replace=False))
+        hist = {int(l): int(rng.integers(1, 50)) for l in lengths}
+        cache_len, k = 32, 3
+        got = suggest_buckets(hist, k, cache_len)
+        best = min(
+            pad_waste(hist, combo + (cache_len,), cache_len)
+            for n in range(0, k)
+            for combo in itertools.combinations(lengths, n))
+        assert pad_waste(hist, got, cache_len) == best, (hist, got)
+
+
+def test_degenerate_histograms():
+    assert suggest_buckets({}, 4, 128) == (128,)
+    assert suggest_buckets({7: 10}, 4, 128) == (7, 128)
+    # lengths beyond the cache clamp to it
+    assert suggest_buckets({500: 3}, 2, 128) == (128,)
+
+
+def test_scheduler_histogram_feeds_the_fit():
+    """The serving loop's observed histogram (captured on EVERY submit,
+    admitted or not) round-trips into a usable table."""
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64,
+                  vocab=64)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=2, cache_len=64))
+    rng = np.random.default_rng(1)
+    lens = [8] * 6 + [9] * 3 + [40]
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(n,))
+                    .astype(np.int32), max_new_tokens=2)
+            for i, n in enumerate(lens)]
+    sched.run(reqs)
+    hist = sched.prompt_length_histogram()
+    assert hist == {8: 6, 9: 3, 40: 1}
+    assert sched.stats()["prompt_lengths_seen"] == len(lens)
+    table = suggest_buckets(hist, 3, 64)
+    assert table[-1] == 64
+    # the head of the mass gets its own tight bucket
+    assert any(b in (8, 9) for b in table)
+    assert pad_waste(hist, table, 64) <= pad_waste(
+        hist, prefill_bucket_table(64, 3), 64)

@@ -1,0 +1,152 @@
+"""Fit a prefill bucket table to an observed prompt-length histogram.
+
+First half of ROADMAP's *continuous bucket tuning*: the serving
+scheduler records every submitted prompt's length
+(``ShardedScheduler.prompt_length_histogram()``); this tool fits a
+bucket table to that histogram by exact dynamic programming, minimizing
+the expected number of PAD tokens per prefill (each length pays
+``bucket(len) - len``). The geometric default table
+(``distribution.sharding.prefill_bucket_table``) halves down from
+``cache_len`` — fine for uniform traffic, wasteful under skew (e.g.
+chat traffic clustered at short lengths pads up to the next power of
+two every time). The fitted table places bucket boundaries on the
+observed mass instead.
+
+The top bucket is always ``cache_len`` so every cacheable prompt still
+finds a bucket (the engine falls back to exact shapes past the table —
+correct but one extra compile per length).
+
+Usage:
+  python tools/suggest_buckets.py hist.json --buckets 4 --cache-len 512
+  # hist.json: {"12": 830, "13": 411, ...}  (length -> count)
+
+Library use (tests, re-tuning loops):
+  from suggest_buckets import suggest_buckets, pad_waste
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterable, Tuple
+
+
+def _normalize(hist: Dict, cache_len: int) -> Iterable[Tuple[int, int]]:
+    """(length, count) pairs, lengths clamped to cache_len (longer
+    prompts pad to the full cache anyway), zero counts dropped."""
+    merged: Dict[int, int] = {}
+    for length, count in hist.items():
+        length, count = int(length), int(count)
+        if count <= 0 or length <= 0:
+            continue
+        length = min(length, cache_len)
+        merged[length] = merged.get(length, 0) + count
+    return sorted(merged.items())
+
+
+def pad_waste(hist: Dict, table: Tuple[int, ...], cache_len: int) -> int:
+    """Total pad tokens the table costs over the histogram (the
+    objective ``suggest_buckets`` minimizes)."""
+    buckets = sorted(table)
+    total = 0
+    for length, count in _normalize(hist, cache_len):
+        bucket = next((b for b in buckets if b >= length), length)
+        total += (bucket - length) * count
+    return total
+
+
+def suggest_buckets(hist: Dict, n_buckets: int,
+                    cache_len: int) -> Tuple[int, ...]:
+    """Optimal ≤ n_buckets table for the histogram (exact DP).
+
+    Candidate boundaries are the observed lengths plus ``cache_len``
+    (an optimal table never puts a boundary where no length ends);
+    ``dp[t][j]`` = minimum pad waste covering every length ≤ cand[j]
+    with t buckets, the t-th at cand[j]. O(n² · n_buckets) over the
+    distinct observed lengths — histogram-sized, not traffic-sized.
+    """
+    if n_buckets < 1:
+        raise ValueError(f"n_buckets must be >= 1, got {n_buckets}")
+    pairs = list(_normalize(hist, cache_len))
+    if not pairs:
+        return (int(cache_len),)
+    cands = [length for length, _ in pairs]
+    if cands[-1] != cache_len:
+        cands.append(cache_len)
+    m = len(cands)
+    counts = {length: c for length, c in pairs}
+
+    # prefix sums over candidate positions for O(1) segment waste
+    w = [counts.get(c, 0) for c in cands]            # count at cand
+    wl = [counts.get(c, 0) * c for c in cands]       # count·len at cand
+    pw = [0] * (m + 1)
+    pwl = [0] * (m + 1)
+    for i in range(m):
+        pw[i + 1] = pw[i] + w[i]
+        pwl[i + 1] = pwl[i] + wl[i]
+
+    def seg(i: int, j: int) -> int:
+        """Waste of lengths in cands(i..j] padded to cands[j]
+        (i, j are candidate indices; i = -1 means 'from the start')."""
+        lo, hi = i + 1, j + 1
+        return cands[j] * (pw[hi] - pw[lo]) - (pwl[hi] - pwl[lo])
+
+    INF = float("inf")
+    k = min(n_buckets, m)
+    dp = [[INF] * m for _ in range(k + 1)]
+    back = [[-2] * m for _ in range(k + 1)]
+    for j in range(m):
+        dp[1][j] = seg(-1, j)
+        back[1][j] = -1
+    for t in range(2, k + 1):
+        for j in range(t - 1, m):
+            for i in range(t - 2, j):
+                cand = dp[t - 1][i] + seg(i, j)
+                if cand < dp[t][j]:
+                    dp[t][j] = cand
+                    back[t][j] = i
+    best_t = min(range(1, k + 1), key=lambda t: dp[t][m - 1])
+    table = []
+    t, j = best_t, m - 1
+    while j >= 0:
+        table.append(cands[j])
+        j = back[t][j]
+        t -= 1
+    table = sorted(table)
+    if table[-1] != cache_len:      # top bucket always covers the cache
+        table[-1] = cache_len
+    return tuple(table)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Fit a prefill bucket table to a prompt-length "
+                    "histogram (JSON {length: count}; '-' = stdin)")
+    ap.add_argument("histogram", help="path to JSON histogram, or -")
+    ap.add_argument("--buckets", type=int, default=4,
+                    help="maximum table size (default 4)")
+    ap.add_argument("--cache-len", type=int, default=512,
+                    help="KV cache length — the forced top bucket")
+    args = ap.parse_args()
+    if args.histogram == "-":
+        hist = json.load(sys.stdin)
+    else:
+        with open(args.histogram, encoding="utf-8") as f:
+            hist = json.load(f)
+    table = suggest_buckets(hist, args.buckets, args.cache_len)
+    fitted = pad_waste(hist, table, args.cache_len)
+    from importlib import import_module
+    try:
+        shd = import_module("repro.distribution.sharding")
+        geo = shd.prefill_bucket_table(args.cache_len, args.buckets)
+        geo_waste = pad_waste(hist, geo, args.cache_len)
+        print(f"# geometric {geo}: {geo_waste} pad tokens; "
+              f"fitted: {fitted} pad tokens", file=sys.stderr)
+    except ImportError:
+        print(f"# fitted table: {fitted} pad tokens", file=sys.stderr)
+    print(",".join(str(b) for b in table))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
