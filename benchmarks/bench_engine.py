@@ -35,6 +35,13 @@ p50/p95 and per-class tokens/sec — the acceptance bar is
 interactive-class p95 strictly better under EDF with batch-class
 throughput within 10% of FCFS.
 
+The frontend-recovery section (DESIGN.md §14) drives the same fixed
+Poisson load through the fault-tolerant cluster frontend over 2 hosts
+with 0 vs 1 host chaos-killed mid-load — goodput and p50/p95 with a
+death absorbed by retry + exact resume — and times ``revive_host``
+(rank rebuild + fresh jit + replayed backlog + a probe request). The
+acceptance bar is the killed run completing every request.
+
 Standalone: PYTHONPATH=src python -m benchmarks.bench_engine
 writes BENCH_engine.json next to the repo root.
 """
@@ -476,6 +483,103 @@ def bench_engine_memory() -> List:
     return rows
 
 
+FE_REQ = 12
+FE_MAX_NEW = (2, 12, 4, 16, 6, 2, 10, 4)
+FE_KILL_STEP = 6                # host 0 dies this many ticks in
+
+
+def _fe_requests(vocab: int, n: int = FE_REQ,
+                 rid_base: int = 100) -> List[Request]:
+    rng = np.random.default_rng(23)
+    return [Request(rid=rid_base + i,
+                    prompt=rng.integers(0, vocab,
+                                        size=(LOAD_PROMPT_LEN,))
+                    .astype(np.int32),
+                    max_new_tokens=FE_MAX_NEW[i % len(FE_MAX_NEW)])
+            for i in range(n)]
+
+
+def bench_engine_recovery() -> List:
+    """Fault-tolerant frontend (DESIGN.md §14) at a FIXED offered load:
+    goodput (completed requests/s) and p50/p95 latency with 0 vs 1 of 2
+    hosts chaos-killed mid-load, then time-to-recover after
+    ``revive_host`` — rank rebuild + fresh jit + replayed backlog + a
+    probe request served end to end. Acceptance: the killed run still
+    completes EVERY request (bounded retry + exact-resume hand-off), so
+    a host death costs latency, not answers."""
+    from repro.serve.chaos import ChaosConfig, ChaosMonkey
+    from repro.serve.frontend import ClusterFrontend, FrontendConfig, \
+        make_local_hosts
+    from repro.serve.scheduler import SchedulerConfig
+
+    rows = []
+    print("\n== frontend recovery: fixed Poisson load, "
+          f"{FE_REQ} reqs over 2 hosts, 0 vs 1 killed ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    arrivals = list(np.random.default_rng(19).exponential(
+        LOAD_MEAN_ARRIVAL_S, size=FE_REQ).cumsum())
+
+    results = {}
+    fe = None
+    for mode in ("healthy", "kill1"):
+        hosts = make_local_hosts(
+            params0, cfg0, hosts=2,
+            sched=SchedulerConfig(slots_per_rank=LOAD_SLOTS,
+                                  cache_len=64))
+        for h in hosts:                 # compile every admission shape
+            _warm_scheduler(h.sched, cfg0.vocab_size)
+        if mode == "kill1":
+            hosts[0].chaos = ChaosMonkey(
+                ChaosConfig(kill_at_step={0: FE_KILL_STEP}))
+        fe = ClusterFrontend(hosts, FrontendConfig(
+            retries=2, backoff_base=0.001, backoff_cap=0.01))
+        reqs = _fe_requests(cfg0.vocab_size)
+        t0 = time.perf_counter()
+        done = fe.run(reqs, arrivals=arrivals)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        tok_s = toks / dt
+        goodput = len(done) / dt
+        p50, p95 = _pcts_ms(sorted(r.latency for r in done))
+        st = fe.stats()
+        results[mode] = dict(done=len(done), tok_s=tok_s, p95=p95)
+        print(f"  {mode:8s}: {goodput:6.1f} req/s {tok_s:7.1f} tok/s  "
+              f"p50={p50:6.0f}ms p95={p95:6.0f}ms "
+              f"({len(done)}/{FE_REQ} done, {st['retries']} retries, "
+              f"{st['dead']} dead host)")
+        rows.append((f"engine/frontend/recovery/{mode}", 1e6 / tok_s,
+                     f"tok_s={tok_s:.2f};goodput_rps={goodput:.2f};"
+                     f"p50_ms={p50:.1f};p95_ms={p95:.1f};"
+                     f"done={len(done)};failed={st['failed']};"
+                     f"retries={st['retries']};hosts=2;"
+                     f"dead={st['dead']};"
+                     f"kill_step={FE_KILL_STEP if mode == 'kill1' else -1}"))
+    # time-to-recover: the kill1 frontend still holds its dead host —
+    # revive it, replay whatever the outage failed, and serve a probe
+    # request end to end (includes rank rebuild + fresh jit compiles,
+    # the honest cost of bringing capacity back)
+    replayable = sum(1 for t in fe.trackers.values()
+                     if t.outcome == "failed" and t.replayable)
+    t0 = time.perf_counter()
+    fe.revive_host(0)
+    probe = _fe_requests(cfg0.vocab_size, n=1, rid_base=900)[0]
+    fe.submit(probe)
+    while fe.unresolved():
+        fe.step()
+    recover_s = time.perf_counter() - t0
+    fe.close()
+    ok = results["kill1"]["done"] == FE_REQ and probe.done
+    print(f"  revive host 0: {recover_s * 1e3:6.0f} ms to "
+          f"healthy-and-serving ({replayable} failures replayed) "
+          f"({'OK' if ok else 'REGRESSION: kill run lost requests!'})")
+    rows.append(("engine/frontend/recovery/revive", recover_s * 1e6,
+                 f"recover_ms={recover_s * 1e3:.1f};"
+                 f"replayed={replayable};probe_done={int(probe.done)};"
+                 f"kill1_done={results['kill1']['done']}"))
+    return rows
+
+
 def bench_engine() -> List:
     rows = []
     print("\n== serving engine (CPU; interpret-mode kernels) ==")
@@ -512,6 +616,7 @@ def bench_engine() -> List:
     rows.extend(bench_engine_load())
     rows.extend(bench_engine_qos())
     rows.extend(bench_engine_memory())
+    rows.extend(bench_engine_recovery())
     return rows
 
 

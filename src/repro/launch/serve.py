@@ -265,11 +265,55 @@ def main():
                     help="engine shards without a mesh (testing); with "
                          "--mesh the DP axis must agree (clear error "
                          "otherwise)")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="serve through the fault-tolerant cluster "
+                         "frontend (DESIGN.md §14) over N in-process "
+                         "hosts, each its own sharded scheduler: "
+                         "heartbeat health checks, bounded retries with "
+                         "backoff, watchdog, graceful drain")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="re-submissions after a host failure before a "
+                         "request fails for real (frontend only)")
+    ap.add_argument("--backoff", type=float, default=0.05,
+                    help="retry backoff base seconds: attempt k waits "
+                         "base*2^(k-1), capped, with seeded jitter")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request wall-clock watchdog seconds "
+                         "(default: none) — an overdue request is "
+                         "cancelled out of its host and failed")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="graceful-shutdown bound: drain stops "
+                         "admission and serves in-flight work at most "
+                         "this many seconds before cutting stragglers")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection into the "
+                         "frontend's hosts, e.g. "
+                         "'kill:0@12,raise:1@3,drop-hb:0@5x3,"
+                         "slow:1@0.02,seed:7' (serve/chaos.py grammar; "
+                         "requires --hosts)")
     args = ap.parse_args()
 
     # BEFORE any backend-initializing jax call: may set XLA_FLAGS
     mesh = parse_mesh(args.mesh)
     check_ranks(args.ranks, mesh)
+    if args.hosts is not None and args.hosts < 1:
+        raise SystemExit(f"--hosts must be >= 1, got {args.hosts}")
+    if args.hosts and mesh is not None:
+        raise SystemExit(
+            "--hosts serves in-process hosts without a mesh; drop "
+            "--mesh (per-host meshes are a multi-process deployment "
+            "concern — see tests/dist_worker.py frontend_host)")
+    if args.chaos and not args.hosts:
+        raise SystemExit("--chaos drives the cluster frontend's fault "
+                         "hooks; add --hosts N")
+    if args.chaos:
+        from repro.serve.chaos import parse_chaos_spec
+        try:
+            chaos_cfg = parse_chaos_spec(args.chaos)
+        except ValueError as e:
+            raise SystemExit(f"--chaos: {e}")
+    else:
+        chaos_cfg = None
     buckets = parse_buckets(args.buckets, args.cache_len)
     if not 0.0 < args.kv_watermark <= 1.0:
         raise SystemExit(
@@ -324,7 +368,59 @@ def main():
         print(f"  … streamed {n} tokens incrementally")
         return [r for r in reqs if r.done]
 
-    if args.scheduler:
+    if args.hosts:
+        from repro.serve.chaos import ChaosMonkey
+        from repro.serve.frontend import ClusterFrontend, \
+            FrontendConfig, make_local_hosts
+        from repro.serve.scheduler import SchedulerConfig
+        hosts = make_local_hosts(
+            params, cfg, hosts=args.hosts, ranks=args.ranks or 1,
+            chaos=ChaosMonkey(chaos_cfg) if chaos_cfg else None,
+            sched=SchedulerConfig(
+                slots_per_rank=args.slots_per_rank or args.slots,
+                cache_len=args.cache_len, max_queue=args.max_queue,
+                policy=args.admission, drain=args.drain,
+                aging=args.aging, preempt=args.preempt,
+                preempt_mode=args.preempt_mode, buckets=buckets,
+                shed=args.shed, kv_pages=args.kv_pages,
+                kv_page_len=args.kv_page_len,
+                kv_watermark=args.kv_watermark,
+                kv_host_pages=args.kv_host_pool))
+        fe = ClusterFrontend(hosts, FrontendConfig(
+            retries=args.retries, backoff_base=args.backoff,
+            request_timeout=args.timeout,
+            drain_timeout=args.drain_timeout))
+        if args.stream:
+            n_stream = [0]
+
+            def _tok(req, tok):
+                if n_stream[0] < 12:
+                    print(f"  stream: req {req.rid} += {tok}")
+                n_stream[0] += 1
+            fe.on_token = _tok
+        t0 = time.time()
+        done = fe.run(reqs)
+        drained, clean = fe.drain()     # bounded graceful shutdown
+        done += drained
+        dt = time.time() - t0
+        fe.close()
+        if args.stream:
+            print(f"  … streamed {n_stream[0]} tokens incrementally")
+        st = fe.stats()
+        print(f"frontend: {st['hosts']} host(s) "
+              f"({st['healthy']} healthy, {st['suspect']} suspect, "
+              f"{st['dead']} dead), {st['done']} done, "
+              f"{st['failed']} failed, {st['rejected']} rejected, "
+              f"{st['retries']} retries, "
+              f"{st['deduped_tokens']} deduped tokens, "
+              f"drain {'clean' if clean else 'cut stragglers'}")
+        for h_st in st["per_host"]:
+            print(f"  host {h_st['host']}: steps={h_st['steps']} "
+                  f"live_ranks={h_st.get('live_ranks', 0)}/"
+                  f"{h_st.get('ranks', 0)} "
+                  f"accepted={h_st.get('accepted', 0)} "
+                  f"requeued={h_st.get('requeued', 0)}")
+    elif args.scheduler:
         from repro.serve.scheduler import SchedulerConfig, \
             ShardedScheduler
         sched = ShardedScheduler(

@@ -130,6 +130,8 @@ class Request:                          # is a mutable in-flight object
     t_done: Optional[float] = None     # retired
     t_deadline: Optional[float] = None  # absolute monotonic deadline
     preemptions: int = 0            # times preempted back to the queue
+    requeues: int = 0               # times evacuated off a dead rank
+    attempts: int = 0               # frontend retry count (serve/frontend)
     # engine-internal resume state (set by preempt_slot)
     _resume_pos: Optional[int] = field(default=None, repr=False)
     _kv: Optional[object] = field(default=None, repr=False)
@@ -145,6 +147,20 @@ class Request:                          # is a mutable in-flight object
         """Admission-policy key: total tokens this request still needs
         (prompt prefill + remaining decode budget)."""
         return len(self.prompt) + self.max_new_tokens - len(self.out_tokens)
+
+    def mark_resumable(self):
+        """Arm the re-prefill resume path off the emitted-token snapshot
+        (``out_tokens`` IS the resumable state — every token the request
+        has streamed so far): the next admission re-prefills
+        ``prompt + out_tokens[:-1]`` and decode continues the stream
+        exactly where it stopped, with no token resampled. Any KV
+        snapshot is dropped (it may live on a dead rank's devices).
+        No-op for requests with nothing emitted yet — a fresh prefill is
+        already exact. Used when a request is moved across engines,
+        ranks, or hosts (scheduler requeue-on-failure, frontend retry)."""
+        self._kv = None
+        self._resume_pos = (len(self.prompt) + len(self.out_tokens) - 1
+                            if self.out_tokens else None)
 
 
 def _sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray
@@ -176,7 +192,8 @@ class Engine:
         self.stats = {"decode_steps": 0, "admitted": 0,
                       "prefill_tokens": 0, "generated_tokens": 0,
                       "continuous_refills": 0, "preemptions": 0,
-                      "resumes": 0, "failed": 0}
+                      "resumes": 0, "failed": 0, "requeued": 0,
+                      "cancelled": 0, "deaths": 0}
         self.mesh = mesh
         self.profile = profile
         if mesh is not None:
@@ -366,6 +383,18 @@ class Engine:
     def memory_stats(self):
         """Paged-KV pool accounting (None when KV is contiguous)."""
         return None if self.pool is None else self.pool.stats()
+
+    def route_headroom_tokens(self) -> Optional[int]:
+        """Page-pool residency headroom in TOKENS — how much new cache
+        this engine can allocate before the high-watermark policy starts
+        spilling cold pages to host RAM. The scheduler's spill-aware
+        routing steers traffic away from ranks whose headroom cannot
+        cover a request's prefill (they are mid-spill or about to be).
+        None for contiguous engines: no paging, no spill pressure."""
+        if self.pool is None:
+            return None
+        st = self.pool.stats()
+        return max(0, st.watermark - st.device_used) * self.pool.page_len
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None
@@ -746,26 +775,74 @@ class Engine:
             self.stats["memory"] = self.pool.stats().as_dict()
         return finished
 
-    # -- failure containment (DESIGN.md §12) ---------------------------
+    # -- failure containment (DESIGN.md §12/§14) -----------------------
+    def _release_slot(self, slot: int) -> Request:
+        """Detach the request occupying ``slot`` (pages/snapshot freed,
+        slot back to FREE) WITHOUT deciding its fate — the caller marks
+        it failed, requeues it, or cancels it."""
+        req = self.slot_req[slot]
+        assert req is not None, f"releasing free slot {slot}"
+        if self.pool is not None and self.pool.has_pages(req.rid):
+            self.pool.free(req.rid)
+        self.slot_req[slot] = None
+        return req
+
+    def evacuate_inflight(self) -> List[Request]:
+        """Pull every in-flight (slot-occupying) request off this engine
+        with its emitted-token snapshot armed for an exact re-prefill
+        resume elsewhere (:meth:`Request.mark_resumable`). Called by the
+        scheduler's requeue-on-failure path when this shard's step
+        raised: the evacuated requests re-route to live ranks and their
+        greedy streams continue bit-identically."""
+        evacuated = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self._release_slot(i)
+            req.mark_resumable()
+            evacuated.append(req)
+        return evacuated
+
     def fail_inflight(self, err) -> List[Request]:
         """Mark every in-flight (slot-occupying) request failed and free
-        its slot. Called by the scheduler when this shard's step raised:
-        only the requests that were mid-flight on the broken rank fail;
-        queued requests are re-routable by the caller."""
+        its slot. Called by the scheduler when this shard's step raised
+        and requeueing is off (or nowhere to requeue to): only the
+        requests that were mid-flight on the broken rank fail; queued
+        requests are re-routable by the caller."""
         failed = []
         now = time.monotonic()
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
+            self._release_slot(i)
             req.status = "failed"
             req.error = f"{type(err).__name__}: {err}"
             req.t_done = now
-            if self.pool is not None and self.pool.has_pages(req.rid):
-                self.pool.free(req.rid)
-            self.slot_req[i] = None
             self.stats["failed"] += 1
             failed.append(req)
         return failed
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Remove a request from this engine wherever it sits — waiting
+        in the queue or mid-decode in a slot — releasing its pages and
+        any KV snapshot. Returns the request (status untouched; the
+        caller decides what the cancellation means — watchdog timeout,
+        drain expiry, user abort), or None if ``rid`` is not here."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                if self.pool is not None and self.pool.has_pages(rid):
+                    self.pool.free(rid)
+                req._kv = None
+                self.stats["cancelled"] += 1
+                return req
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                self._release_slot(i)
+                req._kv = None
+                self.stats["cancelled"] += 1
+                return req
+        return None
 
     def run(self, requests: List[Request],
             on_token: Optional[Callable[[Request, int], None]] = None

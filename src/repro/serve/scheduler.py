@@ -130,6 +130,15 @@ class SchedulerConfig:
     # interactive, then smallest slack per unit of remaining work — so
     # interactive SLO attainment holds under overload
     shed: str = "count"
+    # --- failure recovery (DESIGN.md §14) -----------------------------
+    # a dead rank's IN-FLIGHT requests requeue to live ranks with their
+    # emitted-token snapshot armed for an exact re-prefill resume
+    # (False = the PR-4 terminal-fail behavior); max_requeues bounds how
+    # often one request may survive a rank death before it fails for
+    # real (a poison request that kills every rank it lands on must not
+    # take the whole tier down with it)
+    requeue_inflight: bool = True
+    max_requeues: int = 2
     # --- paged KV (DESIGN.md §13) -------------------------------------
     # device pages per rank engine (None = contiguous per-slot rings);
     # page length in tokens (None = tile-aligned default); high-
@@ -183,6 +192,7 @@ class ShardedScheduler:
         self.n_accepted = 0
         self.n_shed = 0                 # victims evicted by shed policy
         self.n_revived = 0
+        self.n_requeued = 0             # in-flight survivors of a rank death
         # observed prompt-length histogram (tools/suggest_buckets.py
         # fits a bucket table to this — ROADMAP: continuous bucket
         # tuning, first half)
@@ -206,14 +216,24 @@ class ShardedScheduler:
         """Engine-raise recovery (ROADMAP): rebuild a dead rank's engine
         shard — fresh caches/page pool on the same submesh, params
         re-placed — and re-admit it to the routing set. In-flight
-        requests the dead shard failed stay failed (already resolved);
-        new traffic routes to the revived shard immediately."""
+        requests the dead shard failed stay failed (already resolved) —
+        the frontend replays the retryable ones (DESIGN.md §14); new
+        traffic routes to the revived shard immediately. The revived
+        engine inherits the dead one's cumulative serving counters
+        (plus a bumped ``deaths`` count), so per-rank stats stay
+        continuous across the outage instead of resetting to zero."""
         old = self.shards[rank]
         if not old.dead:
             raise ValueError(f"rank {rank} is alive — refusing to "
                              f"rebuild a serving engine shard")
         assert not old.queue, "dead rank still holds queued requests"
-        self.shards[rank] = self._build_engine(rank)
+        eng = self._build_engine(rank)
+        # stats continuity: cumulative counters (incl. the death that
+        # took the shard down) carry over; the stale "memory" snapshot
+        # does not (the new pool reports its own)
+        eng.stats.update({k: v for k, v in old.stats.items()
+                          if isinstance(v, int)})
+        self.shards[rank] = eng
         self.n_revived += 1
         return self.shards[rank]
 
@@ -244,6 +264,28 @@ class ShardedScheduler:
     def has_work(self) -> bool:
         return any(e.has_work() for e in self._live())
 
+    def outstanding_tokens(self, slo: Optional[str] = None) -> int:
+        """Host-level load: total pending work across live ranks — the
+        cluster frontend's routing key (serve/frontend.py)."""
+        return sum(e.outstanding_tokens(slo) for e in self._live())
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Remove a request from whichever rank holds it (queued or
+        mid-decode), releasing its slot/pages. Status is left to the
+        caller — the frontend's watchdog marks it failed, a drain
+        hand-off requeues it elsewhere. None if no rank holds ``rid``."""
+        for e in self.shards:
+            req = e.cancel(rid)
+            if req is not None:
+                return req
+        return None
+
+    def set_on_token(self, fn: Optional[Callable[[Request, int], None]]):
+        """Install a streaming sink OUTSIDE run()/stream() — for callers
+        (the cluster frontend) that drive step() directly. The sink
+        survives rank revives."""
+        self._set_sink(fn)
+
     # -- QoS priorities ------------------------------------------------
     def _slo_target(self, req: Request) -> float:
         if req.deadline is not None:
@@ -272,13 +314,27 @@ class ShardedScheduler:
         return req.t_submit if req.t_submit is not None else now
 
     def _route(self, req: Request) -> Engine:
-        """Latency-aware least outstanding work (ties to lowest rank)."""
+        """Latency-aware least outstanding work (ties to lowest rank),
+        steered by page-pool residency: a paged rank whose headroom
+        below the spill watermark cannot cover this request's prefill
+        is mid-spill (or one admission away from it) — admitting there
+        buys a host-RAM round-trip per cold page, so such ranks lose to
+        ANY rank with headroom regardless of queue depth (ROADMAP:
+        spill-aware routing). Contiguous ranks have no spill pressure
+        and always count as having headroom."""
         live = self._live()
+        need = len(req.prompt) + max(0, len(req.out_tokens) - 1)
+
+        def pressed(e: Engine) -> int:
+            h = e.route_headroom_tokens()
+            return 0 if h is None or h >= need else 1
+
         if req.slo == "interactive":
             return min(live, key=lambda e: (
-                e.outstanding_tokens("interactive"),
+                pressed(e), e.outstanding_tokens("interactive"),
                 e.outstanding_tokens(), e.rank))
-        return min(live, key=lambda e: (e.outstanding_tokens(), e.rank))
+        return min(live, key=lambda e: (pressed(e),
+                                        e.outstanding_tokens(), e.rank))
 
     def submit(self, req: Request) -> bool:
         """Admission control + routing. False = rejected (queue full or
@@ -374,17 +430,44 @@ class ShardedScheduler:
                 slot, keep_kv=self.sched.preempt_mode == "kv"))
 
     # -- failure containment -------------------------------------------
+    def _fail(self, req: Request, error: str):
+        req.status = "failed"
+        req.error = error
+        req.t_done = time.monotonic()
+        req._kv = None                  # release any snapshot memory
+        self.failed.append(req)
+
     def _on_rank_failure(self, eng: Engine, err: BaseException
                          ) -> List[Request]:
-        """Contain a raising shard: fail ONLY its in-flight requests,
-        re-route its queued (not-yet-started) requests to live ranks.
-        Returns requests that had already COMPLETED at admission inside
-        the raising step — they are done, not casualties."""
+        """Contain a raising shard. Its QUEUED (not-yet-started)
+        requests re-route to live ranks; its IN-FLIGHT requests requeue
+        there too with an exact re-prefill resume armed
+        (``requeue_inflight``, DESIGN.md §14 — a host death becomes a
+        latency blip, not a terminal error), unless a request has
+        already survived ``max_requeues`` rank deaths (poison
+        containment) or requeueing is disabled — those fail terminally
+        with the error attached. Returns requests that had already
+        COMPLETED at admission inside the raising step — they are done,
+        not casualties."""
         eng.dead = True
+        eng.stats["deaths"] += 1
         done_at_admission = list(eng._finished_at_admission)
         eng._finished_at_admission = []
-        self.failed.extend(eng.fail_inflight(err))
         requeue, eng.queue = list(eng.queue), []
+        if self.sched.requeue_inflight:
+            for req in eng.evacuate_inflight():
+                req.requeues += 1
+                if req.requeues <= self.sched.max_requeues:
+                    self.n_requeued += 1
+                    requeue.append(req)
+                else:
+                    self._fail(req, f"rank {eng.rank} died "
+                               f"({type(err).__name__}: {err}); "
+                               f"{self.sched.max_requeues} requeue(s) "
+                               "exhausted")
+                    eng.stats["failed"] += 1
+        else:
+            self.failed.extend(eng.fail_inflight(err))
         live = self._live()
         for req in requeue:
             if live:
@@ -394,12 +477,9 @@ class ShardedScheduler:
                 req._kv = None
                 self._route(req).submit(req)
             else:
-                req.status = "failed"
-                req.error = (f"rank {eng.rank} died "
-                             f"({type(err).__name__}: {err}); "
-                             "no live shards to re-route to")
-                req._kv = None          # release any snapshot memory
-                self.failed.append(req)
+                self._fail(req, f"rank {eng.rank} died "
+                           f"({type(err).__name__}: {err}); "
+                           "no live shards to re-route to")
         return done_at_admission
 
     def step(self) -> List[Request]:
@@ -512,6 +592,7 @@ class ShardedScheduler:
                 d["memory"] = mem.as_dict()
             return d
 
+        headrooms = [e.route_headroom_tokens() for e in self._live()]
         return {
             "ranks": self.ranks,
             "live_ranks": len(self._live()),
@@ -520,9 +601,16 @@ class ShardedScheduler:
             "rejected": len(self.rejected),
             "shed": self.n_shed,
             "revived": self.n_revived,
+            "requeued": self.n_requeued,
             "failed": len(self.failed),
             "prompt_lengths_seen": sum(self.prompt_hist.values()),
             "preemptions": sum(e.stats["preemptions"]
                                for e in self.shards),
+            # host-level aggregates the cluster frontend routes on
+            "outstanding_tokens": self.outstanding_tokens(),
+            "inflight": sum(e.B - e.n_free() for e in self._live()),
+            "headroom_tokens": (None if all(h is None for h in headrooms)
+                                else sum(h for h in headrooms
+                                         if h is not None)),
             "per_rank": [rank_stats(e) for e in self.shards],
         }

@@ -1,0 +1,56 @@
+"""Shared pytest configuration: per-test wall-clock enforcement.
+
+CI installs ``pytest-timeout``, which owns the ``timeout`` ini key in
+pytest.ini (a hung drain or wedged chaos worker must never stall a
+whole job). Environments without the plugin get the same cap from the
+SIGALRM fallback below — main-thread alarm, POSIX only — so the
+guarantee does not silently depend on an optional dependency."""
+import signal
+
+import pytest
+
+
+def _has_timeout_plugin(config) -> bool:
+    pm = config.pluginmanager
+    return pm.hasplugin("timeout") or pm.hasplugin("pytest_timeout")
+
+
+def pytest_addoption(parser):
+    # claim the ini key only when pytest-timeout has not already done
+    # so (double registration raises)
+    try:
+        parser.addini("timeout", "per-test timeout in seconds "
+                      "(SIGALRM fallback when pytest-timeout is absent)")
+    except ValueError:
+        pass
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    if _has_timeout_plugin(item.config) \
+            or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    try:
+        limit = float(item.config.getini("timeout") or 0)
+    except (TypeError, ValueError):
+        limit = 0.0
+    mark = item.get_closest_marker("timeout")
+    if mark is not None and mark.args:
+        limit = float(mark.args[0])
+    if limit <= 0:
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded {limit:.0f}s "
+            "(tests/conftest.py SIGALRM fallback)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)

@@ -443,5 +443,79 @@ def mode_paged_mesh():
         streams_paged={str(k): v for k, v in s_paged.items()})
 
 
+def mode_frontend_host():
+    """Cluster-frontend subprocess host (DESIGN.md §14): one
+    single-process ShardedScheduler driven over a newline-JSON protocol
+    — commands on stdin (``ping``/``submit``/``step``/``cancel``/
+    ``exit``), ``EV {json}`` events on stdout (``ready``/``pong``/
+    ``submitted``/``tok``/``done``/``failed``/``stepped``/
+    ``cancelled``). ``serve.frontend.SubprocessHost`` is the parent
+    side; tests ``kill -9`` this process mid-load to prove the
+    frontend's retry/resume guarantees against a real OS-level death.
+    ``sys.argv[2]`` (optional) is a JSON dict of model/scheduler knobs.
+    Token events carry the GLOBAL output index (resume prefixes
+    included), so the parent can dedup replays exactly."""
+    from repro.configs import get_config, reduced
+    from repro.models import lm
+    from repro.serve.engine import Request
+    from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+
+    spec = json.loads(sys.argv[2]) if len(sys.argv) > 2 else {}
+    cfg = reduced(get_config("qwen3-32b"),
+                  layers=spec.get("layers", 2),
+                  d_model=spec.get("d_model", 64),
+                  vocab=spec.get("vocab", 64))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    # same 3x amplification as the serving tests: unit-scale random
+    # init greedy-decodes into a constant stream
+    params = jax.tree.map(lambda a: a * 3.0, params)
+    sched = ShardedScheduler(
+        params, cfg, ranks=spec.get("ranks", 1),
+        sched=SchedulerConfig(slots_per_rank=spec.get("slots", 2),
+                              cache_len=spec.get("cache_len", 64),
+                              rng_seed=spec.get("seed", 0)))
+
+    def ev(**kw):
+        print("EV " + json.dumps(kw), flush=True)
+
+    sched.set_on_token(lambda req, tok: ev(
+        ev="tok", rid=req.rid, i=len(req.out_tokens) - 1, tok=int(tok)))
+    ev(ev="ready")
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        msg = json.loads(line)
+        cmd = msg["cmd"]
+        if cmd == "ping":
+            ev(ev="pong")
+        elif cmd == "submit":
+            req = Request(
+                rid=msg["rid"],
+                prompt=np.asarray(msg["prompt"], np.int32),
+                max_new_tokens=msg["max_new"],
+                temperature=msg.get("temperature", 0.0),
+                eos_id=msg.get("eos"), slo=msg.get("slo", "batch"),
+                out_tokens=list(msg.get("resume") or []))
+            if req.out_tokens:
+                req.mark_resumable()   # exact re-prefill continuation
+            ok = sched.submit(req)
+            ev(ev="submitted", rid=req.rid, ok=bool(ok),
+               status=req.status)
+        elif cmd == "step":
+            for r in sched.step():
+                ev(ev="done", rid=r.rid)
+            for r in sched.failed:
+                ev(ev="failed", rid=r.rid,
+                   error=r.error or "rank failure")
+            sched.failed[:] = []
+            ev(ev="stepped")
+        elif cmd == "cancel":
+            sched.cancel(msg["rid"])
+            ev(ev="cancelled", rid=msg["rid"])
+        elif cmd == "exit":
+            break
+
+
 if __name__ == "__main__":
     globals()[f"mode_{sys.argv[1]}"]()

@@ -1,0 +1,379 @@
+"""Fault-tolerant cluster frontend (DESIGN.md §14): heartbeat health
+ladder, idempotent retry with backoff after in-process and kill -9 host
+deaths (greedy streams bit-identical to an undisturbed single-host
+run, zero duplicate-streamed tokens), watchdog timeouts, graceful
+drain, revive + replay, and a seeded/property chaos harness over
+random kill/revive schedules."""
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serve.chaos import ChaosConfig, ChaosMonkey, parse_chaos_spec
+from repro.serve.engine import Engine, Request
+from repro.serve.frontend import ClusterFrontend, FrontendConfig, \
+    SubprocessHost, make_local_hosts
+from repro.serve.scheduler import SchedulerConfig
+
+KEY = jax.random.PRNGKey(0)
+SCHED = SchedulerConfig(slots_per_rank=2, cache_len=64)
+WORKER = os.path.join(os.path.dirname(__file__), "dist_worker.py")
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Shared model + per-request solo reference streams (the
+    bit-identity oracle: one request alone on one undisturbed
+    single-batch engine)."""
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64)
+    params = lm.init_params(KEY, cfg)
+    params = jax.tree.map(lambda a: a * 3.0, params)   # see test_scheduler
+    rng = np.random.default_rng(0)
+    specs = [(rng.integers(0, 64, size=(5 + 3 * i,)).astype(np.int32),
+              4 + (3 * i) % 5) for i in range(8)]
+    solo_eng = Engine(params, cfg, batch_slots=1, cache_len=64)
+    solo = {i: solo_eng.run([Request(rid=i, prompt=p, max_new_tokens=m)]
+                            )[0].out_tokens
+            for i, (p, m) in enumerate(specs)}
+    return cfg, params, specs, solo
+
+
+def _mk(specs, idx=None, rid_base=0):
+    idx = range(len(specs)) if idx is None else idx
+    return [Request(rid=rid_base + i, prompt=specs[i][0],
+                    max_new_tokens=specs[i][1]) for i in idx]
+
+
+def _collector(delivered):
+    return lambda req, tok: delivered.setdefault(req.rid, []).append(tok)
+
+
+# ----------------------------------------------------------------------
+# chaos harness itself
+# ----------------------------------------------------------------------
+def test_parse_chaos_spec_grammar():
+    cfg = parse_chaos_spec("kill:0@12, raise:1@3,drop-hb:0@5x3,"
+                           "slow:1@0.02,seed:7")
+    assert cfg.kill_at_step == {0: 12}
+    assert cfg.raise_in_decode == {1: 3}
+    assert cfg.drop_heartbeat == {0: (5, 3)}
+    assert cfg.slow_host == {1: 0.02}
+    assert cfg.seed == 7
+    assert parse_chaos_spec("drop-hb:2@4").drop_heartbeat == {2: (4, -1)}
+    assert parse_chaos_spec("").kill_at_step == {}
+    with pytest.raises(ValueError, match="grammar"):
+        parse_chaos_spec("explode:0@1")
+    with pytest.raises(ValueError, match="grammar"):
+        parse_chaos_spec("kill:0@soon")
+
+
+def test_chaos_monkey_hooks_fire_deterministically():
+    m = ChaosMonkey(ChaosConfig(seed=3, kill_at_step={0: 5},
+                                raise_in_decode={1: 2},
+                                drop_heartbeat={0: (3, 2)},
+                                slow_host={1: 0.5}))
+    assert not m.kill_due(0, 4) and not m.kill_due(1, 99)
+    assert m.kill_due(0, 5)
+    assert not m.kill_due(0, 6)                 # one-shot
+    assert m.decode_raise_due(1, 7)             # late host still raises
+    assert not m.decode_raise_due(1, 8)
+    assert [m.heartbeat_dropped(0, s) for s in range(1, 7)] == \
+        [False, False, True, True, False, False]
+    assert m.delay_s(1) == 0.5 and m.delay_s(0) == 0.0
+    # the seeded RNG is reproducible schedule-wide
+    assert ChaosMonkey(ChaosConfig(seed=3)).rng.random() == \
+        ChaosMonkey(ChaosConfig(seed=3)).rng.random()
+
+
+# ----------------------------------------------------------------------
+# host death -> retry -> exact resume
+# ----------------------------------------------------------------------
+def test_kill_host_mid_load_bit_identical(setup):
+    """The tentpole acceptance (in-process half): a host hard-dies
+    mid-load; every request resolves, no token streams twice, and every
+    greedy stream — including the ones resumed on the surviving host —
+    is bit-identical to the undisturbed solo run."""
+    cfg, params, specs, solo = setup
+    chaos = ChaosMonkey(ChaosConfig(kill_at_step={0: 3}))
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED,
+                             chaos=chaos)
+    delivered = {}
+    fe = ClusterFrontend(
+        hosts, FrontendConfig(retries=2, backoff_base=0.001, rng_seed=1),
+        on_token=_collector(delivered))
+    reqs = _mk(specs)
+    completed = fe.run(reqs)
+    assert hosts[0].killed and fe._state(0) == "dead"
+    assert not fe.failed and not fe.rejected
+    assert {r.rid: r.out_tokens for r in completed} == solo
+    assert delivered == solo            # exactly once, in order
+    assert fe.n_retries >= 1
+    st = fe.stats()
+    assert st["dead"] == 1 and st["done"] == len(reqs)
+    assert st["unresolved"] == 0
+
+
+def test_step_failure_escalates_and_retries_elsewhere(setup):
+    """A decode raise that kills a single-rank host's only shard is a
+    HOST-level failure (no sibling rank to requeue to): the scheduler's
+    terminal failures surface through the host's step, and the frontend
+    re-submits them to the other host with the stream resuming
+    exactly."""
+    cfg, params, specs, solo = setup
+    chaos = ChaosMonkey(ChaosConfig(raise_in_decode={0: 2}))
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED,
+                             chaos=chaos)
+    delivered = {}
+    fe = ClusterFrontend(
+        hosts, FrontendConfig(retries=2, backoff_base=0.001),
+        on_token=_collector(delivered))
+    completed = fe.run(_mk(specs, range(6)))
+    assert {r.rid: r.out_tokens for r in completed} == \
+        {i: solo[i] for i in range(6)}
+    assert delivered == {i: solo[i] for i in range(6)}
+    assert not fe.failed and fe.n_retries >= 1
+    assert hosts[0].sched.shards[0].dead      # the rank really died
+    assert fe._state(0) == "dead"
+
+
+def test_suspect_host_recovers_without_losing_its_work(setup):
+    """Dropped heartbeats below ``dead_after`` make a host suspect (no
+    new routing) but never evacuate it: it keeps serving what it holds,
+    answers again, and returns to healthy — zero retries burned."""
+    cfg, params, specs, solo = setup
+    chaos = ChaosMonkey(ChaosConfig(drop_heartbeat={0: (2, 2)}))
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED,
+                             chaos=chaos)
+    fe = ClusterFrontend(hosts, FrontendConfig(suspect_after=1,
+                                               dead_after=3))
+    states = []
+    completed = fe.run(_mk(specs, range(6)),
+                       on_tick=lambda t: states.append(fe._state(0)))
+    assert {r.rid: r.out_tokens for r in completed} == \
+        {i: solo[i] for i in range(6)}
+    assert "suspect" in states and "dead" not in states
+    assert fe._state(0) == "healthy"
+    assert fe.n_retries == 0
+    assert hosts[0].sched.stats()["accepted"] > 0   # it did real work
+
+
+def test_watchdog_fails_hung_request_without_stalling_others(setup):
+    """A request that cannot finish inside its wall-clock budget (its
+    host is a chaos straggler) is cancelled out of its slot and failed;
+    requests on the other host complete bit-identically and the loop
+    never wedges."""
+    cfg, params, specs, solo = setup
+    # a (mild) straggler host exercises the slow-host chaos hook; the
+    # hang itself comes from a decode budget no wall clock can cover
+    chaos = ChaosMonkey(ChaosConfig(slow_host={0: 0.002}))
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED,
+                             chaos=chaos)
+    rng = np.random.default_rng(9)
+    hung = Request(rid=100,
+                   prompt=rng.integers(0, 64, size=(8,)).astype(np.int32),
+                   max_new_tokens=10_000)
+    # the timeout must outlast jit warm-up (which counts against every
+    # request's clock) but cut the hung request long before its budget
+    fe = ClusterFrontend(hosts, FrontendConfig(request_timeout=8.0,
+                                               retries=1,
+                                               backoff_base=0.001))
+    # hung first: it routes to (empty) host 0, whose huge outstanding
+    # cost then steers everything else to host 1
+    completed = fe.run([hung] + _mk(specs, range(4)))
+    assert {r.rid: r.out_tokens for r in completed} == \
+        {i: solo[i] for i in range(4)}
+    assert fe.failed == [hung]
+    assert "watchdog" in hung.error and hung.status == "failed"
+    assert not fe.trackers[100].replayable    # a revive must not redo it
+    assert 0 < len(hung.out_tokens) < 10_000  # genuinely cut mid-decode
+    assert hosts[1].sched.stats()["accepted"] == 4
+    assert not hosts[0].sched.has_work()      # cancel freed the slot
+
+
+def test_graceful_drain_under_load_and_expiry(setup):
+    cfg, params, specs, solo = setup
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED)
+    fe = ClusterFrontend(hosts, FrontendConfig(drain_timeout=120.0))
+    reqs = _mk(specs)
+    for r in reqs:
+        assert fe.submit(r)
+    fe.step()
+    fe.step()                           # work genuinely in flight
+    completed, clean = fe.drain()
+    assert clean and not fe.unresolved()
+    assert {r.rid: r.out_tokens for r in fe.done} == solo
+    late = Request(rid=99, prompt=specs[0][0], max_new_tokens=4)
+    assert not fe.submit(late)          # admission is closed
+    assert late.status == "rejected" and late in fe.rejected
+
+    # expiry: a deadline of 0 cuts everything still unresolved — each
+    # request still resolves exactly once, cancelled out of its host
+    fe2 = ClusterFrontend(hosts, FrontendConfig())
+    reqs2 = _mk(specs, range(4), rid_base=200)
+    for r in reqs2:
+        assert fe2.submit(r)
+    fe2.step()
+    completed2, clean2 = fe2.drain(timeout=0.0)
+    assert not clean2 and not fe2.unresolved()
+    assert len(fe2.done) + len(fe2.failed) == 4
+    assert all("drain timeout" in r.error for r in fe2.failed)
+    assert not hosts[0].sched.has_work() and not hosts[1].sched.has_work()
+
+
+def test_revive_host_replays_retryable_failures(setup):
+    """Total outage: the only host's only rank dies, every request
+    fails retryably; ``revive_host`` rebuilds the rank (stats
+    continuous across the outage) and replays the failures — streams
+    complete bit-identically to the undisturbed run."""
+    cfg, params, specs, solo = setup
+    chaos = ChaosMonkey(ChaosConfig(raise_in_decode={0: 2}))
+    hosts = make_local_hosts(params, cfg, hosts=1, sched=SCHED,
+                             chaos=chaos)
+    delivered = {}
+    fe = ClusterFrontend(
+        hosts, FrontendConfig(retries=1, backoff_base=0.001),
+        on_token=_collector(delivered))
+    completed = fe.run(_mk(specs, range(4)))
+    assert not completed
+    assert len(fe.failed) == 4
+    assert all(fe.trackers[r.rid].replayable for r in fe.failed)
+    assert fe._state(0) == "dead"
+
+    fe.revive_host(0)
+    assert fe._state(0) == "healthy" and not fe.failed
+    eng = hosts[0].sched.shards[0]
+    assert not eng.dead and eng.stats["deaths"] == 1    # carried over
+    completed = fe.run([])              # serve the replayed backlog
+    assert {r.rid: r.out_tokens for r in completed} == \
+        {i: solo[i] for i in range(4)}
+    assert delivered == {i: solo[i] for i in range(4)}  # no index twice
+    assert eng.stats["admitted"] >= 4
+    assert fe.stats()["done"] == 4 and fe.stats()["failed"] == 0
+
+
+# ----------------------------------------------------------------------
+# property harness: random kill/revive schedules
+# ----------------------------------------------------------------------
+def _run_schedule(setup, schedule, n_reqs=5):
+    """Drive a frontend under a {tick: [(op, host), ...]} schedule and
+    assert the two global invariants: every request resolves exactly
+    once, and no token index is ever streamed twice (delivered streams
+    are exact prefixes of the solo oracle)."""
+    cfg, params, specs, solo = setup
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED)
+    delivered = {}
+    fe = ClusterFrontend(
+        hosts, FrontendConfig(retries=3, backoff_base=0.001, rng_seed=7),
+        on_token=_collector(delivered))
+
+    def on_tick(t):
+        for op, h in schedule.get(t, []):
+            if op == "kill":
+                fe.hosts[h].killed = True
+            elif op == "revive" and fe._state(h) == "dead":
+                fe.revive_host(h)
+
+    fe.run(_mk(specs, range(n_reqs)), on_tick=on_tick)
+    # exactly-once resolution
+    resolved = fe.done + fe.failed + fe.rejected
+    assert len(resolved) == n_reqs
+    assert {r.rid for r in resolved} == set(range(n_reqs))
+    assert all(t.outcome in ("done", "failed", "rejected")
+               for t in fe.trackers.values())
+    # exactly-once delivery, bit-exact against the solo oracle
+    for rid, toks in delivered.items():
+        assert toks == solo[rid][:len(toks)]
+    for r in fe.done:
+        assert r.out_tokens == solo[r.rid]
+        assert delivered[r.rid] == solo[r.rid]
+    for r in fe.failed:
+        assert r.error
+    return fe
+
+
+def test_chaos_schedules_fixed_twin(setup):
+    """Always-on twin of the hypothesis sweep: one plain kill, and a
+    kill/revive/kill sequence that ends with only the revived host."""
+    fe = _run_schedule(setup, {2: [("kill", 0)]})
+    assert fe.n_retries >= 1 and not fe.failed
+    fe = _run_schedule(setup, {1: [("kill", 1)], 4: [("revive", 1)],
+                               6: [("kill", 0)]})
+    assert fe.n_retries >= 1 and not fe.failed
+
+
+@pytest.mark.slow
+def test_chaos_schedules_property(setup):
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.lists(st.tuples(st.integers(0, 10),
+                              st.sampled_from(["kill", "revive"]),
+                              st.integers(0, 1)), max_size=4))
+    def inner(ops):
+        schedule = {}
+        for tick, op, host in ops:
+            schedule.setdefault(tick, []).append((op, host))
+        _run_schedule(setup, schedule, n_reqs=4)
+
+    inner()
+
+
+# ----------------------------------------------------------------------
+# subprocess hosts: real kill -9
+# ----------------------------------------------------------------------
+def _worker_cmd(seed):
+    return [sys.executable, WORKER, "frontend_host",
+            json.dumps({"seed": seed})]
+
+
+@pytest.mark.slow
+def test_kill9_subprocess_host_mid_load(setup):
+    """The tentpole acceptance (OS half): SIGKILL a real worker process
+    mid-load. Reference = the same worker stack, one undisturbed host.
+    Every request resolves, streams and per-token delivery are
+    bit-identical, nothing double-streams."""
+    cfg, params, specs, solo = setup
+    ref_fe = ClusterFrontend([SubprocessHost(0, _worker_cmd(0))],
+                             FrontendConfig())
+    ref_done = ref_fe.run(_mk(specs, range(6)))
+    ref = {r.rid: r.out_tokens for r in ref_done}
+    ref_fe.close()
+    assert len(ref) == 6
+
+    hosts = [SubprocessHost(0, _worker_cmd(0)),
+             SubprocessHost(1, _worker_cmd(1))]
+    delivered = {}
+    fe = ClusterFrontend(
+        hosts, FrontendConfig(retries=2, backoff_base=0.001),
+        on_token=_collector(delivered))
+    killed = []
+
+    def on_tick(t):
+        if t == 3 and not killed:
+            # the victim must actually hold in-flight work (mid-load)
+            assert any(tr.host_id == 0 for tr in fe.unresolved())
+            hosts[0].kill()
+            killed.append(t)
+
+    try:
+        completed = fe.run(_mk(specs, range(6)), on_tick=on_tick)
+    finally:
+        fe.close()
+    got = {r.rid: r.out_tokens for r in completed}
+    assert killed and not hosts[0].alive and fe._state(0) == "dead"
+    assert got == ref
+    assert delivered == ref             # zero duplicate-streamed tokens
+    assert not fe.failed and not fe.rejected
+    assert fe.n_retries >= 1
+    # the in-process oracle and the worker stack agree bit-for-bit
+    assert got == {i: solo[i] for i in range(6)}

@@ -230,11 +230,60 @@ def test_edf_orders_by_deadline_and_aging_prevents_starvation():
     assert completion_order(aging=1e9) == [0, 1, 2]
 
 
-def test_rank_failure_contains_to_inflight_requests():
-    """Fault injection: an engine shard raising mid-step fails ONLY its
-    in-flight requests (status + error surfaced on the Request), its
-    queued requests re-route to the surviving rank, and the serving
-    loop terminates (no deadlock on the admission queue)."""
+def _faulty_decode(eng, after=3, msg="injected shard fault"):
+    """Replace eng._decode with one that raises from the ``after``-th
+    call on (the shard dies mid-load, not at startup)."""
+    calls = {"n": 0}
+    orig = eng._decode
+
+    def faulty(*a, **k):
+        calls["n"] += 1
+        if calls["n"] >= after:
+            raise RuntimeError(msg)
+        return orig(*a, **k)
+
+    eng._decode = faulty
+
+
+def test_rank_failure_requeues_inflight_bit_identical():
+    """Requeue-on-failure (DESIGN.md §14): an engine shard raising
+    mid-step evacuates its IN-FLIGHT requests to the surviving rank
+    with an exact re-prefill resume armed on their emitted-token
+    snapshot — every request completes (nothing terminally fails) and
+    every greedy stream, including the mid-decode casualties', is
+    bit-identical to the solo single-batch engine."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6,))
+                    .astype(np.int32), max_new_tokens=6)
+            for i in range(6)]
+    solo = {r.rid: _solo(params, cfg, r) for r in reqs}
+    sched = ShardedScheduler(
+        params, cfg, ranks=2,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+    eng0 = sched.shards[0]
+    _faulty_decode(eng0)
+    done = sched.run(reqs)
+
+    st = sched.stats()
+    assert st["live_ranks"] == 1 and eng0.dead
+    assert st["requeued"] >= 1      # an in-flight request was evacuated
+    assert not sched.failed         # …and nothing failed terminally
+    assert len(done) == len(reqs)
+    assert {r.rid: r.out_tokens for r in done} == solo
+    assert all(r.status == "done" for r in reqs)
+    assert not eng0.queue           # dead rank's queue was re-routed
+    assert max(r.requeues for r in reqs) >= 1
+    # the survivor took over and actually served traffic
+    assert sched.shards[1].stats["admitted"] >= len(done)
+
+
+def test_rank_failure_terminal_without_requeue():
+    """requeue_inflight=False keeps the PR-4 containment: a shard
+    raising mid-step fails ONLY its in-flight requests (status + error
+    surfaced on the Request), its queued requests re-route to the
+    surviving rank, and the serving loop terminates (no deadlock on
+    the admission queue)."""
     cfg, params = _setup()
     rng = np.random.default_rng(5)
     reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6,))
@@ -242,18 +291,10 @@ def test_rank_failure_contains_to_inflight_requests():
             for i in range(6)]
     sched = ShardedScheduler(
         params, cfg, ranks=2,
-        sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              requeue_inflight=False))
     eng0 = sched.shards[0]
-    calls = {"n": 0}
-    orig = eng0._decode
-
-    def faulty(*a, **k):
-        calls["n"] += 1
-        if calls["n"] >= 3:
-            raise RuntimeError("injected shard fault")
-        return orig(*a, **k)
-
-    eng0._decode = faulty
+    _faulty_decode(eng0)
     done = sched.run(reqs)
 
     st = sched.stats()
@@ -268,6 +309,28 @@ def test_rank_failure_contains_to_inflight_requests():
     assert not eng0.queue           # dead rank's queue was re-routed
     # the survivor took over and actually served traffic
     assert sched.shards[1].stats["admitted"] >= len(done)
+
+
+def test_max_requeues_bounds_poison_request():
+    """A request that keeps killing ranks must fail for real once its
+    requeue budget is spent, instead of cycling through revived shards
+    forever — but only after it actually got max_requeues fresh
+    chances on other ranks."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(14)
+    req = Request(rid=0, prompt=rng.integers(0, 64, size=(6,))
+                  .astype(np.int32), max_new_tokens=8)
+    sched = ShardedScheduler(
+        params, cfg, ranks=4,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              max_requeues=2))
+    for eng in sched.shards:        # every rank dies on its 2nd decode
+        _faulty_decode(eng, after=2, msg="poison")
+    done = sched.run([req])
+    assert not done
+    assert req.status == "failed" and "requeue(s) exhausted" in req.error
+    assert req.requeues == 3        # initial run + 2 requeued attempts
+    assert sched.stats()["requeued"] == 2
 
 
 @pytest.mark.slow
@@ -455,7 +518,10 @@ def test_deadline_shed_improves_interactive_attainment():
 def test_revive_rank_rebuilds_dead_shard_and_serves_again():
     """Engine-raise recovery (ROADMAP): a rank killed by an injected
     fault is rebuilt by revive_rank — fresh caches, re-placed params —
-    re-enters routing, and serves bit-identical streams again."""
+    re-enters routing, and serves bit-identical streams again. The
+    revived shard inherits the dead one's cumulative counters (stats
+    continuity across the outage, DESIGN.md §14) instead of resetting
+    to zero."""
     cfg, params = _setup()
     rng = np.random.default_rng(13)
     reqs = [Request(rid=i, prompt=rng.integers(0, 64, size=(6 + i,))
@@ -469,6 +535,7 @@ def test_revive_rank_rebuilds_dead_shard_and_serves_again():
         RuntimeError("injected rank death"))
     sched.run(reqs[:1])
     assert eng0.dead and sched.stats()["live_ranks"] == 0
+    assert eng0.stats["admitted"] == 1 and eng0.stats["deaths"] == 1
     # a submission while dead fails fast (no live shards)…
     assert not sched.submit(reqs[1])
     assert reqs[1].status == "failed"
@@ -481,7 +548,10 @@ def test_revive_rank_rebuilds_dead_shard_and_serves_again():
     solo = _solo(params, cfg, reqs[2])
     done = sched.run([reqs[2]])
     assert len(done) == 1 and done[0].out_tokens == solo
-    assert revived.stats["admitted"] == 1
+    # stats continuity: the pre-death admission is still counted, the
+    # outage is, and new traffic accumulates on top
+    assert revived.stats["admitted"] == 2
+    assert revived.stats["deaths"] == 1
 
 
 def test_revive_rank_refuses_live_shard():
@@ -491,6 +561,46 @@ def test_revive_rank_refuses_live_shard():
         sched=SchedulerConfig(slots_per_rank=1, cache_len=64))
     with pytest.raises(ValueError, match="alive"):
         sched.revive_rank(0)
+
+
+def test_route_steers_away_from_rank_mid_spill():
+    """Spill-aware routing (ROADMAP item 2): a paged rank whose
+    below-watermark residency headroom cannot cover the newcomer's
+    prefill is mid-spill — it loses routing to a rank WITH headroom
+    even when its outstanding-token load is lower. Contiguous ranks
+    (no page pool) keep the pure least-outstanding-work policy."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(15)
+    mk = lambda rid, plen, new: Request(
+        rid=rid, prompt=rng.integers(0, 64, size=(plen,))
+        .astype(np.int32), max_new_tokens=new)
+
+    def build(paged):
+        kv = dict(kv_pages=8, kv_page_len=8) if paged else {}
+        sched = ShardedScheduler(
+            params, cfg, ranks=2,
+            sched=SchedulerConfig(slots_per_rank=2, cache_len=64, **kv))
+        # rank 0: little remaining work but a prompt holding most of its
+        # page pool; rank 1: heavy decode backlog, pool nearly empty
+        sched.shards[0].submit(mk(0, 40, 4))
+        sched.shards[1].submit(mk(1, 8, 40))
+        sched.step()
+        return sched
+
+    newcomer = mk(2, 30, 4)
+    paged = build(paged=True)
+    assert paged.shards[0].outstanding_tokens() \
+        < paged.shards[1].outstanding_tokens()
+    h0 = paged.shards[0].route_headroom_tokens()
+    assert h0 is not None and h0 < len(newcomer.prompt)
+    assert paged._route(newcomer) is paged.shards[1]
+    assert paged.submit(newcomer) and newcomer.rank == 1
+    done = paged.run([])
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+
+    contig = build(paged=False)     # no pool: least outstanding wins
+    assert contig.shards[0].route_headroom_tokens() is None
+    assert contig._route(newcomer) is contig.shards[0]
 
 
 def test_drain_baseline_takes_more_steps_than_continuous():

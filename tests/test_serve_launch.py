@@ -56,6 +56,25 @@ def test_parse_buckets_forms():
         parse_buckets("128,256", 64)
 
 
+def _main_exits(argv, match, monkeypatch):
+    import sys
+
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", ["serve"] + argv)
+    with pytest.raises(SystemExit, match=match):
+        serve.main()
+
+
+def test_frontend_flags_validate_before_model_build(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    _main_exits(["--hosts", "0"], "--hosts must be >= 1", monkeypatch)
+    _main_exits(["--hosts", "2", "--mesh", "1,1"],
+                "in-process hosts without a mesh", monkeypatch)
+    _main_exits(["--chaos", "kill:0@3"], "add --hosts N", monkeypatch)
+    _main_exits(["--hosts", "2", "--chaos", "explode:0@3"],
+                "--chaos", monkeypatch)
+
+
 def test_engine_rejects_buckets_beyond_cache_len():
     import numpy as np
 
