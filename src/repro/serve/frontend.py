@@ -162,13 +162,8 @@ class LocalHost:
             return "dead"
         if self.sched.submit(req):
             return "ok"
-        if req.status == "rejected":
-            if req in self.sched.rejected:
-                self.sched.rejected.remove(req)
-            return "rejected"
-        if req in self.sched.failed:        # raced a rank death
-            self.sched.failed.remove(req)
-        return "dead"
+        self.sched.retract_request(req)
+        return "rejected" if req.status == "rejected" else "dead"
 
     def step(self) -> Tuple[List[int], List[Tuple[int, str]],
                             List[Tuple[int, int, int]]]:
@@ -191,10 +186,9 @@ class LocalHost:
         finished = self.sched.step()
         # terminal scheduler failures (requeues exhausted, no live
         # shards) escalate to the frontend, which owns their fate —
-        # drain them off the host's list
-        failed, self.sched.failed[:] = (
-            [(r.rid, r.error or "rank failure") for r in self.sched.failed],
-            [])
+        # drain them off the host's list under the scheduler's lock
+        failed = [(r.rid, r.error or "rank failure")
+                  for r in self.sched.drain_failed()]
         return [r.rid for r in finished], failed, []
 
     def cancel(self, rid: int) -> Optional[Request]:
@@ -448,6 +442,11 @@ class ClusterFrontend:
         self.cfg = cfg or FrontendConfig()
         self.on_token = on_token
         self.rng = random.Random(self.cfg.rng_seed)
+        # guards trackers/outcome lists/health against concurrent
+        # callers (submit from a caller thread while run()/step() ticks;
+        # stats from a monitor). Reentrant: a LocalHost step fires
+        # _local_sink inline while step() already holds the lock.
+        self._lock = threading.RLock()
         self.trackers: Dict[int, _Tracker] = {}
         self.done: List[Request] = []
         self.failed: List[Request] = []
@@ -462,7 +461,9 @@ class ClusterFrontend:
 
     # -- views -----------------------------------------------------------
     def unresolved(self) -> List[_Tracker]:
-        return [t for t in self.trackers.values() if t.outcome is None]
+        with self._lock:
+            return [t for t in self.trackers.values()
+                    if t.outcome is None]
 
     def _state(self, hid: int) -> str:
         return self._health[hid]["state"]
@@ -522,15 +523,16 @@ class ClusterFrontend:
 
     # -- token delivery (exactly once) -----------------------------------
     def _local_sink(self, req: Request, tok: int):
-        tr = self.trackers.get(req.rid)
-        if tr is None or tr.outcome is not None:
-            return
-        if len(req.out_tokens) == tr.delivered + 1:
-            tr.delivered += 1
-            if self.on_token is not None:
-                self.on_token(req, tok)
-        else:
-            self.n_deduped += 1
+        with self._lock:
+            tr = self.trackers.get(req.rid)
+            if tr is None or tr.outcome is not None:
+                return
+            if len(req.out_tokens) == tr.delivered + 1:
+                tr.delivered += 1
+                if self.on_token is not None:
+                    self.on_token(req, tok)
+            else:
+                self.n_deduped += 1
 
     def _remote_token(self, tr: _Tracker, i: int, tok: int):
         """Apply one worker token event to the parent's shadow request.
@@ -554,16 +556,18 @@ class ClusterFrontend:
         True = the frontend owns it until it resolves. With no routable
         host RIGHT NOW the request waits at the frontend and routes
         when one recovers (or fails when every host is gone)."""
-        now = time.monotonic()
-        tr = _Tracker(req, now)
-        assert req.rid not in self.trackers, f"duplicate rid {req.rid}"
-        self.trackers[req.rid] = tr
-        if self.draining:
-            self._reject(tr, "frontend is draining")
-            return False
-        if req.t_submit is None:
-            req.t_submit = now
-        return self._dispatch(tr)
+        with self._lock:
+            now = time.monotonic()
+            tr = _Tracker(req, now)
+            assert req.rid not in self.trackers, \
+                f"duplicate rid {req.rid}"
+            self.trackers[req.rid] = tr
+            if self.draining:
+                self._reject(tr, "frontend is draining")
+                return False
+            if req.t_submit is None:
+                req.t_submit = now
+            return self._dispatch(tr)
 
     def _dispatch(self, tr: _Tracker) -> bool:
         """Try to place a request on a host now; park it on the retry
@@ -663,36 +667,37 @@ class ClusterFrontend:
         """One frontend tick: health checks, watchdog, due retries, one
         scheduler step on every live host. Returns requests completed
         this tick."""
-        now = time.monotonic()
-        self._beat()
-        self._watchdog(now)
-        self._flush_retries(now)
-        out: List[Request] = []
-        for hid, host in self.hosts.items():
-            if self._state(hid) == "dead" or not host.alive:
-                continue
-            fin, failed, toks = host.step()
-            for rid, i, tok in toks:
-                tr = self.trackers.get(rid)
-                if tr is not None:
-                    self._remote_token(tr, i, tok)
-            for rid in fin:
-                tr = self.trackers.get(rid)
-                if tr is None or tr.outcome is not None:
+        with self._lock:
+            now = time.monotonic()
+            self._beat()
+            self._watchdog(now)
+            self._flush_retries(now)
+            out: List[Request] = []
+            for hid, host in self.hosts.items():
+                if self._state(hid) == "dead" or not host.alive:
                     continue
-                req = tr.req
-                if not req.done:        # subprocess host: stamp shadow
-                    req.done = True
-                    req.status = "done"
-                    req.t_done = time.monotonic()
-                self._resolve(tr, "done")
-                out.append(req)
-            for rid, err in failed:
-                tr = self.trackers.get(rid)
-                if tr is not None and tr.outcome is None:
-                    tr.req.status = "queued"    # frontend owns it again
-                    self._schedule_retry(tr, f"host {hid}: {err}")
-        return out
+                fin, failed, toks = host.step()
+                for rid, i, tok in toks:
+                    tr = self.trackers.get(rid)
+                    if tr is not None:
+                        self._remote_token(tr, i, tok)
+                for rid in fin:
+                    tr = self.trackers.get(rid)
+                    if tr is None or tr.outcome is not None:
+                        continue
+                    req = tr.req
+                    if not req.done:    # subprocess host: stamp shadow
+                        req.done = True
+                        req.status = "done"
+                        req.t_done = time.monotonic()
+                    self._resolve(tr, "done")
+                    out.append(req)
+                for rid, err in failed:
+                    tr = self.trackers.get(rid)
+                    if tr is not None and tr.outcome is None:
+                        tr.req.status = "queued"  # frontend owns it
+                        self._schedule_retry(tr, f"host {hid}: {err}")
+            return out
 
     def _host_busy(self) -> bool:
         return any(t.host_id is not None for t in self.unresolved())
@@ -723,36 +728,45 @@ class ClusterFrontend:
         i = 0
         tick = 0
         completed: List[Request] = []
-        while i < len(order) or self.unresolved():
-            if self._exhausted():
-                self._beat()                # record the deaths in health
-                while i < len(order):       # arrivals must still resolve
+        while True:
+            # the tick's work runs under the lock; the idle sleep below
+            # runs OUTSIDE it, so concurrent submit()/stats() callers
+            # are never blocked behind a sleeping loop
+            sleep_for: Optional[float] = None
+            with self._lock:
+                if i >= len(order) and not self.unresolved():
+                    break
+                if self._exhausted():
+                    self._beat()            # record deaths in health
+                    while i < len(order):   # arrivals must resolve
+                        self.submit(requests[order[i]])
+                        i += 1
+                    for tr in self.unresolved():
+                        self._fail(tr, "no live hosts", replayable=True)
+                    break
+                now = time.monotonic() - t0
+                while i < len(order) and (
+                        not timed or arrivals[order[i]] <= now):
                     self.submit(requests[order[i]])
                     i += 1
-                for tr in self.unresolved():
-                    self._fail(tr, "no live hosts", replayable=True)
-                break
-            now = time.monotonic() - t0
-            while i < len(order) and (
-                    not timed or arrivals[order[i]] <= now):
-                self.submit(requests[order[i]])
-                i += 1
-            if on_tick is not None:
-                on_tick(tick)
-            completed.extend(self.step())
-            tick += 1
-            if not self._host_busy():
-                # idle: nothing decoding anywhere — sleep toward the
-                # next arrival or retry timer instead of spinning
-                waits = []
-                if i < len(order) and timed:
-                    waits.append(t0 + arrivals[order[i]]
-                                 - time.monotonic())
-                due = self._next_due()
-                if due is not None:
-                    waits.append(due - time.monotonic())
-                if waits:
-                    time.sleep(min(0.05, max(0.0, min(waits))))
+                if on_tick is not None:
+                    on_tick(tick)
+                completed.extend(self.step())
+                tick += 1
+                if not self._host_busy():
+                    # idle: nothing decoding anywhere — sleep toward
+                    # the next arrival or retry timer, not spinning
+                    waits = []
+                    if i < len(order) and timed:
+                        waits.append(t0 + arrivals[order[i]]
+                                     - time.monotonic())
+                    due = self._next_due()
+                    if due is not None:
+                        waits.append(due - time.monotonic())
+                    if waits:
+                        sleep_for = min(0.05, max(0.0, min(waits)))
+            if sleep_for is not None:
+                time.sleep(sleep_for)
         return completed
 
     def drain(self, timeout: Optional[float] = None
@@ -764,18 +778,24 @@ class ClusterFrontend:
         out of their hosts and failed, so drain itself always
         terminates. Returns ``(completed_during_drain, clean)`` where
         ``clean`` means nothing was cut off."""
-        self.draining = True
+        with self._lock:
+            self.draining = True
         deadline = time.monotonic() + (timeout if timeout is not None
                                        else self.cfg.drain_timeout)
         completed: List[Request] = []
-        while self.unresolved() and time.monotonic() < deadline \
-                and not self._exhausted():
-            completed.extend(self.step())
-        leftovers = self.unresolved()
-        for tr in leftovers:
-            if tr.host_id is not None:
-                self.hosts[tr.host_id].cancel(tr.req.rid)
-            self._fail(tr, "drain timeout expired", replayable=True)
+        while time.monotonic() < deadline:
+            # per-iteration lock scope: a long drain must not starve
+            # concurrent stats()/submit() (which now reject) callers
+            with self._lock:
+                if not self.unresolved() or self._exhausted():
+                    break
+                completed.extend(self.step())
+        with self._lock:
+            leftovers = self.unresolved()
+            for tr in leftovers:
+                if tr.host_id is not None:
+                    self.hosts[tr.host_id].cancel(tr.req.rid)
+                self._fail(tr, "drain timeout expired", replayable=True)
         return completed, not leftovers
 
     def close(self):
@@ -790,42 +810,44 @@ class ClusterFrontend:
         RETRYABLE failure (retries exhausted / no-live-hosts; never
         watchdog kills) back into the pool with a fresh attempt budget:
         restored capacity also restores the requests the outage cost."""
-        host = self.hosts[host_id]
-        host.revive()
-        host.set_sink(self._local_sink)
-        self._health[host_id] = {"state": "healthy", "misses": 0}
-        if not replay:
-            return
-        for tr in list(self.trackers.values()):
-            if tr.outcome != "failed" or not tr.replayable:
-                continue
-            self.failed.remove(tr.req)
-            tr.outcome = None
-            tr.replayable = False
-            tr.attempts = 0
-            tr.t0 = time.monotonic()    # a replay restarts its clock
-            req = tr.req
-            req.error = None
-            req.t_done = None
-            req.mark_resumable()
-            req.status = "queued"
-            self._dispatch(tr)
+        with self._lock:
+            host = self.hosts[host_id]
+            host.revive()
+            host.set_sink(self._local_sink)
+            self._health[host_id] = {"state": "healthy", "misses": 0}
+            if not replay:
+                return
+            for tr in list(self.trackers.values()):
+                if tr.outcome != "failed" or not tr.replayable:
+                    continue
+                self.failed.remove(tr.req)
+                tr.outcome = None
+                tr.replayable = False
+                tr.attempts = 0
+                tr.t0 = time.monotonic()  # a replay restarts its clock
+                req = tr.req
+                req.error = None
+                req.t_done = None
+                req.mark_resumable()
+                req.status = "queued"
+                self._dispatch(tr)
 
     def stats(self) -> Dict:
-        states = [self._state(h) for h in self.hosts]
-        return {
-            "hosts": len(self.hosts),
-            "healthy": states.count("healthy"),
-            "suspect": states.count("suspect"),
-            "dead": states.count("dead"),
-            "submitted": len(self.trackers),
-            "done": len(self.done),
-            "failed": len(self.failed),
-            "rejected": len(self.rejected),
-            "unresolved": len(self.unresolved()),
-            "retries": self.n_retries,
-            "deduped_tokens": self.n_deduped,
-            "delivered_tokens": sum(t.delivered
-                                    for t in self.trackers.values()),
-            "per_host": [h.stats() for h in self.hosts.values()],
-        }
+        with self._lock:
+            states = [self._state(h) for h in self.hosts]
+            return {
+                "hosts": len(self.hosts),
+                "healthy": states.count("healthy"),
+                "suspect": states.count("suspect"),
+                "dead": states.count("dead"),
+                "submitted": len(self.trackers),
+                "done": len(self.done),
+                "failed": len(self.failed),
+                "rejected": len(self.rejected),
+                "unresolved": len(self.unresolved()),
+                "retries": self.n_retries,
+                "deduped_tokens": self.n_deduped,
+                "delivered_tokens": sum(t.delivered
+                                        for t in self.trackers.values()),
+                "per_host": [h.stats() for h in self.hosts.values()],
+            }

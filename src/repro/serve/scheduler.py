@@ -83,6 +83,7 @@ it was preempted and resumed along the way.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import Counter
 from dataclasses import dataclass
@@ -186,6 +187,11 @@ class ShardedScheduler:
         self._sink: Optional[Callable[[Request, int], None]] = None
         self.shards = [self._build_engine(r)
                        for r in range(len(submeshes))]
+        # guards the shared mutable state below (counters, terminal
+        # lists, histogram) against the cluster frontend's threads —
+        # heartbeat/reader threads call submit/step/stats concurrently.
+        # Reentrant: step() -> _on_rank_failure() -> submit() re-enters.
+        self._lock = threading.RLock()
         self.rejected: List[Request] = []
         self.failed: List[Request] = []
         self.n_submitted = 0
@@ -222,20 +228,21 @@ class ShardedScheduler:
         engine inherits the dead one's cumulative serving counters
         (plus a bumped ``deaths`` count), so per-rank stats stay
         continuous across the outage instead of resetting to zero."""
-        old = self.shards[rank]
-        if not old.dead:
-            raise ValueError(f"rank {rank} is alive — refusing to "
-                             f"rebuild a serving engine shard")
-        assert not old.queue, "dead rank still holds queued requests"
-        eng = self._build_engine(rank)
-        # stats continuity: cumulative counters (incl. the death that
-        # took the shard down) carry over; the stale "memory" snapshot
-        # does not (the new pool reports its own)
-        eng.stats.update({k: v for k, v in old.stats.items()
-                          if isinstance(v, int)})
-        self.shards[rank] = eng
-        self.n_revived += 1
-        return self.shards[rank]
+        with self._lock:
+            old = self.shards[rank]
+            if not old.dead:
+                raise ValueError(f"rank {rank} is alive — refusing to "
+                                 f"rebuild a serving engine shard")
+            assert not old.queue, "dead rank still holds queued requests"
+            eng = self._build_engine(rank)
+            # stats continuity: cumulative counters (incl. the death
+            # that took the shard down) carry over; the stale "memory"
+            # snapshot does not (the new pool reports its own)
+            eng.stats.update({k: v for k, v in old.stats.items()
+                              if isinstance(v, int)})
+            self.shards[rank] = eng
+            self.n_revived += 1
+            return self.shards[rank]
 
     def _resolve_buckets(self, ranks: int
                          ) -> Tuple[Optional[Tuple[int, ...]], ...]:
@@ -274,11 +281,12 @@ class ShardedScheduler:
         mid-decode), releasing its slot/pages. Status is left to the
         caller — the frontend's watchdog marks it failed, a drain
         hand-off requeues it elsewhere. None if no rank holds ``rid``."""
-        for e in self.shards:
-            req = e.cancel(rid)
-            if req is not None:
-                return req
-        return None
+        with self._lock:
+            for e in self.shards:
+                req = e.cancel(rid)
+                if req is not None:
+                    return req
+            return None
 
     def set_on_token(self, fn: Optional[Callable[[Request, int], None]]):
         """Install a streaming sink OUTSIDE run()/stream() — for callers
@@ -344,42 +352,43 @@ class ShardedScheduler:
         nothing). Under ``shed="deadline"`` an overflow evicts the
         waiting request least likely to meet its deadline instead of
         always rejecting the newcomer."""
-        self.n_submitted += 1
-        self.prompt_hist[len(req.prompt)] += 1
-        now = time.monotonic()
-        if req.t_submit is None:
-            req.t_submit = now
-        if req.t_deadline is None:
-            req.t_deadline = req.t_submit + self._slo_target(req)
-        if not self._live():
-            req.status = "failed"
-            req.error = "no live engine shards"
-            req._kv = None              # release any snapshot memory
-            self.failed.append(req)
-            return False
-        cap = self.sched.max_queue
-        if cap is not None:
-            free = sum(e.admission_capacity() for e in self._live())
-            if self.queued() - free >= cap:
-                victim = req
-                if self.sched.shed == "deadline":
-                    victim = self._shed_victim(req, now)
-                if victim is req:
-                    req.status = "rejected"
-                    self.rejected.append(req)
-                    return False
-                # evict the queued victim, admit the newcomer
-                for e in self._live():
-                    if victim in e.queue:
-                        e.queue.remove(victim)
-                        break
-                victim.status = "rejected"
-                victim._kv = None
-                self.rejected.append(victim)
-                self.n_shed += 1
-        self.n_accepted += 1
-        self._route(req).submit(req)
-        return True
+        with self._lock:
+            self.n_submitted += 1
+            self.prompt_hist[len(req.prompt)] += 1
+            now = time.monotonic()
+            if req.t_submit is None:
+                req.t_submit = now
+            if req.t_deadline is None:
+                req.t_deadline = req.t_submit + self._slo_target(req)
+            if not self._live():
+                req.status = "failed"
+                req.error = "no live engine shards"
+                req._kv = None          # release any snapshot memory
+                self.failed.append(req)
+                return False
+            cap = self.sched.max_queue
+            if cap is not None:
+                free = sum(e.admission_capacity() for e in self._live())
+                if self.queued() - free >= cap:
+                    victim = req
+                    if self.sched.shed == "deadline":
+                        victim = self._shed_victim(req, now)
+                    if victim is req:
+                        req.status = "rejected"
+                        self.rejected.append(req)
+                        return False
+                    # evict the queued victim, admit the newcomer
+                    for e in self._live():
+                        if victim in e.queue:
+                            e.queue.remove(victim)
+                            break
+                    victim.status = "rejected"
+                    victim._kv = None
+                    self.rejected.append(victim)
+                    self.n_shed += 1
+            self.n_accepted += 1
+            self._route(req).submit(req)
+            return True
 
     def _shed_victim(self, incoming: Request, now: float) -> Request:
         """Deadline-aware shedding (ROADMAP): among every WAITING
@@ -486,23 +495,27 @@ class ShardedScheduler:
         """One decode step on every live rank that has work; returns the
         requests retired this step (any rank). Applies queue policy
         (re-sorting time-varying priorities) and preemption first."""
-        finished: List[Request] = []
-        now = time.monotonic()
-        for eng in self.shards:
-            if eng.dead:
-                continue
-            try:
-                if self.sched.policy != "fcfs" and len(eng.queue) > 1:
-                    eng.queue.sort(key=lambda r: self._priority(r, now))
-                # inside the containment: the KV snapshot in
-                # preempt_slot is a device op and can raise like a step
-                self._maybe_preempt(eng, now)
-                if not eng.has_work():
+        with self._lock:
+            finished: List[Request] = []
+            now = time.monotonic()
+            for eng in self.shards:
+                if eng.dead:
                     continue
-                finished.extend(eng.step())
-            except Exception as err:    # noqa: BLE001 — rank containment
-                finished.extend(self._on_rank_failure(eng, err))
-        return finished
+                try:
+                    if self.sched.policy != "fcfs" \
+                            and len(eng.queue) > 1:
+                        eng.queue.sort(
+                            key=lambda r: self._priority(r, now))
+                    # inside the containment: the KV snapshot in
+                    # preempt_slot is a device op and can raise like a
+                    # step
+                    self._maybe_preempt(eng, now)
+                    if not eng.has_work():
+                        continue
+                    finished.extend(eng.step())
+                except Exception as err:  # noqa: BLE001 — containment
+                    finished.extend(self._on_rank_failure(eng, err))
+            return finished
 
     # -- serving loops -------------------------------------------------
     def _set_sink(self, fn: Optional[Callable[[Request, int], None]]):
@@ -578,7 +591,33 @@ class ShardedScheduler:
     def prompt_length_histogram(self) -> Dict[int, int]:
         """Observed prompt lengths (all submissions, admitted or not) —
         the input ``tools/suggest_buckets.py`` fits a bucket table to."""
-        return dict(self.prompt_hist)
+        with self._lock:
+            return dict(self.prompt_hist)
+
+    # -- owner methods for frontend bookkeeping ------------------------
+    def drain_failed(self) -> List[Request]:
+        """Hand terminal failures off to the caller (the cluster
+        frontend escalates them into its retry ladder) and clear the
+        list — under the scheduler's lock, so a concurrent submit's
+        no-live-shards failure is either in this batch or the next,
+        never lost."""
+        with self._lock:
+            out, self.failed[:] = list(self.failed), []
+            return out
+
+    def retract_request(self, req: Request) -> bool:
+        """Withdraw a non-admitted request's terminal bookkeeping
+        (``rejected`` or ``failed``) because the CALLER owns its fate —
+        the cluster frontend re-routes or resolves it itself. Returns
+        True if the request was found on either list."""
+        with self._lock:
+            if req in self.rejected:
+                self.rejected.remove(req)
+                return True
+            if req in self.failed:
+                self.failed.remove(req)
+                return True
+            return False
 
     def stats(self) -> Dict:
         """Per-rank serving counters + global admission/QoS counters.
@@ -592,25 +631,29 @@ class ShardedScheduler:
                 d["memory"] = mem.as_dict()
             return d
 
-        headrooms = [e.route_headroom_tokens() for e in self._live()]
-        return {
-            "ranks": self.ranks,
-            "live_ranks": len(self._live()),
-            "submitted": self.n_submitted,
-            "accepted": self.n_accepted,
-            "rejected": len(self.rejected),
-            "shed": self.n_shed,
-            "revived": self.n_revived,
-            "requeued": self.n_requeued,
-            "failed": len(self.failed),
-            "prompt_lengths_seen": sum(self.prompt_hist.values()),
-            "preemptions": sum(e.stats["preemptions"]
-                               for e in self.shards),
-            # host-level aggregates the cluster frontend routes on
-            "outstanding_tokens": self.outstanding_tokens(),
-            "inflight": sum(e.B - e.n_free() for e in self._live()),
-            "headroom_tokens": (None if all(h is None for h in headrooms)
-                                else sum(h for h in headrooms
-                                         if h is not None)),
-            "per_rank": [rank_stats(e) for e in self.shards],
-        }
+        with self._lock:
+            headrooms = [e.route_headroom_tokens()
+                         for e in self._live()]
+            return {
+                "ranks": self.ranks,
+                "live_ranks": len(self._live()),
+                "submitted": self.n_submitted,
+                "accepted": self.n_accepted,
+                "rejected": len(self.rejected),
+                "shed": self.n_shed,
+                "revived": self.n_revived,
+                "requeued": self.n_requeued,
+                "failed": len(self.failed),
+                "prompt_lengths_seen": sum(self.prompt_hist.values()),
+                "preemptions": sum(e.stats["preemptions"]
+                                   for e in self.shards),
+                # host-level aggregates the cluster frontend routes on
+                "outstanding_tokens": self.outstanding_tokens(),
+                "inflight": sum(e.B - e.n_free()
+                                for e in self._live()),
+                "headroom_tokens": (None if all(h is None
+                                                for h in headrooms)
+                                    else sum(h for h in headrooms
+                                             if h is not None)),
+                "per_rank": [rank_stats(e) for e in self.shards],
+            }

@@ -1,0 +1,28 @@
+"""Clean twin of lock_bad.py: every shared access guarded, foreign
+state reached through an owner method, hierarchy respected — zero
+findings under the same fixture spec."""
+import threading
+
+
+class Peer:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.inbox = []
+
+    def push(self, item):
+        with self._lock:
+            self.inbox.append(item)
+
+
+class Worker:
+    def __init__(self, peer):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.count = 0
+
+    def increment(self):
+        with self._lock:
+            self.count += 1
+
+    def forward(self, item):
+        self.peer.push(item)            # owner method takes Peer._lock

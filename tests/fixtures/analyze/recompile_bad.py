@@ -1,0 +1,21 @@
+"""Seeded jit-cache-key hazards (recompile pass AST rules)."""
+import jax
+
+
+class Runner:
+    def __init__(self, scale):
+        self.scale = scale
+
+    def make_step(self):
+        # JIT-CLOSURE: the jitted lambda closes over mutable instance
+        # state — rebinding self.scale silently recompiles (or worse,
+        # does NOT retrace and serves the stale constant).
+        return jax.jit(lambda x: x * self.scale)
+
+
+def bad_static_call(f, x):
+    # JIT-STATIC-UNHASHABLE: a list literal at a static position is
+    # unhashable — every call raises (or defeats the cache if it were
+    # hashed by identity).
+    g = jax.jit(f, static_argnums=(1,))
+    return g(x, [1, 2, 3])

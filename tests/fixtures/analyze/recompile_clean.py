@@ -1,0 +1,24 @@
+"""Clean twin of recompile_bad.py: closures bound through partial,
+static arguments hashable — zero findings."""
+from functools import partial
+
+import jax
+
+
+def _step(x, scale):
+    return x * scale
+
+
+class Runner:
+    def __init__(self, scale):
+        self.scale = scale
+
+    def make_step(self):
+        # scale is pinned as an explicit partial argument at build
+        # time — the cache key is honest about it
+        return jax.jit(partial(_step, scale=self.scale))
+
+
+def good_static_call(f, x):
+    g = jax.jit(f, static_argnums=(1,))
+    return g(x, (1, 2, 3))              # tuple: hashable static

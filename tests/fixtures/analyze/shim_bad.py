@@ -1,0 +1,8 @@
+"""Seeded shim violation: direct shard_map use outside
+distribution/context.py (SHIM-IMPORT)."""
+from jax.experimental import shard_map
+
+
+def run_sharded(f, mesh, in_specs, out_specs):
+    return shard_map.shard_map(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)

@@ -1,0 +1,26 @@
+"""Seeded trace-safety violations: each jit-reachable function below
+carries exactly one deliberate host/trace confusion.  Scanned only by
+tests/test_analyze.py (EXCLUDE_PARTS keeps it out of repo runs)."""
+import time
+
+import jax
+
+
+def branches_on_traced(x, n):
+    if x > 0:                           # TRACE-BRANCH: traced test
+        return x + n
+    return x - n
+
+
+def coerces_traced(x):
+    return float(x) * 2.0               # TRACE-COERCE: host coercion
+
+
+def host_callback(x):
+    t = time.time()                     # TRACE-HOSTCALL: wall clock
+    return x + t
+
+
+branches_j = jax.jit(branches_on_traced)
+coerces_j = jax.jit(coerces_traced)
+hostcall_j = jax.jit(host_callback)

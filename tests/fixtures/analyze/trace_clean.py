@@ -1,0 +1,26 @@
+"""Clean twin of trace_bad.py: the same shapes of logic written
+trace-safely — static-attribute branching, jnp.where selects, static
+arguments — must produce ZERO findings."""
+import jax
+import jax.numpy as jnp
+
+
+def branches_on_shape(x, n):
+    if x.shape[0] > 1:                  # shape is static: fine
+        return x + n
+    return x - n
+
+
+def selects_traced(x):
+    return jnp.where(x > 0, x * 2.0, x)     # traced select: fine
+
+
+def static_branch(x, flag):
+    if flag:                            # flag is a static argument
+        return x * 2
+    return x
+
+
+branches_j = jax.jit(branches_on_shape)
+selects_j = jax.jit(selects_traced)
+static_j = jax.jit(static_branch, static_argnames=("flag",))

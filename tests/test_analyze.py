@@ -1,0 +1,333 @@
+"""Tests for the static analysis suite (tools/analyze, DESIGN.md §15).
+
+Each pass is proven twice against the seeded fixture modules under
+tests/fixtures/analyze/: the *_bad.py module must produce its seeded
+finding (true positive), the *_clean.py twin must produce zero findings
+(clean negative).  The packed pass is exercised on real containers from
+core.deploy, corrupted field-by-field.  Finally the full repo run must
+be clean — the --strict CI gate."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from tools.analyze import PASS_NAMES, run_all  # noqa: E402
+from tools.analyze import (concurrency, packed, recompile, shim,  # noqa: E402
+                           trace_safety)
+from tools.analyze.common import Finding, load_baseline, \
+    write_baseline  # noqa: E402
+from tools.analyze.rules import RULES  # noqa: E402
+
+FIX = os.path.join(REPO, "tests", "fixtures", "analyze")
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# pass 1: trace safety
+# ---------------------------------------------------------------------------
+
+def test_trace_safety_fixture_true_positives():
+    found = trace_safety.run(FIX, subdirs=("",), root_dirs=("",))
+    by_rule = {}
+    for f in found:
+        by_rule.setdefault(f.rule, []).append(f)
+    assert "TRACE-BRANCH" in by_rule, found
+    assert "TRACE-COERCE" in by_rule, found
+    assert "TRACE-HOSTCALL" in by_rule, found
+    # every finding lands in the bad module, none in the clean twin
+    assert all(f.path.endswith("trace_bad.py") for f in found), found
+
+
+def test_trace_safety_clean_twin_silent():
+    found = trace_safety.run(FIX, subdirs=("trace_clean.py",),
+                             root_dirs=("",))
+    assert found == [], found
+
+
+def test_trace_safety_repo_reaches_serving_stack():
+    """The repo run must be clean AND have real coverage: jit roots in
+    the engine reach the model decode path (an empty reachable set
+    would make 'zero findings' vacuous)."""
+    from tools.analyze.common import Corpus
+    corpus = Corpus(REPO, ("src",))
+    an = trace_safety._Analyzer(corpus)
+    n_roots = trace_safety._seed_roots(an, corpus,
+                                      trace_safety.ROOT_DIRS)
+    findings = an.solve()
+    assert findings == [], findings
+    assert n_roots >= 5, n_roots
+    reached = {fi.label for fi, _t in an.state.values()}
+    assert "decode_step" in reached, reached
+    assert "prefill" in reached, reached
+
+
+# ---------------------------------------------------------------------------
+# pass 2: shim enforcement
+# ---------------------------------------------------------------------------
+
+def test_shim_fixture_true_positive():
+    found = shim.run(REPO, files=[os.path.join(FIX, "shim_bad.py")])
+    assert _rules(found) == {"SHIM-IMPORT"}, found
+
+
+def test_shim_clean_twin_silent():
+    found = shim.run(REPO, files=[os.path.join(FIX, "shim_clean.py")])
+    assert found == [], found
+
+
+def test_shim_allows_the_shim_itself():
+    ctx = os.path.join(REPO, "src", "repro", "distribution",
+                       "context.py")
+    assert shim.run(REPO, files=[ctx]) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 3: recompile budget + cache-key hazards
+# ---------------------------------------------------------------------------
+
+def test_recompile_hazard_fixture_true_positives():
+    found = recompile.run(REPO,
+                          files=[os.path.join(FIX, "recompile_bad.py")])
+    assert "JIT-CLOSURE" in _rules(found), found
+    assert "JIT-STATIC-UNHASHABLE" in _rules(found), found
+
+
+def test_recompile_hazard_clean_twin_silent():
+    found = recompile.run(
+        REPO, files=[os.path.join(FIX, "recompile_clean.py")])
+    assert found == [], found
+
+
+def test_recompile_budget_math():
+    """budget_for/predict_prefill_shapes agree with the documented
+    model: one program per bucket plus exact tail shapes."""
+    buckets = (8, 16, 32, 64)
+    shapes = recompile.predict_prefill_shapes(buckets, 2, range(1, 65))
+    assert shapes == {(2, b) for b in buckets}
+    assert len(shapes) <= recompile.budget_for(buckets, 64)
+    # tail lengths beyond the largest bucket compile exact shapes
+    shapes = recompile.predict_prefill_shapes((8, 16), 2, range(1, 33))
+    assert (2, 20) in shapes
+    assert len(shapes) <= recompile.budget_for((8, 16), 32)
+
+
+def test_recompile_budget_detects_broken_bucketing(monkeypatch):
+    """True positive for RECOMPILE-BUDGET: if the production bucketing
+    regressed to exact shapes, the predicted signature count must blow
+    the documented budget (this inequality is what run() asserts over
+    the launch flag domains)."""
+    from repro.serve.engine import Engine
+    monkeypatch.setattr(Engine, "_bucket_len",
+                        lambda self, L: int(L))   # bucketing disabled
+    buckets = (8, 16, 32, 64)
+    shapes = recompile.predict_prefill_shapes(buckets, 2, range(1, 65))
+    assert len(shapes) > recompile.budget_for(buckets, 64)
+
+
+# ---------------------------------------------------------------------------
+# pass 4: concurrency lint
+# ---------------------------------------------------------------------------
+
+FIX_LOCK_SPECS = {
+    "lock_bad.py": {
+        "Peer": {
+            "lock": "_lock",
+            "protected": {"inbox"},
+            "entry_points": {"push"},
+        },
+        "Worker": {
+            "lock": "_lock",
+            "protected": {"count"},
+            "entry_points": {"increment", "forward"},
+            "attr_classes": {"peer": ("lock_bad.py", "Peer")},
+        },
+    },
+}
+FIX_LOCK_ORDER = ["Peer._lock", "Worker._lock"]
+
+
+def _clean_lock_specs():
+    specs = {"lock_clean.py": {
+        cls: dict(spec) for cls, spec in
+        FIX_LOCK_SPECS["lock_bad.py"].items()}}
+    specs["lock_clean.py"]["Worker"] = dict(
+        specs["lock_clean.py"]["Worker"],
+        attr_classes={"peer": ("lock_clean.py", "Peer")})
+    return specs
+
+
+def test_concurrency_fixture_true_positives():
+    found = concurrency.run(FIX, specs=FIX_LOCK_SPECS,
+                            lock_order=FIX_LOCK_ORDER)
+    assert "LOCK-UNHELD" in _rules(found), found
+    assert "LOCK-ORDER" in _rules(found), found
+    unheld = [f for f in found if f.rule == "LOCK-UNHELD"]
+    assert any("count" in f.message for f in unheld), unheld
+
+
+def test_concurrency_clean_twin_silent():
+    found = concurrency.run(FIX, specs=_clean_lock_specs(),
+                            lock_order=FIX_LOCK_ORDER)
+    assert found == [], found
+
+
+def test_concurrency_repo_serving_layer_clean():
+    assert concurrency.run(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 5: packed-format invariants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def packed_pair():
+    from repro.core.deploy import pack_ffn, pack_weight
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(2, 32, 32)).astype(np.float32)
+    w[:, :, 16:24] = 0.0                # prune some column blocks
+    w[:, 8:16, :] = 0.0                 # and some row blocks
+    pw = pack_weight(w, block_k=8, block_n=8)
+    F, d = 32, 16
+    w1 = rng.normal(size=(2, d, F)).astype(np.float32)
+    w3 = rng.normal(size=(2, d, F)).astype(np.float32)
+    w2 = rng.normal(size=(2, F, d)).astype(np.float32)
+    w1[:, :, 8:16] = 0.0                # dead d_ff block
+    w3[:, :, 8:16] = 0.0
+    w2[:, 8:16, :] = 0.0
+    pf = pack_ffn(w1, w3, w2, block_f=8, act="silu",
+                  b2=np.zeros((2, d), np.float32))
+    return pw, pf
+
+
+def test_packed_clean_containers_validate(packed_pair):
+    pw, pf = packed_pair
+    assert packed.validate_packed_weight(pw) == []
+    assert packed.validate_packed_ffn(pf) == []
+
+
+def test_packed_weight_corruptions_caught(packed_pair):
+    import copy
+    pw, _ = packed_pair
+
+    def corrupt(mutate):
+        c = copy.deepcopy(pw)
+        mutate(c)
+        return {r for r, _ in packed.validate_packed_weight(c)}
+
+    # PACK-DTYPE: kn table demoted to int64
+    def to64(c):
+        c.kn = np.asarray(c.kn, np.int64)
+    assert "PACK-DTYPE" in corrupt(to64)
+
+    # PACK-PAD: unsort the visit list
+    def unsort(c):
+        kn = np.array(c.kn)
+        kn[0, :, [0, -1]] = kn[0, :, [-1, 0]]
+        vals = np.array(c.vals)
+        vals[0, [0, -1]] = vals[0, [-1, 0]]
+        c.kn, c.vals = kn, vals
+    assert "PACK-PAD" in corrupt(unsort)
+
+    # PACK-PAD: a duplicate-coordinate padding visit gains values
+    def dirty_pad(c):
+        kn = np.array(c.kn)
+        vals = np.array(c.vals)
+        kn[0, 0, -1] = kn[0, 0, -2]
+        kn[0, 1, -1] = kn[0, 1, -2]
+        vals[0, -1] = 1.0
+        c.kn, c.vals = kn, vals
+    assert {"PACK-PAD", "PACK-CONSERVE"} & corrupt(dirty_pad)
+
+    # PACK-KIND: declared block size contradicts the values
+    def wrong_block(c):
+        c.block = (4, 8)
+    assert "PACK-KIND" in corrupt(wrong_block)
+
+    # PACK-KIND: sharded container without a shard kind
+    def no_kind(c):
+        c.shards = 2
+        c.shard_kind = None
+    assert "PACK-KIND" in corrupt(no_kind)
+
+
+def test_packed_ffn_corruptions_caught(packed_pair):
+    import copy
+    _, pf = packed_pair
+
+    def corrupt(mutate):
+        c = copy.deepcopy(pf)
+        mutate(c)
+        return {r for r, _ in packed.validate_packed_ffn(c)}
+
+    # PACK-DTYPE: jv table missing entirely
+    def no_jv(c):
+        c.jv = None
+    assert "PACK-DTYPE" in corrupt(no_jv)
+
+    # PACK-PAD: live visit after the -1 padding suffix
+    def pad_hole(c):
+        jv = np.array(c.jv)
+        jv[0, 0] = -1                   # -1 before live entries
+        c.jv = jv
+    assert "PACK-PAD" in corrupt(pad_hole)
+
+    # PACK-PAD: jv not strictly increasing
+    def dup_visit(c):
+        jv = np.array(c.jv)
+        jv[0, 1] = jv[0, 0]
+        c.jv = jv
+    assert "PACK-PAD" in corrupt(dup_visit)
+
+
+def test_packed_repo_deployments_clean():
+    """The real pass: pack + deploy the reduced model across shardings
+    and check every container (and cross-sharding conservation)."""
+    assert packed.run(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# driver: baseline + strict gate
+# ---------------------------------------------------------------------------
+
+def test_rule_registry_covers_all_findings():
+    fix_findings = (
+        trace_safety.run(FIX, subdirs=("",), root_dirs=("",))
+        + shim.run(REPO, files=[os.path.join(FIX, "shim_bad.py")])
+        + recompile.run(REPO,
+                        files=[os.path.join(FIX, "recompile_bad.py")])
+        + concurrency.run(FIX, specs=FIX_LOCK_SPECS,
+                          lock_order=FIX_LOCK_ORDER))
+    for f in fix_findings:
+        assert f.rule in RULES, f
+        assert f.severity == "error"
+        assert f.render()
+
+
+def test_baseline_roundtrip(tmp_path):
+    f1 = Finding("SHIM-IMPORT", "a.py", 3, "m1")
+    f2 = Finding("LOCK-UNHELD", "b.py", 7, "m2")
+    p = tmp_path / "baseline.json"
+    write_baseline(str(p), [f1, f2])
+    keys = set(load_baseline(str(p)))
+    assert f1.key() in keys and f2.key() in keys
+    # line numbers are not part of the key: moving a finding does not
+    # invalidate its baseline entry
+    assert Finding("SHIM-IMPORT", "a.py", 99, "m1").key() in keys
+
+
+def test_repo_strict_is_clean():
+    """The CI gate: the full suite over the repo has no findings beyond
+    the (empty) baseline."""
+    findings = run_all(passes=[p for p in PASS_NAMES
+                               if p not in ("recompile", "packed")])
+    baseline = set(load_baseline(
+        os.path.join(REPO, "tools", "analyze", "baseline.json")))
+    fresh = [f for f in findings if f.key() not in baseline]
+    assert fresh == [], fresh

@@ -422,7 +422,16 @@ def test_jit_cache_bounded_by_buckets_under_random_lengths():
     """Acceptance (DESIGN.md §12): with prefill bucketing, ≥50 random
     prompt lengths compile at most len(buckets) admission programs
     (every admission shape is (B, bucket)), and the streams stay
-    bit-identical to the unbucketed engine."""
+    bit-identical to the unbucketed engine.  The measured shape set is
+    also cross-checked against the static analyzer's recompile-budget
+    prediction (tools/analyze/recompile.py) — the two models of the
+    admission jit cache must agree."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from tools.analyze.recompile import budget_for, predict_prefill_shapes
+
     cfg, params = _setup()
     buckets = (8, 16, 32, 64)
     rng = np.random.default_rng(6)
@@ -449,6 +458,32 @@ def test_jit_cache_bounded_by_buckets_under_random_lengths():
     assert len(shapes) <= len(buckets), shapes
     # fixed group size: every admission pass is (B, bucket)
     assert all(g == 2 and s in buckets for g, s in shapes), shapes
+
+    # static analyzer agreement: the measured compile set is contained
+    # in the prediction and bounded by the documented budget
+    predicted = predict_prefill_shapes(buckets, 2,
+                                       [len(p) for p in prompts])
+    assert shapes <= predicted, shapes - predicted
+    assert len(shapes) <= budget_for(buckets, 64)
+
+    # deterministic coverage: one solo admission per bucket makes the
+    # measured set EQUAL the static prediction, not just a subset
+    lengths = (4, 12, 20, 40)
+    eng = Engine(params, cfg, batch_slots=1, cache_len=64,
+                 buckets=buckets)
+    solo_shapes = set()
+    orig = eng._prefill
+
+    def counting(params_, toks, poss, caches, slots, valid):
+        solo_shapes.add(tuple(toks.shape))
+        return orig(params_, toks, poss, caches, slots, valid)
+
+    eng._prefill = counting
+    eng.run([Request(rid=100 + i,
+                     prompt=rng.integers(0, 64, size=(L,))
+                     .astype(np.int32), max_new_tokens=2)
+             for i, L in enumerate(lengths)])
+    assert solo_shapes == predict_prefill_shapes(buckets, 1, lengths)
 
 
 @pytest.mark.slow

@@ -1,0 +1,40 @@
+"""Repo-specific static analysis suite (DESIGN.md §15).
+
+Five passes over the serving stack's implicit contracts:
+
+1. ``trace_safety`` — host/trace confusion reachable from jax.jit roots
+2. ``shim``         — shard_map must route through distribution/context
+3. ``recompile``    — admission jit-cache budget + cache-key hazards
+4. ``concurrency``  — declared lock-protection map for the frontend
+5. ``packed``       — PackedSASPWeight/PackedFFN format invariants
+
+Run ``python -m tools.analyze [--strict] [--baseline FILE]``.
+"""
+
+from .rules import RULES, Rule, rules_for_pass, PASS_NAMES
+from .common import Finding, load_baseline, write_baseline
+
+__all__ = [
+    "RULES", "Rule", "Finding", "PASS_NAMES", "rules_for_pass",
+    "load_baseline", "write_baseline", "run_all",
+]
+
+
+def run_all(root=None, passes=None):
+    """Run the requested passes (default: all). Returns findings."""
+    from . import (concurrency, packed, recompile, shim,
+                   trace_safety)
+    from .common import REPO_ROOT
+
+    mods = {
+        "trace_safety": trace_safety,
+        "shim": shim,
+        "recompile": recompile,
+        "concurrency": concurrency,
+        "packed": packed,
+    }
+    root = root or REPO_ROOT
+    out = []
+    for name in (passes or PASS_NAMES):
+        out.extend(mods[name].run(root))
+    return out

@@ -1,0 +1,417 @@
+"""Pass 5 — packed-format invariant checker.
+
+Device-free validation of the serving containers built by
+``core.deploy`` (format spec: ``core/sparse.py`` docstrings and
+DESIGN.md §9–§10):
+
+* ``PackedSASPWeight``: kn int32 (k, n) visit lists sorted n-major,
+  every output-column block visited, dup-last-visit nnz padding
+  zero-valued, shard-local coordinates in range, shard_kind/act/bias
+  consistency, no double-counted (nonzero) visit within or across
+  shards.
+* ``PackedFFN``: jv int32 global d_ff block indices, live prefix
+  strictly increasing with a ``-1`` zero-``w2v`` padding suffix,
+  contiguous shard partitioning with no duplicated live visit, whole
+  (unsharded) b2.
+
+The validators run on concrete containers with plain numpy (no jit, no
+accelerator) so tests and load-time checks can call them directly:
+``validate_packed_weight`` / ``validate_packed_ffn`` /
+``validate_params_tree``.  The analyzer pass (:func:`run`) exercises
+the ``core/deploy.py`` call sites: it builds a tiny pruned model,
+deploys it at several (tp, quantize, fuse_ffn) points, reshards it, and
+validates every container plus cross-deployment visit-count
+conservation.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .common import Finding, REPO_ROOT
+from .rules import PACK_CONSERVE, PACK_DTYPE, PACK_KIND, PACK_PAD
+
+DEPLOY_REL = "src/repro/core/deploy.py"
+
+
+# ---------------------------------------------------------------------------
+# runtime validators (device-free; importable by tests and load paths)
+# ---------------------------------------------------------------------------
+
+def _flat_lists(arr: np.ndarray, list_ndim: int) -> np.ndarray:
+    """Collapse any leading (layer/shard) axes: (..., *list_dims) ->
+    (prod(leading), *list_dims)."""
+    lead = arr.shape[: arr.ndim - list_ndim]
+    n = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    return arr.reshape((n,) + arr.shape[arr.ndim - list_ndim:])
+
+
+def validate_packed_weight(pw, name: str = "weight") -> List[Tuple[str, str]]:
+    """Validate one PackedSASPWeight. Returns [(rule_id, message)]."""
+    errs: List[Tuple[str, str]] = []
+
+    def err(rule: str, msg: str) -> None:
+        errs.append((rule, "%s: %s" % (name, msg)))
+
+    vals = np.asarray(pw.vals)
+    kn = np.asarray(pw.kn)
+    K, N = pw.shape
+    bk, bn = pw.block
+    tp = int(pw.shards)
+
+    # -- dtypes -------------------------------------------------------------
+    if kn.dtype != np.int32:
+        err(PACK_DTYPE, "kn block table dtype %s, want int32" % kn.dtype)
+    if pw.scale is not None and np.asarray(pw.scale).dtype != np.float32:
+        err(PACK_DTYPE, "scale dtype %s, want float32"
+            % np.asarray(pw.scale).dtype)
+    if pw.bias is not None and np.asarray(pw.bias).dtype != np.float32:
+        err(PACK_DTYPE, "bias dtype %s, want float32"
+            % np.asarray(pw.bias).dtype)
+
+    # -- structural / shard-kind consistency --------------------------------
+    if tp > 1 and pw.shard_kind not in ("col", "row"):
+        err(PACK_KIND, "shards=%d but shard_kind=%r (want 'col'/'row')"
+            % (tp, pw.shard_kind))
+        return errs
+    if tp == 1 and pw.shard_kind is not None:
+        err(PACK_KIND, "shards=1 but shard_kind=%r (want None)"
+            % (pw.shard_kind,))
+    if tp > 1 and pw.shard_kind == "row" and pw.act is not None:
+        err(PACK_KIND, "row-sharded container carries act=%r "
+            "(nonlinear epilogue on partial sums)" % (pw.act,))
+    if vals.ndim != kn.ndim + 1:
+        err(PACK_KIND, "vals ndim %d inconsistent with kn ndim %d"
+            % (vals.ndim, kn.ndim))
+        return errs
+    if vals.shape[-2:] != (bk, bn):
+        err(PACK_KIND, "vals block dims %s != declared block %s"
+            % (vals.shape[-2:], (bk, bn)))
+        return errs
+    if kn.shape[-2] != 2 or kn.shape[-1] != vals.shape[-3]:
+        err(PACK_KIND, "kn shape %s inconsistent with vals %s"
+            % (kn.shape, vals.shape))
+        return errs
+    if tp > 1 and (vals.ndim < 4 or vals.shape[-4] != tp):
+        err(PACK_KIND, "shards=%d but vals shard axis is %s"
+            % (tp, vals.shape))
+        return errs
+    if pw.bias is not None:
+        b = np.asarray(pw.bias)
+        if tp > 1 and pw.shard_kind == "col":
+            if b.shape[-2:] != (tp, N // tp):
+                err(PACK_KIND, "col-sharded bias shape %s, want "
+                    "(..., %d, %d)" % (b.shape, tp, N // tp))
+        elif b.shape[-1] != N:
+            err(PACK_KIND, "bias shape %s, want (..., %d)" % (b.shape, N))
+
+    # -- per-(layer, shard) visit lists -------------------------------------
+    KB, NB = K // bk, N // bn
+    if tp > 1 and pw.shard_kind == "col":
+        KB_l, NB_l = KB, NB // tp
+    elif tp > 1:
+        KB_l, NB_l = KB // tp, NB
+    else:
+        KB_l, NB_l = KB, NB
+
+    flat_kn = _flat_lists(kn, 2)            # (G, 2, nnz)
+    flat_v = _flat_lists(vals, 3)           # (G, nnz, bk, bn)
+    n_lists = flat_kn.shape[0]
+    shard_of = (lambda g: g % tp) if tp > 1 else (lambda g: 0)
+
+    live_global: Dict[int, set] = {}
+    for g in range(n_lists):
+        ks, ns = flat_kn[g, 0], flat_kn[g, 1]
+        nonzero = np.any(flat_v[g] != 0, axis=(1, 2))
+        where = "list %d" % g
+        if ks.min(initial=0) < 0 or ks.max(initial=0) >= KB_l:
+            err(PACK_PAD, "%s: k coords outside [0, %d)" % (where, KB_l))
+            continue
+        if ns.min(initial=0) < 0 or ns.max(initial=0) >= NB_l:
+            err(PACK_PAD, "%s: n coords outside [0, %d)" % (where, NB_l))
+            continue
+        # n-major sort: (n, k) lexicographically non-decreasing
+        key = ns.astype(np.int64) * (KB_l + 1) + ks
+        if np.any(np.diff(key) < 0):
+            err(PACK_PAD, "%s: visits not sorted n-major by (n, k)"
+                % where)
+        if set(np.unique(ns)) != set(range(NB_l)):
+            err(PACK_PAD, "%s: output blocks without a visit "
+                "(flush coverage broken)" % where)
+        # dup-last-visit padding: a visit repeating its predecessor's
+        # coords must be zero-valued
+        dup = (np.diff(ks) == 0) & (np.diff(ns) == 0)
+        bad_pad = dup & nonzero[1:]
+        if np.any(bad_pad):
+            err(PACK_PAD, "%s: duplicate-coordinate visit carries "
+                "nonzero values (padding must be zero)" % where)
+        # conservation within the list: each (k, n) contributes at most
+        # one nonzero block
+        pairs = key[nonzero]
+        if len(pairs) != len(np.unique(pairs)):
+            err(PACK_CONSERVE, "%s: (k, n) block double-counted within "
+                "a visit list" % where)
+        # global coordinates for cross-shard conservation
+        s = shard_of(g)
+        layer = g // tp if tp > 1 else g
+        if tp > 1 and pw.shard_kind == "col":
+            gk, gn = ks, ns + s * NB_l
+        elif tp > 1:
+            gk, gn = ks + s * KB_l, ns
+        else:
+            gk, gn = ks, ns
+        gset = live_global.setdefault(layer, set())
+        for k_, n_ in zip(gk[nonzero].tolist(), gn[nonzero].tolist()):
+            if (k_, n_) in gset:
+                err(PACK_CONSERVE, "layer %d: block (k=%d, n=%d) "
+                    "appears nonzero in more than one shard"
+                    % (layer, k_, n_))
+            gset.add((k_, n_))
+    return errs
+
+
+def live_visit_sets(pw) -> Dict[int, set]:
+    """Per-layer set of GLOBAL (k, n) coordinates of nonzero visits —
+    the conserved quantity across shardings of the same weight."""
+    vals = np.asarray(pw.vals)
+    kn = np.asarray(pw.kn)
+    tp = int(pw.shards)
+    K, N = pw.shape
+    bk, bn = pw.block
+    KB, NB = K // bk, N // bn
+    flat_kn = _flat_lists(kn, 2)
+    flat_v = _flat_lists(vals, 3)
+    out: Dict[int, set] = {}
+    for g in range(flat_kn.shape[0]):
+        s = g % tp if tp > 1 else 0
+        layer = g // tp if tp > 1 else g
+        ks, ns = flat_kn[g, 0].copy(), flat_kn[g, 1].copy()
+        if tp > 1 and pw.shard_kind == "col":
+            ns = ns + s * (NB // tp)
+        elif tp > 1:
+            ks = ks + s * (KB // tp)
+        nonzero = np.any(flat_v[g] != 0, axis=(1, 2))
+        out.setdefault(layer, set()).update(
+            zip(ks[nonzero].tolist(), ns[nonzero].tolist()))
+    return out
+
+
+def validate_packed_ffn(pf, name: str = "ffn") -> List[Tuple[str, str]]:
+    """Validate one PackedFFN. Returns [(rule_id, message)]."""
+    errs: List[Tuple[str, str]] = []
+
+    def err(rule: str, msg: str) -> None:
+        errs.append((rule, "%s: %s" % (name, msg)))
+
+    w1v = np.asarray(pf.w1v)
+    w2v = np.asarray(pf.w2v)
+    tp = int(pf.shards)
+    FB = pf.d_ff // pf.block_f
+
+    if pf.jv is None:
+        err(PACK_DTYPE, "jv global-visit-index table missing")
+        return errs
+    jv = np.asarray(pf.jv)
+    if jv.dtype != np.int32:
+        err(PACK_DTYPE, "jv dtype %s, want int32" % jv.dtype)
+    for sname in ("s1", "s3", "s2"):
+        s = getattr(pf, sname)
+        if s is not None and np.asarray(s).dtype != np.float32:
+            err(PACK_DTYPE, "%s dtype %s, want float32"
+                % (sname, np.asarray(s).dtype))
+
+    has_shard = tp > 1
+    layer_axes = w1v.ndim - 3 - (1 if has_shard else 0)
+    if layer_axes not in (0, 1):
+        err(PACK_KIND, "w1v ndim %d inconsistent with shards=%d"
+            % (w1v.ndim, tp))
+        return errs
+    if has_shard and w1v.shape[layer_axes] != tp:
+        err(PACK_KIND, "shards=%d but w1v shard axis is %s"
+            % (tp, w1v.shape))
+        return errs
+    b2 = np.asarray(pf.b2)
+    if b2.ndim != layer_axes + 1 or b2.shape[-1] != pf.d_model:
+        err(PACK_KIND, "b2 shape %s, want whole (unsharded) "
+            "(..., %d) added once after the reduction"
+            % (b2.shape, pf.d_model))
+    if jv.shape != w1v.shape[:-2]:
+        err(PACK_KIND, "jv shape %s inconsistent with w1v %s"
+            % (jv.shape, w1v.shape))
+        return errs
+
+    flat_jv = _flat_lists(jv, 1)            # (G, nv)
+    flat_w2 = _flat_lists(w2v, 3)           # (G, nv, bf, d)
+    for g in range(flat_jv.shape[0]):
+        j = flat_jv[g]
+        where = "list %d" % g
+        if j.min(initial=-1) < -1 or j.max(initial=-1) >= FB:
+            err(PACK_PAD, "%s: jv outside [-1, %d)" % (where, FB))
+            continue
+        live = j >= 0
+        # -1 entries are padding and must form a suffix
+        if not live.all():
+            first_pad = int(np.argmax(~live))
+            if np.any(live[first_pad:]):
+                err(PACK_PAD, "%s: live visit after jv=-1 padding"
+                    % where)
+        lj = j[live]
+        if np.any(np.diff(lj) <= 0):
+            err(PACK_PAD, "%s: live jv not strictly increasing"
+                % where)
+        pad_nonzero = np.any(flat_w2[g][~live] != 0)
+        if pad_nonzero:
+            err(PACK_PAD, "%s: jv=-1 padding visit has nonzero w2v "
+                "(would contribute to the output)" % where)
+        if has_shard:
+            s = g % tp
+            fs = FB // tp
+            if lj.size and (lj.min() < s * fs or lj.max() >= (s + 1) * fs):
+                err(PACK_CONSERVE, "%s: shard %d carries d_ff blocks "
+                    "outside its contiguous range [%d, %d)"
+                    % (where, s, s * fs, (s + 1) * fs))
+    # cross-shard conservation: a d_ff block visited by 2 shards would
+    # be down-projected twice
+    if has_shard:
+        n_layers = flat_jv.shape[0] // tp
+        for layer in range(n_layers):
+            seen: set = set()
+            for s in range(tp):
+                for v in flat_jv[layer * tp + s]:
+                    if v < 0:
+                        continue
+                    if v in seen:
+                        err(PACK_CONSERVE, "layer %d: d_ff block %d "
+                            "visited by more than one shard"
+                            % (layer, int(v)))
+                    seen.add(int(v))
+    return errs
+
+
+def live_ffn_sets(pf) -> Dict[int, set]:
+    """Per-layer set of live global d_ff block indices."""
+    jv = np.asarray(pf.jv)
+    tp = int(pf.shards)
+    flat = _flat_lists(jv, 1)
+    out: Dict[int, set] = {}
+    for g in range(flat.shape[0]):
+        layer = g // tp if tp > 1 else g
+        j = flat[g]
+        out.setdefault(layer, set()).update(
+            int(v) for v in j[j >= 0].tolist())
+    return out
+
+
+def validate_params_tree(params) -> List[Tuple[str, str, str]]:
+    """Walk a deployed param tree; validate every packed container.
+    Returns [(keypath, rule_id, message)]."""
+    import jax
+    from repro.core.sparse import PackedFFN, PackedSASPWeight
+
+    is_packed = lambda x: isinstance(x, (PackedSASPWeight, PackedFFN))
+    leaves = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_packed)[0]
+    out: List[Tuple[str, str, str]] = []
+    for path, leaf in leaves:
+        if not is_packed(leaf):
+            continue
+        key = jax.tree_util.keystr(path)
+        if isinstance(leaf, PackedSASPWeight):
+            errs = validate_packed_weight(leaf, name=key)
+        else:
+            errs = validate_packed_ffn(leaf, name=key)
+        out.extend((key, rule, msg) for rule, msg in errs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analyzer pass: exercise core/deploy.py call sites
+# ---------------------------------------------------------------------------
+
+def _deploy_line(root: str, pattern: str = "def deploy_packed") -> int:
+    path = os.path.join(root, DEPLOY_REL)
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            for i, line in enumerate(fh, 1):
+                if line.startswith(pattern):
+                    return i
+    except OSError:
+        pass
+    return 1
+
+
+def run(root: str = REPO_ROOT) -> List[Finding]:
+    import dataclasses
+
+    from repro.configs import SASPConfig, get_config, reduced
+    from repro.core.deploy import deploy_packed, reshard_packed
+    from repro.core.pruning import prune_params
+    from repro.core.sparse import PackedFFN, PackedSASPWeight
+    from repro.models import lm
+    import jax
+
+    line = _deploy_line(root)
+    findings: List[Finding] = []
+
+    def emit(rule: str, msg: str) -> None:
+        findings.append(Finding(rule, DEPLOY_REL, line, msg))
+
+    sasp = SASPConfig(enabled=True, block_k=16, block_n=16,
+                      sparsity=0.5, scope="all")
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64),
+        sasp=sasp)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    pruned, _ = prune_params(params, sasp)
+
+    deploys = {
+        "tp=1": deploy_packed(pruned, cfg, fuse_ffn=True)[0],
+        "tp=2": deploy_packed(pruned, cfg, fuse_ffn=True, tp=2)[0],
+        "tp=2,unfused": deploy_packed(pruned, cfg, fuse_ffn=False,
+                                      tp=2)[0],
+        "tp=1,int8": deploy_packed(pruned, cfg, quantize=True)[0],
+    }
+    deploys["reshard 1->2"] = reshard_packed(deploys["tp=1"], cfg, tp=2)
+    deploys["reshard 2->1"] = reshard_packed(deploys["tp=2"], cfg, tp=1)
+
+    for tag, tree in deploys.items():
+        for key, rule, msg in validate_params_tree(tree):
+            emit(rule, "[deploy %s] %s %s" % (tag, key, msg))
+
+    # cross-deployment visit-count conservation (fp32 deploys): the set
+    # of live (k, n) / d_ff blocks per layer must be identical however
+    # the schedule is sharded.
+    def packed_by_key(tree):
+        is_packed = lambda x: isinstance(
+            x, (PackedSASPWeight, PackedFFN))
+        out = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                tree, is_leaf=is_packed)[0]:
+            if is_packed(leaf):
+                out[jax.tree_util.keystr(path)] = leaf
+        return out
+
+    ref = packed_by_key(deploys["tp=1"])
+    for tag in ("tp=2", "reshard 1->2", "reshard 2->1"):
+        other = packed_by_key(deploys[tag])
+        for key, leaf in ref.items():
+            if key not in other:
+                emit(PACK_CONSERVE, "[deploy %s] container %s missing "
+                     "vs tp=1 deploy" % (tag, key))
+                continue
+            if isinstance(leaf, PackedSASPWeight):
+                a, b = live_visit_sets(leaf), live_visit_sets(other[key])
+            else:
+                a, b = live_ffn_sets(leaf), live_ffn_sets(other[key])
+            if a != b:
+                lost = {k: sorted(v - b.get(k, set()))[:4]
+                        for k, v in a.items() if v - b.get(k, set())}
+                extra = {k: sorted(b.get(k, set()) - v)[:4]
+                         for k, v in a.items() if b.get(k, set()) - v}
+                emit(PACK_CONSERVE,
+                     "[deploy %s] %s live visits not conserved vs tp=1 "
+                     "(lost=%s extra=%s)" % (tag, key, lost, extra))
+    return findings

@@ -1,0 +1,333 @@
+"""Pass 3 — recompile-budget checker.
+
+The serving engine's jitted admission is only bounded because prefill
+shapes are bucketed (DESIGN.md §12): with a bucket table the admission
+pass always runs at ``(batch_slots, bucket)`` shapes, so the jit cache
+holds at most ``len(buckets)`` prefill programs plus one exact-shape
+program per tail length beyond the largest bucket, and exactly one
+decode program.  This pass:
+
+* sweeps the config space reachable from ``launch/serve.py`` flag
+  domains (bucket tables × slots × mesh shapes, defaults parsed out of
+  the argparse AST so flag changes are tracked),
+* predicts the distinct abstract-signature set with the PRODUCTION
+  bucketing code (``Engine._bucket_len`` on a shell instance — no
+  parallel reimplementation that could drift),
+* validates every predicted signature by abstract evaluation
+  (``jax.eval_shape`` on ``lm.prefill``/``lm.decode_step`` with
+  abstract params — no device, no compile), and
+* emits RECOMPILE-BUDGET when the predicted distinct-signature count
+  exceeds the documented budget.
+
+It also AST-scans for jit-cache-key hazards: JIT-CLOSURE (a jitted
+lambda/closure reading ``self.<attr>`` — baked at trace time, silently
+stale after mutation; the repo convention is ``jax.jit(partial(f,
+static...))`` with explicit bound args) and JIT-STATIC-UNHASHABLE
+(list/dict/set literals passed in static argument positions).
+
+``predict_prefill_shapes`` / ``budget_for`` are importable by tests so
+the PR-4 jit-cache-bound test can assert the measured compile count
+agrees with this static prediction.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .common import Finding, Module, dotted_name, relpath, REPO_ROOT
+from .rules import JIT_CLOSURE, JIT_STATIC_UNHASHABLE, RECOMPILE_BUDGET
+
+LAUNCH_REL = "src/repro/launch/serve.py"
+ENGINE_REL = "src/repro/serve/engine.py"
+
+
+# ---------------------------------------------------------------------------
+# static prediction (shared with tests)
+# ---------------------------------------------------------------------------
+
+def predict_prefill_shapes(buckets: Optional[Sequence[int]],
+                           batch_slots: int,
+                           lengths: Sequence[int]) -> Set[Tuple[int, int]]:
+    """Distinct (rows, padded_len) admission signatures the Engine can
+    compile for prompts of the given lengths, using the production
+    bucketing code path (``Engine._bucket_len``).
+
+    With buckets, every group admission pads to all ``batch_slots`` rows
+    and the group max length rounds up to a bucket, so the signature for
+    a group is ``(B, bucket_len(max lens))`` — and since the group max
+    is itself one of the lengths, the set over singleton lengths covers
+    every reachable group shape.  Without buckets shapes are exact and
+    unbounded; callers get one signature per distinct length (solo
+    admissions, rows=1) as a lower bound.
+    """
+    from repro.serve.engine import Engine
+
+    if not buckets:
+        return {(1, int(L)) for L in lengths}
+    shell = Engine.__new__(Engine)           # no params/caches needed
+    shell.buckets = tuple(sorted({int(b) for b in buckets}))
+    return {(int(batch_slots), Engine._bucket_len(shell, int(L)))
+            for L in lengths}
+
+
+def budget_for(buckets: Optional[Sequence[int]], cache_len: int) -> int:
+    """Documented admission-program budget: one program per bucket plus
+    one exact-shape program per tail length beyond the largest bucket
+    (DESIGN.md §12's 'rare tail')."""
+    if not buckets:
+        return int(cache_len)               # unbucketed: unbounded-ish
+    bs = sorted({int(b) for b in buckets})
+    tail = max(0, int(cache_len) - bs[-1])
+    return len(bs) + tail
+
+
+# ---------------------------------------------------------------------------
+# launch flag-domain extraction (argparse AST)
+# ---------------------------------------------------------------------------
+
+def _flag_defaults(root: str) -> Dict[str, object]:
+    """Pull add_argument defaults for the flags that shape the jit
+    cache out of launch/serve.py without importing it."""
+    path = os.path.join(root, LAUNCH_REL)
+    out: Dict[str, object] = {"--slots": 4, "--cache-len": 256}
+    try:
+        tree = ast.parse(open(path, "r", encoding="utf-8").read())
+    except OSError:
+        return out
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)):
+            continue
+        flag = node.args[0].value
+        if flag not in ("--slots", "--cache-len"):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "default" and isinstance(kw.value, ast.Constant):
+                out[flag] = kw.value.value
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jit-cache-key hazard AST scan
+# ---------------------------------------------------------------------------
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = dotted_name(node.func)
+    return name is not None and (
+        name == "jax.jit" or name.endswith(".jit") and "jax" in name
+        or name == "jit")
+
+
+def _self_attr_reads(node: ast.AST) -> List[Tuple[str, int]]:
+    out = []
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"):
+            out.append((sub.attr, sub.lineno))
+    return out
+
+
+def _scan_hazards(mod: Module) -> List[Finding]:
+    findings: List[Finding] = []
+    # jitted names with static arg positions, for the unhashable check
+    static_sites: Dict[str, Tuple[Set[int], Set[str]]] = {}
+
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and _is_jit_call(node)):
+            continue
+        if not node.args:
+            continue
+        wrapped = node.args[0]
+        # JIT-CLOSURE: jitted lambda/inline def reading self state.
+        # partial(self._method, cfg, ...) is the sanctioned pattern —
+        # bound args are explicit and hashable.
+        target = wrapped
+        if (isinstance(wrapped, ast.Call)
+                and (dotted_name(wrapped.func) or "").endswith("partial")):
+            target = None                   # explicit bound args: fine
+        if isinstance(target, ast.Lambda):
+            for attr, line in _self_attr_reads(target.body):
+                findings.append(Finding(
+                    JIT_CLOSURE, mod.rel, line,
+                    "jitted lambda captures self.%s — the value is "
+                    "baked at trace time; pass it as an argument or "
+                    "partial(...) bound arg" % attr))
+        # record static argument declarations
+        nums: Set[int] = set()
+        names: Set[str] = set()
+        for kw in node.keywords:
+            if kw.arg == "static_argnums":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) and isinstance(
+                            c.value, int):
+                        nums.add(c.value)
+            elif kw.arg == "static_argnames":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) and isinstance(
+                            c.value, str):
+                        names.add(c.value)
+        if nums or names:
+            # find the name the jitted function is bound to:
+            #   g = jax.jit(f, static_argnums=...)
+            parent_name = _assigned_name(mod.tree, node)
+            if parent_name:
+                static_sites[parent_name] = (nums, names)
+
+    # JIT-STATIC-UNHASHABLE: calls passing mutable literals in static
+    # positions
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name is None:
+            continue
+        short = name.split(".")[-1]
+        if short not in static_sites:
+            continue
+        nums, names = static_sites[short]
+        for i, arg in enumerate(node.args):
+            if i in nums and isinstance(
+                    arg, (ast.List, ast.Dict, ast.Set)):
+                findings.append(Finding(
+                    JIT_STATIC_UNHASHABLE, mod.rel, arg.lineno,
+                    "unhashable %s literal in static arg %d of "
+                    "jitted %r" % (type(arg).__name__.lower(), i, short)))
+        for kw in node.keywords:
+            if kw.arg in names and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set)):
+                findings.append(Finding(
+                    JIT_STATIC_UNHASHABLE, mod.rel, kw.value.lineno,
+                    "unhashable %s literal in static arg %r of "
+                    "jitted %r" % (type(kw.value).__name__.lower(),
+                                   kw.arg, short)))
+    return findings
+
+
+def _assigned_name(tree: ast.AST, call: ast.Call) -> Optional[str]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and node.value is call:
+            t = node.targets[0]
+            if isinstance(t, ast.Name):
+                return t.id
+            if isinstance(t, ast.Attribute):
+                return t.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# pass driver
+# ---------------------------------------------------------------------------
+
+def run(root: str = REPO_ROOT,
+        files: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # ---- AST hazards over the serving layer -------------------------------
+    from .common import iter_py_files
+    scan = files if files is not None else iter_py_files(
+        root, (os.path.join("src", "repro"),))
+    for path in scan:
+        try:
+            mod = Module(path, root)
+        except SyntaxError:
+            continue
+        findings.extend(_scan_hazards(mod))
+    if files is not None:
+        return findings
+
+    # ---- abstract-signature sweep -----------------------------------------
+    import dataclasses
+    from functools import partial
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import parse_buckets
+    from repro.models import lm
+
+    defaults = _flag_defaults(root)
+    cache_len_flag = int(defaults["--cache-len"])
+    slots_flag = int(defaults["--slots"])
+    launch_line = 1
+
+    # flag domains: bucket specs a user can pass × slots × mesh shapes.
+    bucket_specs = ("4", "2", "32,64,128", None)
+    slot_domain = (1, slots_flag)
+    mesh_domain = ((1, 1), (2, 1), (1, 2))
+
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64,
+                  vocab=64)
+    aparams = jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    eval_cache_len = 64
+
+    def traceable(B: int, S: int) -> Optional[str]:
+        toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        poss = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        try:
+            jax.eval_shape(
+                lambda p, t, po: lm.prefill(
+                    p, cfg, t, positions=po,
+                    cache_len=eval_cache_len),
+                aparams, toks, poss)
+            return None
+        except Exception as e:          # abstract eval failed: report
+            return "%s: %s" % (type(e).__name__, e)
+
+    checked: Set[Tuple[int, int]] = set()
+    for spec in bucket_specs:
+        buckets = parse_buckets(spec, cache_len_flag)
+        lengths = range(1, cache_len_flag + 1)
+        budget = budget_for(buckets, cache_len_flag)
+        for slots in slot_domain:
+            shapes = predict_prefill_shapes(buckets, slots, lengths)
+            for dp, tp in mesh_domain:
+                # shapes are mesh-invariant by construction; the budget
+                # must hold at every mesh point (rank_bucket_tables
+                # gives every DP rank the same table).
+                if buckets and len(shapes) > budget:
+                    findings.append(Finding(
+                        RECOMPILE_BUDGET, LAUNCH_REL, launch_line,
+                        "--buckets %s --slots %d --mesh %d,%d: %d "
+                        "distinct admission signatures > budget %d"
+                        % (spec, slots, dp, tp, len(shapes), budget)))
+                    break
+        # abstract-eval a bounded sample of the predicted signatures
+        # (bucketed tables are small; tail/exact shapes are sampled)
+        sample = sorted(predict_prefill_shapes(
+            buckets, slots_flag, lengths))[:8]
+        for B, S in sample:
+            if (B, min(S, eval_cache_len)) in checked:
+                continue
+            S = min(S, eval_cache_len)
+            checked.add((B, S))
+            err = traceable(B, S)
+            if err:
+                findings.append(Finding(
+                    RECOMPILE_BUDGET, ENGINE_REL, 1,
+                    "admission signature (%d, %d) fails abstract "
+                    "evaluation: %s" % (B, S, err)))
+
+    # decode: exactly one signature per batch size
+    try:
+        caches = jax.eval_shape(
+            lambda p: lm.init_caches(p, cfg, slots_flag,
+                                     eval_cache_len), aparams)
+        jax.eval_shape(
+            lambda p, t, po, c: lm.decode_step(p, cfg, t, po, c),
+            aparams,
+            jax.ShapeDtypeStruct((slots_flag, 1), jnp.int32),
+            jax.ShapeDtypeStruct((slots_flag,), jnp.int32), caches)
+    except Exception as e:
+        findings.append(Finding(
+            RECOMPILE_BUDGET, ENGINE_REL, 1,
+            "decode signature fails abstract evaluation: %s: %s"
+            % (type(e).__name__, e)))
+    return findings

@@ -1,0 +1,104 @@
+"""Rule registry for the repo static analyzer.
+
+Pure data — importable without JAX so that ``tools/check_docs.py`` can
+cross-check the DESIGN.md §15 rule catalog without pulling in the
+analysis passes (which import jax lazily inside ``run()``).
+
+Severities: ``error`` findings fail ``--strict`` unless baselined;
+``warning`` findings are printed but never fail the run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    severity: str          # "error" | "warning"
+    pass_name: str         # which pass emits it
+    summary: str
+
+
+# rule_id -> Rule.  The DESIGN.md §15 catalog must list exactly these ids
+# (enforced by tools/check_docs.py::check_rule_catalog).
+RULES: Dict[str, Rule] = {}
+
+
+def _rule(rule_id: str, severity: str, pass_name: str, summary: str) -> str:
+    RULES[rule_id] = Rule(rule_id, severity, pass_name, summary)
+    return rule_id
+
+
+# ---- pass 1: trace-safety -------------------------------------------------
+TRACE_BRANCH = _rule(
+    "TRACE-BRANCH", "error", "trace_safety",
+    "Python-level branch (if/while/assert/ternary) on a traced value "
+    "inside a jit-reachable function.")
+TRACE_COERCE = _rule(
+    "TRACE-COERCE", "error", "trace_safety",
+    "Host coercion of a traced value (bool()/int()/float()/.item()/"
+    ".tolist()) inside a jit-reachable function.")
+TRACE_HOSTCALL = _rule(
+    "TRACE-HOSTCALL", "error", "trace_safety",
+    "Host callback (print/time.*/np.* on a tracer) inside a "
+    "jit-reachable function.")
+
+# ---- pass 2: shim enforcement --------------------------------------------
+SHIM_IMPORT = _rule(
+    "SHIM-IMPORT", "error", "shim",
+    "Direct jax.experimental.shard_map / jax.shard_map import or "
+    "attribute reference outside distribution/context.py.")
+
+# ---- pass 3: recompile budget --------------------------------------------
+RECOMPILE_BUDGET = _rule(
+    "RECOMPILE-BUDGET", "error", "recompile",
+    "Distinct abstract-signature count for prefill/decode/admission "
+    "exceeds the documented budget for a launch flag configuration.")
+JIT_CLOSURE = _rule(
+    "JIT-CLOSURE", "error", "recompile",
+    "jit-wrapped closure captures a mutable instance attribute "
+    "(baked at trace time; silently stale after mutation).")
+JIT_STATIC_UNHASHABLE = _rule(
+    "JIT-STATIC-UNHASHABLE", "error", "recompile",
+    "Call site passes an unhashable literal (list/dict/set) in a "
+    "static argument position of a jitted function.")
+
+# ---- pass 4: concurrency --------------------------------------------------
+LOCK_UNHELD = _rule(
+    "LOCK-UNHELD", "error", "concurrency",
+    "Shared attribute read/written on a path that does not hold its "
+    "declared owning lock.")
+LOCK_ORDER = _rule(
+    "LOCK-ORDER", "error", "concurrency",
+    "Lock acquisition order contradicts the declared hierarchy "
+    "(potential deadlock between threads).")
+
+# ---- pass 5: packed-format invariants -------------------------------------
+PACK_CONSERVE = _rule(
+    "PACK-CONSERVE", "error", "packed",
+    "Visit-count conservation violated: live visits lost, duplicated, "
+    "or double-counted across shards / reshard round-trips.")
+PACK_PAD = _rule(
+    "PACK-PAD", "error", "packed",
+    "nnz padding malformed: padding visits must be zero-valued "
+    "dup-last-visit entries (PackedFFN: jv == -1) and visit lists "
+    "must stay (n, k) n-major sorted with every output block visited.")
+PACK_DTYPE = _rule(
+    "PACK-DTYPE", "error", "packed",
+    "Block-table (kn) or global-visit-index (jv) dtype is not int32, "
+    "or scales/bias are not float32.")
+PACK_KIND = _rule(
+    "PACK-KIND", "error", "packed",
+    "shard_kind inconsistency: shards>1 without col/row kind, row "
+    "shard carrying a fused activation, or bias shape not matching "
+    "the declared sharding.")
+
+PASS_NAMES: Tuple[str, ...] = (
+    "trace_safety", "shim", "recompile", "concurrency", "packed")
+
+
+def rules_for_pass(pass_name: str) -> Tuple[Rule, ...]:
+    return tuple(r for r in RULES.values() if r.pass_name == pass_name)

@@ -1,6 +1,6 @@
 """Docs-freshness checker (CI `docs` job; also tests/test_docs.py).
 
-Two guarantees, both cheap and dependency-free:
+Three guarantees, all cheap and dependency-free:
 
 1. **Section manifest** — the `## §N Title` headings of DESIGN.md must
    match `tools/docs_manifest.json` exactly (count, order, titles).
@@ -12,6 +12,10 @@ Two guarantees, both cheap and dependency-free:
    exist, and `#anchor` fragments match a GitHub-slugified heading of
    the target document. External (http/https/mailto) links are not
    fetched.
+3. **Analyzer rule catalog** — the DESIGN.md §15 table must list
+   exactly the rule ids registered in `tools/analyze/rules.py` (pure
+   data, no JAX import), so the documented catalog cannot drift from
+   the analyzer.
 
 Exit code 0 = fresh; 1 = stale, with one line per finding.
 """
@@ -98,10 +102,37 @@ def check_links(manifest: dict) -> list:
     return errs
 
 
+def check_rule_catalog() -> list:
+    """DESIGN.md §15's rule table must list exactly the ids registered
+    in tools/analyze/rules.py — no documented-but-unregistered rules,
+    no registered-but-undocumented ones."""
+    sys.path.insert(0, REPO)
+    from tools.analyze.rules import RULES
+
+    text = read(os.path.join(REPO, "DESIGN.md"))
+    m = re.search(r"^## §15 .*?(?=^## §|\Z)", text, re.M | re.S)
+    if m is None:
+        return ["DESIGN.md: no '## §15' section for the analyzer "
+                "rule catalog"]
+    # table rows: | `RULE-ID` | pass | ... |
+    documented = set(re.findall(r"^\|\s*`([A-Z][A-Z-]+)`\s*\|",
+                                m.group(0), re.M))
+    registered = set(RULES)
+    errs = []
+    for rid in sorted(registered - documented):
+        errs.append(f"DESIGN.md §15: registered rule {rid} missing "
+                    f"from the catalog table")
+    for rid in sorted(documented - registered):
+        errs.append(f"DESIGN.md §15: catalog lists {rid}, which is not "
+                    f"registered in tools/analyze/rules.py")
+    return errs
+
+
 def main() -> int:
     with open(MANIFEST, encoding="utf-8") as f:
         manifest = json.load(f)
-    errs = check_sections(manifest) + check_links(manifest)
+    errs = (check_sections(manifest) + check_links(manifest)
+            + check_rule_catalog())
     for e in errs:
         print(f"docs-freshness: {e}")
     if not errs:
