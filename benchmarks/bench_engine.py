@@ -483,6 +483,95 @@ def bench_engine_memory() -> List:
     return rows
 
 
+SHARE_SYS = 48                  # shared system prompt, 6 whole pages
+SHARE_SUF = 8                   # distinct per-request tail
+SHARE_REQ = 10
+
+
+def _share_requests(vocab: int) -> List[Request]:
+    """Shared-system-prompt workload: every request opens with the same
+    48-token system prompt (6 whole pages at page_len 8) and diverges
+    in an 8-token user suffix."""
+    rng = np.random.default_rng(31)
+    sys_prompt = rng.integers(0, vocab, size=(SHARE_SYS,))
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, vocab, size=(SHARE_SUF,))])
+                    .astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(SHARE_REQ)]
+
+
+def bench_engine_share() -> List:
+    """Prefix sharing (DESIGN.md §16) at the SAME fixed page budget as
+    the mem bench: a shared-system-prompt workload served with
+    ``kv_share`` off vs on. Sharing maps each later prompt's system
+    pages onto the first admission's resident pages, so prefill skips
+    those tokens entirely and admission gets cheaper at identical
+    streams. Acceptance: >=50% of prefill tokens skipped, streams
+    bit-identical to sharing off."""
+    rows = []
+    print("\n== prefix-sharing paged KV: shared system prompt at fixed "
+          f"budget ({MEM_PAGES} pages x {MEM_PAGE} tokens) ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+
+    def build(share):
+        return Engine(params0, cfg0, batch_slots=MEM_OVERSUB_SLOTS,
+                      cache_len=MEM_CACHE, kv_pages=MEM_PAGES,
+                      kv_page_len=MEM_PAGE, kv_host_pages=MEM_PAGES,
+                      kv_share=share)
+
+    def drive(share):
+        eng = build(share)
+        eng.run(_share_requests(cfg0.vocab_size))       # warm-up
+        eng = build(share)
+        for r in _share_requests(cfg0.vocab_size):
+            eng.submit(r)
+        done, conc = [], 0
+        t0 = time.perf_counter()
+        while eng.has_work():
+            done.extend(eng.step())
+            conc = max(conc, sum(r is not None for r in eng.slot_req))
+        dt = time.perf_counter() - t0
+        adm = [r.t_first - r.t_submit for r in done
+               if r.t_first is not None and r.t_submit is not None]
+        adm_ms = 1e3 * sum(adm) / max(1, len(adm))
+        toks = sum(len(r.out_tokens) for r in done)
+        streams = {r.rid: list(r.out_tokens) for r in done}
+        return streams, conc, toks / dt, adm_ms, eng
+
+    ref_streams, conc_off, tok_off, adm_off, _ = drive(False)
+    streams, conc_on, tok_on, adm_on, eng = drive(True)
+    st, mem = eng.stats, eng.memory_stats()
+    total = st["prefill_tokens"] + st["prefill_tokens_skipped"]
+    skipped_pct = 100.0 * st["prefill_tokens_skipped"] / max(1, total)
+    agree = int(streams == ref_streams)
+    ok = skipped_pct >= 50.0 and agree
+    print(f"  share off: {conc_off} concurrent, {tok_off:7.1f} tok/s, "
+          f"adm {adm_off:6.1f} ms  |  on: {conc_on} concurrent, "
+          f"{tok_on:7.1f} tok/s, adm {adm_on:6.1f} ms")
+    print(f"  prefill skipped {st['prefill_tokens_skipped']}/{total} "
+          f"tokens ({skipped_pct:.0f}%), {mem.prefix_hits} hits, "
+          f"{mem.cow_copies} COWs, streams "
+          f"{'==' if agree else '!='} "
+          f"({'OK' if ok else 'REGRESSION: share bar missed!'})")
+    rows.append(("engine/mem/share/off", 1e6 / tok_off,
+                 f"tok_s={tok_off:.2f};concurrent={conc_off};"
+                 f"admission_ms={adm_off:.2f};pages={MEM_PAGES}"))
+    rows.append(("engine/mem/share/on", 1e6 / tok_on,
+                 f"tok_s={tok_on:.2f};concurrent={conc_on};"
+                 f"admission_ms={adm_on:.2f};pages={MEM_PAGES};"
+                 f"prefix_hits={mem.prefix_hits};"
+                 f"cow_copies={mem.cow_copies};agree={agree}"))
+    rows.append(("engine/mem/share/skip", 0.0,
+                 f"skipped_pct={skipped_pct:.1f};"
+                 f"skipped={st['prefill_tokens_skipped']};"
+                 f"prefilled={st['prefill_tokens']};agree={agree}"))
+    return rows
+
+
 FE_REQ = 12
 FE_MAX_NEW = (2, 12, 4, 16, 6, 2, 10, 4)
 FE_KILL_STEP = 6                # host 0 dies this many ticks in
@@ -616,6 +705,7 @@ def bench_engine() -> List:
     rows.extend(bench_engine_load())
     rows.extend(bench_engine_qos())
     rows.extend(bench_engine_memory())
+    rows.extend(bench_engine_share())
     rows.extend(bench_engine_recovery())
     return rows
 

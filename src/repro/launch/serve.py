@@ -248,6 +248,17 @@ def main():
                     help="host-RAM spill pool size in pages (0 = no "
                          "spill; cold pages drop to re-prefill resume "
                          "under pressure instead)")
+    ap.add_argument("--kv-share", action="store_true",
+                    help="prefix sharing over the paged pool "
+                         "(DESIGN.md §16): admission maps a prompt's "
+                         "full pages onto identical already-resident "
+                         "pages (refcounted, copy-on-write) and "
+                         "prefills only the suffix; requires "
+                         "--kv-pages, incompatible with --int8-kv")
+    ap.add_argument("--kv-share-min-pages", type=int, default=1,
+                    help="minimum whole pages a prompt must match "
+                         "before sharing is taken (shorter matches "
+                         "prefill from scratch)")
     ap.add_argument("--buckets", default=None,
                     help="prefill shape bucketing: an int count builds "
                          "a geometric table up to --cache-len; "
@@ -321,6 +332,18 @@ def main():
             f"{args.kv_watermark}")
     if args.kv_pages is not None and args.kv_pages < 1:
         raise SystemExit(f"--kv-pages must be >= 1, got {args.kv_pages}")
+    if args.kv_share:
+        if args.kv_pages is None:
+            raise SystemExit("--kv-share requires --kv-pages (prefix "
+                             "sharing lives on the paged pool)")
+        if args.int8_kv:
+            raise SystemExit("--kv-share is incompatible with "
+                             "--int8-kv: suffix prefill would attend "
+                             "dequantized prefix KV and break "
+                             "bit-identity (DESIGN.md §16)")
+    if args.kv_share_min_pages < 1:
+        raise SystemExit(f"--kv-share-min-pages must be >= 1, got "
+                         f"{args.kv_share_min_pages}")
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -385,7 +408,9 @@ def main():
                 shed=args.shed, kv_pages=args.kv_pages,
                 kv_page_len=args.kv_page_len,
                 kv_watermark=args.kv_watermark,
-                kv_host_pages=args.kv_host_pool))
+                kv_host_pages=args.kv_host_pool,
+                kv_share=args.kv_share,
+                kv_share_min_pages=args.kv_share_min_pages))
         fe = ClusterFrontend(hosts, FrontendConfig(
             retries=args.retries, backoff_base=args.backoff,
             request_timeout=args.timeout,
@@ -434,7 +459,9 @@ def main():
                 shed=args.shed, kv_pages=args.kv_pages,
                 kv_page_len=args.kv_page_len,
                 kv_watermark=args.kv_watermark,
-                kv_host_pages=args.kv_host_pool))
+                kv_host_pages=args.kv_host_pool,
+                kv_share=args.kv_share,
+                kv_share_min_pages=args.kv_share_min_pages))
         t0 = time.time()
         done = drive(sched.run, sched.stream)
         dt = time.time() - t0
@@ -463,7 +490,9 @@ def main():
                      buckets=buckets, kv_pages=args.kv_pages,
                      kv_page_len=args.kv_page_len,
                      kv_watermark=args.kv_watermark,
-                     kv_host_pages=args.kv_host_pool)
+                     kv_host_pages=args.kv_host_pool,
+                     kv_share=args.kv_share,
+                     kv_share_min_pages=args.kv_share_min_pages)
         t0 = time.time()
         done = drive(eng.run, eng.stream)
         dt = time.time() - t0
@@ -472,6 +501,11 @@ def main():
             print(f"paged KV: {mem.device_pages} device pages × "
                   f"{eng.pool.page_len} tokens, {mem.spills} spills, "
                   f"{mem.faults} faults, {mem.drops} drops")
+            if args.kv_share:
+                print(f"prefix sharing: {mem.prefix_hits} hits, "
+                      f"{mem.prefix_pages_reused} pages reused, "
+                      f"{eng.stats['prefill_tokens_skipped']} prefill "
+                      f"tokens skipped, {mem.cow_copies} COW copies")
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s, "

@@ -307,6 +307,99 @@ def attn_apply_full(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Suffix prefill against resident prefix KV (prefix sharing, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def attn_apply_prefill_past(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                            positions: jnp.ndarray, past: KVCache,
+                            window) -> Tuple[jnp.ndarray, KVCache]:
+    """Prefill ONLY a prompt's suffix, attending to already-resident
+    prefix KV.
+
+    x: (B, S) suffix hidden states; positions: (B, S) absolute suffix
+    positions (pad columns < 0); past: the slot's gathered ring cache
+    (B, C, …) holding the shared prefix — every non-prefix ring slot
+    carries pos = -1 and is masked, exactly like an unwritten ring.
+    Keys are ``concat([prefix ring, fresh suffix K/V])`` with
+    ``kv_pos = concat([past.pos, positions])``: the valid keys appear
+    in the same absolute-position order as a full prefill and the
+    interleaved masked slots contribute exact zeros to the online
+    softmax (the same masked-reduction identity the left-padded and
+    bucketed prefills rest on), so suffix outputs are bit-identical to
+    the full-prompt pass. Returns (y, suffix-only cache) — the cache
+    holds ONLY the freshly computed suffix tokens (see
+    :func:`build_cache_from_suffix`), ready for a page scatter that
+    must not touch the shared prefix pages."""
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    if past.kscale is not None:
+        k_past = _dequant(past.k, past.kscale, k_new.dtype)
+        v_past = _dequant(past.v, past.vscale, v_new.dtype)
+    else:
+        k_past = past.k.astype(k_new.dtype)
+        v_past = past.v.astype(v_new.dtype)
+    k_all = jnp.concatenate([k_past, k_new], axis=1)
+    v_all = jnp.concatenate([v_past, v_new], axis=1)
+    kv_pos = jnp.concatenate(
+        [past.pos, jnp.asarray(positions, jnp.int32)], axis=1)
+    qg = q.reshape(B, S, kvh, h // kvh, hd)
+    out = attend_chunked(qg, k_all, v_all, positions, kv_pos,
+                         window=window, cap=cfg.logit_softcap)
+    out = out.reshape(B, S, h * hd).astype(x.dtype)
+    y = _proj(p, "wo", out, cfg)
+    cache = build_cache_from_suffix(k_new, v_new, past.k.shape[1],
+                                    positions, quant=cfg.kv_quant)
+    return y, cache
+
+
+def build_cache_from_suffix(k: jnp.ndarray, v: jnp.ndarray,
+                            capacity: int, positions: jnp.ndarray,
+                            quant: bool = False) -> KVCache:
+    """Ring cache holding ONLY the freshly prefilled suffix tokens.
+
+    The partial-page validity mask for suffix prefill: pad columns
+    (positions < 0) are routed to a sacrificial extra ring slot and
+    sliced off, so — unlike :func:`build_cache_from_prefill`, whose
+    pad slots ``[C - pad, C)`` are collision-free only when the valid
+    span starts at 0 — no pad write can ever land on a slot belonging
+    to the resident prefix region. Every non-suffix slot stays zeros
+    with pos = -1: the page scatter then writes pristine 'empty ring'
+    content to fresh suffix pages and the prefix pages are simply not
+    among the scatter destinations."""
+    B, S, KH, D = k.shape
+    positions = jnp.asarray(positions, jnp.int32)
+    if S > capacity:
+        k, v = k[:, -capacity:], v[:, -capacity:]
+        positions = positions[:, -capacity:]
+    valid = positions >= 0
+    cache = init_kv_cache(B, capacity + 1, KH, D, k.dtype, quant=quant)
+    slots = jnp.where(valid, positions % capacity, capacity)
+    posv = jnp.where(valid, positions, -1)
+    kz = jnp.where(valid[..., None, None], k, 0)
+    vz = jnp.where(valid[..., None, None], v, 0)
+    bidx = jnp.arange(B)[:, None]
+    trim = lambda a: None if a is None else a[:, :capacity]
+    pos = cache.pos.at[bidx, slots].set(posv)
+    if quant:
+        kq, ks = _quant_heads(kz)
+        vq, vs = _quant_heads(vz)
+        return KVCache(
+            k=trim(cache.k.at[bidx, slots].set(kq)),
+            v=trim(cache.v.at[bidx, slots].set(vq)),
+            pos=trim(pos),
+            kscale=trim(cache.kscale.at[bidx, slots].set(ks)),
+            vscale=trim(cache.vscale.at[bidx, slots].set(vs)),
+        )
+    return KVCache(
+        k=trim(cache.k.at[bidx, slots].set(kz.astype(cache.k.dtype))),
+        v=trim(cache.v.at[bidx, slots].set(vz.astype(cache.v.dtype))),
+        pos=trim(pos),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Decode (single new token against a ring cache)
 # ---------------------------------------------------------------------------
 

@@ -244,6 +244,80 @@ def _run_segments_full(params, cfg: ModelConfig, x, positions,
     return x, aux_total, tuple(all_caches) if want_cache else None
 
 
+def _apply_slot_prefill_past(sp: Dict, spec: LayerSpec, cfg: ModelConfig,
+                             x: jnp.ndarray, positions: jnp.ndarray,
+                             cache: KVCache):
+    """One layer of the suffix prefill (prefix sharing, DESIGN.md §16):
+    like :func:`_apply_slot_full` but attention reads the resident
+    prefix through ``cache`` and the returned cache holds ONLY the
+    suffix tokens. Attention-only stacks (the paged pool rejects
+    SSM/hybrid)."""
+    mixer, _, ffn_kind = spec
+    assert mixer == MIXER_ATTN, "suffix prefill is attention-only"
+    C = cache.k.shape[1]
+    S = x.shape[1]
+    h = rmsnorm_apply(sp["norm1"], x, eps=cfg.norm_eps)
+    # global layers: window > any valid delta (max is prompt_len - 1
+    # <= C - 1); the reference full prefill's S_full + 1 and this
+    # C + S + 1 are both effectively unbounded, so masks agree on
+    # every valid pair. Local layers share cfg.sliding_window exactly.
+    window = cfg.sliding_window if (
+        spec[1] == ATTN_LOCAL and cfg.sliding_window) else C + S + 1
+    y, new_cache = attn_mod.attn_apply_prefill_past(
+        sp["mixer"], cfg, h, positions, cache, window)
+    x = x + y
+    h2 = rmsnorm_apply(sp["norm2"], x, eps=cfg.norm_eps)
+    if ffn_kind == FFN_MOE:
+        y2, _ = _moe_dispatch(sp["ffn"], cfg, h2)
+    else:
+        y2 = ffn_mod.ffn_apply(sp["ffn"], cfg, h2)
+    return x + y2, new_cache
+
+
+def _run_segments_prefill_past(params, cfg: ModelConfig, x, positions,
+                               past):
+    plan = segment_plan(cfg)
+    new_caches = []
+    for seg_params, seg_past, (pattern, repeat) in zip(
+            params["segments"], past, plan):
+
+        def body(xc, inp):
+            from repro.distribution import context as dctx
+            slot_params, slot_caches = inp
+            xc = dctx.shard_batch(xc)
+            out_caches = {}
+            for slot, spec in enumerate(pattern):
+                xc, c = _apply_slot_prefill_past(
+                    slot_params[f"slot{slot}"], spec, cfg, xc,
+                    positions, slot_caches[f"slot{slot}"])
+                out_caches[f"slot{slot}"] = c
+            return xc, out_caches
+
+        body = _maybe_remat(body, cfg)
+        x, seg_new = jax.lax.scan(body, x, (seg_params, seg_past))
+        new_caches.append(seg_new)
+    return x, tuple(new_caches)
+
+
+def prefill_with_past(params, cfg: ModelConfig, tokens, positions, past):
+    """Suffix-only prefill for prefix sharing (DESIGN.md §16).
+
+    tokens: (B, S) the SUFFIX of each prompt, left-padded; positions:
+    (B, S) absolute positions (pads < 0); past: ring caches (the
+    gather of each request's matched prefix pages — all other ring
+    slots hold pos = -1 and mask out). Returns (last-token logits
+    (B, 1, V), suffix-only caches) — the caches scatter to the fresh
+    suffix pages and must never touch the shared prefix pages."""
+    x = _embed_in(params, cfg, tokens, None)
+    positions = jnp.asarray(positions, jnp.int32)
+    x, caches = _run_segments_prefill_past(params, cfg, x, positions,
+                                           past)
+    logits = logits_fn(params, cfg, x[:, -1:])
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits, caches
+
+
 def _run_segments_decode(params, cfg: ModelConfig, x, pos, caches):
     plan = segment_plan(cfg)
     new_caches = []

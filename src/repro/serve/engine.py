@@ -184,13 +184,16 @@ class Engine:
                  kv_pages: Optional[int] = None,
                  kv_page_len: Optional[int] = None,
                  kv_watermark: float = 1.0,
-                 kv_host_pages: int = 0):
+                 kv_host_pages: int = 0,
+                 kv_share: bool = False,
+                 kv_share_min_pages: int = 1):
         assert admission in ADMISSION_MODES, admission
         self.admission = admission
         self.rank = rank
         self.dead = False               # set by the scheduler on a raise
         self.stats = {"decode_steps": 0, "admitted": 0,
-                      "prefill_tokens": 0, "generated_tokens": 0,
+                      "prefill_tokens": 0, "prefill_tokens_skipped": 0,
+                      "generated_tokens": 0,
                       "continuous_refills": 0, "preemptions": 0,
                       "resumes": 0, "failed": 0, "requeued": 0,
                       "cancelled": 0, "deaths": 0}
@@ -221,13 +224,20 @@ class Engine:
         # paged KV (DESIGN.md §13): shared page pool + block tables
         # instead of per-slot contiguous rings
         self.pool = None
+        if kv_share and not kv_pages:
+            raise ValueError(
+                "kv_share requires the paged KV pool (kv_pages) — "
+                "contiguous rings have no pages to share")
+        self.kv_share_min_pages = max(1, int(kv_share_min_pages))
+        # rid -> prefix tokens matched at admission (prefill skips them)
+        self._shared_tokens: dict = {}
         if kv_pages:
             from repro.serve.memory import PagedKVPool
             self.pool = PagedKVPool(
                 params, cfg, cache_len=cache_len,
                 device_pages=kv_pages, page_len=kv_page_len,
                 watermark=kv_watermark, host_pages=kv_host_pages,
-                mesh=mesh, profile=profile)
+                mesh=mesh, profile=profile, share=kv_share)
             self.caches = None
         else:
             self.caches = lm.init_caches(params, cfg, batch_slots,
@@ -250,6 +260,8 @@ class Engine:
                 self.pool.page_len))
             self._prefill = jax.jit(partial(
                 self._paged_prefill_write, cfg, cache_len))
+            self._prefill_past = jax.jit(partial(
+                self._paged_prefill_past_write, cfg))
         else:
             self._decode = jax.jit(partial(self._decode_step, cfg))
             self._prefill = jax.jit(partial(self._prefill_and_write, cfg,
@@ -317,6 +329,22 @@ class Engine:
         logits, caches1 = lm.prefill(params, cfg, tokens=toks,
                                      cache_len=cache_len,
                                      positions=poss, uniform_cache=True)
+        return logits[:, 0], kvmem.scatter_prefill_pages(data, caches1,
+                                                         dests)
+
+    @staticmethod
+    def _paged_prefill_past_write(cfg, params, toks, poss, data, past_bt,
+                                  dests):
+        """Jitted suffix-only admission (prefix sharing, DESIGN.md §16):
+        gather each request's MATCHED prefix pages into a ring (the
+        suffix region reads the zero page — masked emptiness), prefill
+        just the suffix against it, scatter the fresh suffix pages.
+        ``dests`` maps the shared prefix pages to the trash page, so
+        the scatter can never touch a page with refcount > 1."""
+        from repro.serve import memory as kvmem
+        past = kvmem.gather_block_tables(data, past_bt)
+        logits, caches1 = lm.prefill_with_past(params, cfg, toks, poss,
+                                               past)
         return logits[:, 0], kvmem.scatter_prefill_pages(data, caches1,
                                                          dests)
 
@@ -390,11 +418,18 @@ class Engine:
         spilling cold pages to host RAM. The scheduler's spill-aware
         routing steers traffic away from ranks whose headroom cannot
         cover a request's prefill (they are mid-spill or about to be).
-        None for contiguous engines: no paging, no spill pressure."""
+        None for contiguous engines: no paging, no spill pressure.
+
+        *Effective* headroom under prefix sharing: physical residency
+        already counts a shared page ONCE however many block tables
+        reference it, and rc-0 cached pages are reclaimable without any
+        spill (eviction just forgets regenerable prefix KV), so they
+        count as headroom too."""
         if self.pool is None:
             return None
         st = self.pool.stats()
-        return max(0, st.watermark - st.device_used) * self.pool.page_len
+        free = max(0, st.watermark - st.device_used) + st.cached_pages
+        return free * self.pool.page_len
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None
@@ -483,16 +518,44 @@ class Engine:
         self.pos[slot] = req._resume_pos
         self._finish_resume(slot, req)
 
+    def _page_keys(self, seq: np.ndarray) -> Tuple[bytes, ...]:
+        """Exact-content radix keys: one per FULL page of ``seq`` (the
+        partial trailing page is always private — the ISSUE's
+        'partial-page boundary re-prefilled into a fresh page').
+        Empty when sharing is off or the sequence overflows the ring
+        (wrapped pages hold mixed-position content — not indexable)."""
+        if self.pool is None or not self.pool.share:
+            return ()
+        if len(seq) > self.cache_len:
+            return ()
+        L = self.pool.page_len
+        a = np.ascontiguousarray(np.asarray(seq, np.int32))
+        return tuple(a[j * L:(j + 1) * L].tobytes()
+                     for j in range(len(seq) // L))
+
     def _paged_reserve(self, req: Request) -> Tuple[bool, str]:
         """Acquire the pages an admission needs. Returns (ok, mode):
         mode 'resume' re-attached a preempted request's live pages
         (skip prefill entirely), 'prefill' allocated pages for a fresh
         prompt or a re-prefill resume (dropped/never-kept pages). Not
-        ok = pool exhausted; the caller defers the request."""
+        ok = pool exhausted; the caller defers the request.
+
+        Sharing: the prompt's full-page keys walk the radix index and
+        matched pages are mapped instead of allocated — capped so at
+        least ONE token is always prefilled (the first sampled token
+        comes from the suffix forward's last-position logits)."""
         if req._resume_pos is not None and self.pool.has_pages(req.rid):
             return self.pool.resume(req.rid), "resume"
-        n = self.pool.pages_for(len(self._prefill_tokens(req)))
-        return self.pool.admit(req.rid, n), "prefill"
+        seq = self._prefill_tokens(req)
+        n = self.pool.pages_for(len(seq))
+        keys = self._page_keys(seq)
+        if keys:
+            keys = keys[:(len(seq) - 1) // self.pool.page_len]
+        ok, m = self.pool.admit_prefix(
+            req.rid, n, keys, min_pages=self.kv_share_min_pages)
+        if ok and m:
+            self._shared_tokens[req.rid] = m * self.pool.page_len
+        return ok, "prefill"
 
     def _prefill_tokens(self, req: Request) -> np.ndarray:
         """The token sequence admission must prefill: the prompt, or for
@@ -539,6 +602,7 @@ class Engine:
         prompts longer than the cache."""
         toks = jnp.asarray(seq[None, :], jnp.int32)
         logits_last = self._run_prefill(toks, None, [slot], [req], None)
+        self._register_prompt([req], [seq])
         assert self.slot_req[slot] is None, \
             f"prefill into occupied slot {slot}"
         self.pos[slot] = len(seq)
@@ -582,6 +646,7 @@ class Engine:
         logits_last = self._run_prefill(jnp.asarray(toks),
                                         jnp.asarray(poss), all_slots,
                                         reqs, valid)
+        self._register_prompt(reqs, seqs)
         temps = np.zeros((Gp,), np.float32)
         for g, r in enumerate(reqs):
             temps[g] = r.temperature
@@ -596,6 +661,75 @@ class Engine:
             if req._resume_pos is not None:
                 # re-prefill resume: the sampled token is discarded (the
                 # request's last token was emitted before preemption)
+                self._finish_resume(slot, req)
+                continue
+            self._emit(req, nxt)
+            req.t_first = now
+            if self._retired_at_admission(req):
+                continue
+            req.status = "running"
+            self.slot_req[slot] = req
+
+    def _register_prompt(self, reqs: List[Request],
+                         seqs: List[np.ndarray]):
+        """Publish freshly prefilled full prompt pages into the radix
+        index. Runs right after the prefill pass and BEFORE any
+        retire-at-admission free, so even a prompt that EOSes
+        immediately seeds the cache (its pages turn cached, not free).
+        No-op with sharing off."""
+        if self.pool is None or not self.pool.share:
+            return
+        for r, s in zip(reqs, seqs):
+            self.pool.register_prefix(r.rid, self._page_keys(s))
+
+    def _prefill_group_shared(self, slots: List[int],
+                              reqs: List[Request],
+                              seqs: List[np.ndarray]):
+        """Suffix-only batched prefill for admissions whose prompt
+        matched shared prefix pages: row g holds ``seq[skip_g:]``
+        left-padded, with ABSOLUTE positions (pads carry -1 — masked
+        as keys, routed to the sacrificial slot by
+        ``build_cache_from_suffix``). The jitted pass gathers each
+        row's matched pages as its past ring and scatters only the
+        fresh suffix pages back (shared pages are never written)."""
+        L = self.pool.page_len
+        skips = [self._shared_tokens[r.rid] for r in reqs]
+        sufs = [np.asarray(s[m:], np.int32)
+                for s, m in zip(seqs, skips)]
+        lens = [len(s) for s in sufs]
+        G = len(reqs)
+        S = max(lens)
+        nrows = G
+        if self.buckets:
+            S = self._bucket_len(S)
+            nrows = self.B
+        toks = np.zeros((nrows, S), np.int32)
+        poss = np.full((nrows, S), -1, np.int32)
+        for g, suf in enumerate(sufs):
+            pad = S - lens[g]
+            toks[g, pad:] = suf
+            poss[g, pad:] = np.arange(skips[g], skips[g] + lens[g])
+        rids = [r.rid for r in reqs]
+        skip_pages = [m // L for m in skips]
+        past_bt = self.pool.prefix_table(rids, skip_pages, nrows)
+        dests = self.pool.dest_table(rids, nrows,
+                                     skip_pages=skip_pages)
+        logits_last, self.pool.data = self._prefill_past(
+            self.params, jnp.asarray(toks), jnp.asarray(poss),
+            self.pool.data, jnp.asarray(past_bt), jnp.asarray(dests))
+        self._register_prompt(reqs, seqs)
+        temps = np.zeros((nrows,), np.float32)
+        for g, r in enumerate(reqs):
+            temps[g] = r.temperature
+        sampled = self._sample(logits_last, self._next_key(),
+                               jnp.asarray(temps))
+        nxts = [int(t) for t in np.asarray(sampled)[:G]]
+        now = time.monotonic()
+        for slot, req, nxt, seq in zip(slots, reqs, nxts, seqs):
+            assert self.slot_req[slot] is None, \
+                f"prefill into occupied slot {slot}"
+            self.pos[slot] = len(seq)       # FULL prompt length
+            if req._resume_pos is not None:
                 self._finish_resume(slot, req)
                 continue
             self._emit(req, nxt)
@@ -654,17 +788,33 @@ class Engine:
             self.stats["admitted"] += len(popped)
             if not pending:
                 return
-            slots = [s for s, _ in pending]
-            reqs = [r for _, r in pending]
-            seqs = [self._prefill_tokens(r) for r in reqs]
-            self.stats["prefill_tokens"] += sum(len(s) for s in seqs)
-            if (self._attn_only
-                    and max(len(s) for s in seqs) <= self.cache_len
-                    and (len(reqs) > 1 or self.buckets)):
-                self._prefill_group(slots, reqs, seqs)
-            else:
-                for slot, req, seq in zip(slots, reqs, seqs):
-                    self._prefill_into_slot(slot, req, seq)
+            # split sharing admissions (suffix-only prefill through the
+            # past-attending jit) from normal ones (unchanged path —
+            # trivially bit-identical to sharing off)
+            shared, normal = [], []
+            for slot, req in pending:
+                seq = self._prefill_tokens(req)
+                skip = self._shared_tokens.get(req.rid, 0)
+                self.stats["prefill_tokens"] += len(seq) - skip
+                self.stats["prefill_tokens_skipped"] += skip
+                (shared if skip else normal).append((slot, req, seq))
+            if shared:
+                self._prefill_group_shared(
+                    [s for s, _, _ in shared], [r for _, r, _ in shared],
+                    [q for _, _, q in shared])
+            if normal:
+                slots = [s for s, _, _ in normal]
+                reqs = [r for _, r, _ in normal]
+                seqs = [q for _, _, q in normal]
+                if (self._attn_only
+                        and max(len(s) for s in seqs) <= self.cache_len
+                        and (len(reqs) > 1 or self.buckets)):
+                    self._prefill_group(slots, reqs, seqs)
+                else:
+                    for slot, req, seq in zip(slots, reqs, seqs):
+                        self._prefill_into_slot(slot, req, seq)
+            for _, req in pending:
+                self._shared_tokens.pop(req.rid, None)
         except BaseException:
             # a raising prefill/restore must not lose the popped
             # requests: everything not yet slotted (or retired at
@@ -673,6 +823,8 @@ class Engine:
             placed = {id(r) for r in self.slot_req if r is not None}
             placed |= {id(r) for r in self._finished_at_admission}
             back = [r for r in popped if id(r) not in placed]
+            for r in popped:
+                self._shared_tokens.pop(r.rid, None)
             if self.pool is not None:
                 # unwind page state: un-prefilled admissions release
                 # their pages; unplaced page-holding resumes turn cold
@@ -699,17 +851,20 @@ class Engine:
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if self.pool is not None and active:
-            # decode growth: the page holding this step's write position
-            # must be resident BEFORE the step. A slot that cannot grow
-            # (pool exhausted, nothing cold to spill) is preempted with
-            # its pages kept — they turn cold, so some other slot's
-            # growth (or this one's later resume) can evict them.
-            # watermark >= one ring guarantees a lone slot always fits.
+            # decode growth + write rule: the page holding this step's
+            # write position must be resident AND writable (rc == 1,
+            # unregistered) BEFORE the step — a shared page is
+            # copy-on-written here, never scattered to (DESIGN.md §16).
+            # A slot that cannot grow/copy (pool exhausted, nothing
+            # cold to spill) is preempted with its pages kept — they
+            # turn cold, so some other slot's growth (or this one's
+            # later resume) can evict them. watermark >= one ring
+            # guarantees a lone slot always fits.
             C, L = self.cache_len, self.pool.page_len
             for i in list(active):
                 req = self.slot_req[i]
-                if not self.pool.ensure_page(req.rid,
-                                             (int(self.pos[i]) % C) // L):
+                if not self.pool.ensure_writable(
+                        req.rid, (int(self.pos[i]) % C) // L):
                     self.queue.insert(0, self.preempt_slot(i))
                     active.remove(i)
         if not active:

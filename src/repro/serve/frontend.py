@@ -148,7 +148,11 @@ class LocalHost:
 
     def headroom_tokens(self) -> Optional[int]:
         """Best single live rank's spill headroom — a request lands on
-        ONE rank, so the max (not the sum) decides admissibility."""
+        ONE rank, so the max (not the sum) decides admissibility.
+        With prefix sharing this is *effective* headroom: each engine
+        counts shared physical pages once and adds evictable cached
+        pages back in (DESIGN.md §16), so routing sees the capacity a
+        new request could actually claim."""
         hs = [e.route_headroom_tokens() for e in self.sched._live()]
         hs = [h for h in hs if h is not None]
         return max(hs) if hs else None

@@ -37,6 +37,24 @@ the same fallback PR 4 uses for cross-rank resume). ``MemoryStats``
 (device/host pages, spills, faults, drops, residency) is surfaced
 through ``Engine.stats["memory"]`` and the scheduler's per-rank stats.
 
+Prefix sharing (DESIGN.md §16). With ``share=True`` every physical page
+carries a refcount and FULL prompt pages are registered in a radix
+index — a trie keyed by the page's exact token bytes, so a node's depth
+pins the absolute position range and two pages share a trie path iff
+their whole token prefix matches (content addressing with no hash
+collisions). ``admit_prefix`` walks a new prompt's page keys down the
+trie and maps every hit onto the already-resident page (refcount++)
+instead of allocating, returning how many prefix pages the engine's
+prefill can skip; the partial trailing page is always private. Page
+lifecycle becomes free / **owned** (rc ≥ 1 — exactly the number of
+block-table references) / **cached** (rc == 0 but still registered:
+a freed prompt's pages stay matchable until evicted, LRU). The write
+rule: a page may be scattered to only while rc == 1 AND unregistered —
+decode copy-on-writes a shared page before the step and unregisters a
+private-but-registered one; room-making evicts cached pages first
+(free to regenerate), then spills preempted requests' *private* pages
+(shared pages never spill — a co-owner may be mid-decode), then drops.
+
 Bookkeeping and data movement are split: :class:`PageAllocator` is a
 pure host-side state machine (property-tested with hypothesis in
 ``tests/test_memory.py``) that returns *moves*; :class:`PagedKVPool`
@@ -115,6 +133,13 @@ class MemoryStats:
     spills: int              # pages spilled device -> host (cumulative)
     faults: int              # pages faulted host -> device (cumulative)
     drops: int               # preempted requests dropped to re-prefill
+    # prefix sharing (DESIGN.md §16) — all zero when share is off
+    shared_pages: int = 0    # physical pages with refcount > 1
+    cached_pages: int = 0    # rc == 0 pages retained in the radix index
+    prefix_hits: int = 0     # admissions that matched >= 1 prefix page
+    prefix_pages_reused: int = 0  # pages mapped instead of allocated
+    cow_copies: int = 0      # shared pages copied before a write
+    cache_evictions: int = 0  # cached pages reclaimed by room-making
 
     @property
     def device_free(self) -> int:
@@ -136,24 +161,43 @@ class MemoryStats:
 _Move = Tuple  # ("spill", rid, j, dev, host) | ("fault", rid, j, host, dev)
 
 
+class _RadixNode:
+    """One full page of prompt tokens in the prefix index. Children are
+    keyed by the NEXT page's exact token bytes; depth pins the absolute
+    position range, so equal keys at equal depth == equal whole prefix.
+    ``page`` is the resident device page holding this node's KV (None =
+    evicted hole; a prefix walk stops there — descendants are
+    unreachable until re-registered, which keeps matches contiguous)."""
+
+    __slots__ = ("children", "page")
+
+    def __init__(self):
+        self.children: Dict[bytes, "_RadixNode"] = {}
+        self.page: Optional[int] = None
+
+
 class PageAllocator:
     """Host-side page bookkeeping — no arrays, no jax.
 
     Tracks per-request page tables, the device/host free lists, the
-    resident/preempted split, and the high-watermark cap. Mutating ops
+    resident/preempted split, per-page refcounts + the radix prefix
+    index (``share=True``), and the high-watermark cap. Mutating ops
     return the ordered data-movement *moves* the pool must execute (or
     None when the operation cannot be satisfied). Invariants (checked
     by :meth:`check`, property-tested in tests/test_memory.py):
 
-    * every device page is free or owned by exactly one request;
+    * every device page is free, cached (rc 0 + registered), or owned;
+    * refcount of an owned page == its block-table reference count;
     * every host slot is free or owned by exactly one request;
-    * resident device pages never exceed the watermark cap;
+    * non-free device pages never exceed the watermark cap;
     * a request is resident XOR preempted; resident requests hold no
-      host (spilled) pages.
+      host (spilled) pages;
+    * spilled (host) pages are never shared and never registered.
     """
 
     def __init__(self, device_ids: Sequence[int], host_slots: int,
-                 watermark_cap: int, slot_pages: int):
+                 watermark_cap: int, slot_pages: int,
+                 share: bool = False):
         self._all_dev = sorted(int(p) for p in device_ids)
         self.free_dev: List[int] = list(self._all_dev)
         self.n_device = len(self.free_dev)
@@ -172,6 +216,18 @@ class PageAllocator:
         self.spills = 0
         self.faults = 0
         self.drops = 0
+        # prefix sharing (DESIGN.md §16). rc is maintained even with
+        # share off (every owned page at rc 1) so the invariants and
+        # the property-test machine are uniform across modes.
+        self.share = bool(share)
+        self.rc: Dict[int, int] = {}       # owned page -> #table refs
+        self.cached: List[int] = []        # rc-0 registered pages, LRU
+        self._radix = _RadixNode()         # root (empty prefix)
+        self._node_of: Dict[int, _RadixNode] = {}  # page -> its node
+        self.prefix_hits = 0
+        self.prefix_pages_reused = 0
+        self.cow = 0
+        self.evictions = 0
 
     # -- views ---------------------------------------------------------
     @property
@@ -195,65 +251,177 @@ class PageAllocator:
         return out
 
     def preempted_dev_pages(self) -> int:
-        return sum(1 for rid in self.preempted
-                   for e in self.tables[rid] if e and e[0] == "dev")
+        """Distinct physical device pages held by preempted requests
+        (a page shared across requests counts once)."""
+        return len({e[1] for rid in self.preempted
+                    for e in self.tables[rid] if e and e[0] == "dev"})
 
     def _room(self) -> int:
         """Device pages allocatable right now without spilling."""
         return min(len(self.free_dev), self.cap - self.used_dev)
 
+    def reclaimable_pages(self) -> int:
+        """Device pages room-making could release: the cached prefix
+        pages (rc 0, regenerable) plus cold (preempted) pages not
+        co-owned by a resident request — each physical page counted
+        once (the *effective* headroom view: shared residency is paid
+        for once, so it is only reclaimable once)."""
+        resident_held = {e[1] for rid in self.resident
+                         for e in self.tables[rid] if e and e[0] == "dev"}
+        cold = {e[1] for rid in self.preempted
+                for e in self.tables[rid] if e and e[0] == "dev"}
+        return len(self.cached) + len(cold - resident_held)
+
     def headroom(self) -> int:
-        """Device pages allocatable after spilling/dropping every cold
-        (preempted) page — the admission-control view of the pool."""
-        return self._room() + self.preempted_dev_pages()
+        """Device pages allocatable after evicting the prefix cache and
+        spilling/dropping every cold (preempted) page — the
+        admission-control view of the pool."""
+        return self._room() + self.reclaimable_pages()
 
     def admissible_requests(self, pages_per_req: int = 2) -> int:
         """Rough admission headroom in requests (prompt page + growth
         page); the scheduler consults this instead of raw slot count."""
         return self.headroom() // max(1, pages_per_req)
 
-    # -- room making (spill-then-drop policy) --------------------------
+    # -- refcount / radix internals ------------------------------------
+    def _ref(self, p: int):
+        """Add a table reference to page ``p`` (promoting a cached page
+        back to owned)."""
+        if p in self.cached:
+            self.cached.remove(p)
+            self.rc[p] = 1
+        else:
+            self.rc[p] = self.rc.get(p, 0) + 1
+
+    def _unref(self, p: int):
+        """Drop one table reference: the last one demotes the page to
+        cached (still matchable) when registered, else frees it."""
+        self.rc[p] -= 1
+        if self.rc[p] == 0:
+            del self.rc[p]
+            if p in self._node_of:
+                self.cached.append(p)      # newest -> LRU tail
+            else:
+                self.free_dev.append(p)
+
+    def _unregister(self, p: int):
+        """Detach an OWNED page from the prefix index (write path /
+        spill path). The trie node stays as a hole so deeper matches
+        stop there."""
+        node = self._node_of.pop(p, None)
+        if node is not None:
+            node.page = None
+
+    def _evict_cached_lru(self):
+        p = self.cached.pop(0)
+        node = self._node_of.pop(p)
+        node.page = None
+        self.free_dev.append(p)
+        self.evictions += 1
+
+    def match_prefix(self, keys: Sequence[bytes]) -> List[int]:
+        """Longest resident prefix of ``keys`` in the radix index —
+        the device pages a new prompt can map instead of prefilling.
+        Read-only (no refs taken)."""
+        out: List[int] = []
+        node = self._radix
+        for key in keys:
+            node = node.children.get(key)
+            if node is None or node.page is None:
+                break
+            out.append(node.page)
+        return out
+
+    def register_prefix(self, rid: int, keys: Sequence[bytes]):
+        """Publish ``rid``'s first ``len(keys)`` pages (all freshly
+        prefilled or matched FULL pages) into the prefix index. First
+        registration wins per node; pages spilled, COW'd or unwritable
+        at that depth are skipped without disturbing the walk."""
+        if not self.share:
+            return
+        node = self._radix
+        for j, key in enumerate(keys):
+            e = self.tables[rid][j]
+            if e is None or e[0] != "dev":
+                break                       # spilled mid-prefix: stop
+            node = node.children.setdefault(key, _RadixNode())
+            if node.page is None and e[1] not in self._node_of:
+                node.page = e[1]
+                self._node_of[e[1]] = node
+
+    # -- room making (evict-cached, spill-private, then-drop policy) ---
     def _spill_victim(self, protect) -> Optional[int]:
+        """Oldest preempted request with a *private* (rc == 1) device
+        page — shared pages never spill (a co-owner may be resident
+        and mid-decode on them)."""
         for rid in self.preempted:          # oldest preempt first
             if rid == protect:
                 continue
-            if any(e and e[0] == "dev" for e in self.tables[rid]):
+            if any(e and e[0] == "dev" and self.rc[e[1]] == 1
+                   for e in self.tables[rid]):
                 return rid
         return None
 
     def _drop(self, rid: int):
         """Release ALL of a preempted request's pages (device + host):
-        it will resume by re-prefill instead of page fault."""
+        it will resume by re-prefill instead of page fault. Shared
+        device pages survive with their other owners; this request's
+        refs are simply dropped."""
         for e in self.tables.pop(rid):
             if e is None:
                 continue
-            (self.free_dev if e[0] == "dev" else self.free_host) \
-                .append(e[1])
+            if e[0] == "dev":
+                self._unref(e[1])
+            else:
+                self.free_host.append(e[1])
         self.preempted.remove(rid)
         self.drops += 1
 
     def _make_room(self, n: int, moves: List[_Move],
                    protect=None) -> bool:
-        """Spill cold pages (preempted requests, oldest first) to host
-        until ``n`` device pages are allocatable; drop whole preempted
-        requests to re-prefill once the host pool is full. False = no
-        cold pages left to evict."""
+        """Free device pages until ``n`` are allocatable, cheapest
+        reclamation first: (1) evict cached prefix pages (rc 0 — their
+        KV regenerates from a prefill, nothing to move); (2) spill cold
+        *private* pages (preempted requests, oldest first) to host;
+        (3) drop whole preempted requests to re-prefill once the host
+        pool is full — or when all their device pages are shared
+        (unspillable), since dropping releases the refs and any page
+        that reaches rc 0 turns cached and is evicted by (1). False =
+        nothing cold left to reclaim."""
         while self._room() < n:
+            if self.cached:
+                self._evict_cached_lru()
+                continue
             victim = self._spill_victim(protect)
-            if victim is None:
+            if victim is not None:
+                refs = self.tables[victim]
+                if self.free_host:
+                    j = max(j for j, e in enumerate(refs)
+                            if e and e[0] == "dev"
+                            and self.rc[e[1]] == 1)
+                    dev = refs[j][1]
+                    self._unregister(dev)   # host copies never match
+                    host = self.free_host.pop()
+                    moves.append(("spill", victim, j, dev, host))
+                    refs[j] = ("host", host)
+                    del self.rc[dev]
+                    self.free_dev.append(dev)
+                    self.spills += 1
+                else:
+                    self._drop(victim)
+                continue
+            # no privately-spillable page anywhere: drop the oldest
+            # cold request whose device pages are all SHARED (its refs
+            # may cascade pages into the cache, which the next
+            # iteration evicts). Host-only holders are left alone —
+            # dropping them gains no device room.
+            drop = next(
+                (r for r in self.preempted if r != protect
+                 and any(e and e[0] == "dev" for e in self.tables[r])),
+                None)
+            if drop is None:
                 return False
-            refs = self.tables[victim]
-            if self.free_host:
-                j = max(j for j, e in enumerate(refs)
-                        if e and e[0] == "dev")
-                dev = refs[j][1]
-                host = self.free_host.pop()
-                moves.append(("spill", victim, j, dev, host))
-                refs[j] = ("host", host)
-                self.free_dev.append(dev)
-                self.spills += 1
-            else:
-                self._drop(victim)
+            self._drop(drop)
         return True
 
     # -- lifecycle ops -------------------------------------------------
@@ -270,17 +438,51 @@ class PageAllocator:
         """Allocate the first ``n`` logical pages for a new (or
         re-prefilling) request. not ok = pool exhausted (caller
         defers; any partial spill moves still execute)."""
+        ok, moves, _ = self.admit_prefix(rid, n, ())
+        return ok, moves
+
+    def admit_prefix(self, rid: int, n: int,
+                     keys: Sequence[bytes] = (), min_pages: int = 1
+                     ) -> Tuple[bool, List[_Move], int]:
+        """Admission with prefix matching: walk ``keys`` (one exact
+        token-bytes key per FULL prompt page) down the radix index and
+        map every hit (refcount++, cached pages promoted) instead of
+        allocating; pages [len(hit)..n) are allocated fresh. Returns
+        (ok, moves, matched_pages) — the engine skips ``matched ·
+        page_len`` prefill tokens. Matches shorter than ``min_pages``
+        are ignored (not worth splitting the prefill batch for). A
+        failed admission unwinds the matched refs exactly (no leaks;
+        partial spill moves still execute)."""
         assert rid not in self.tables, f"rid {rid} already has pages"
         assert 1 <= n <= self.NB, (rid, n)
+        matched: List[int] = []
+        if self.share and keys:
+            matched = self.match_prefix(keys[:n])
+            if len(matched) < max(1, int(min_pages)):
+                matched = []
+        # take the refs BEFORE room-making: a matched cached page
+        # leaves the eviction pool the moment this prompt claims it
+        for p in matched:
+            self._ref(p)
+        m = len(matched)
         moves: List[_Move] = []
-        if not self._make_room(n, moves):
-            return False, moves
+        if not self._make_room(n - m, moves):
+            for p in matched:               # unwind: no leaked refs
+                self._unref(p)
+            return False, moves, 0
         refs: List[Optional[Tuple]] = [None] * self.NB
-        for j in range(n):
-            refs[j] = ("dev", self.free_dev.pop())
+        for j, p in enumerate(matched):
+            refs[j] = ("dev", p)
+        for j in range(m, n):
+            p = self.free_dev.pop()
+            refs[j] = ("dev", p)
+            self.rc[p] = 1
         self.tables[rid] = refs
         self.resident.add(rid)
-        return True, moves
+        if m:
+            self.prefix_hits += 1
+            self.prefix_pages_reused += m
+        return True, moves, m
 
     def ensure(self, rid: int, j: int) -> Tuple[bool, List[_Move]]:
         """Decode growth: allocate logical page ``j`` if absent. not
@@ -293,11 +495,44 @@ class PageAllocator:
         moves: List[_Move] = []
         if not self._make_room(1, moves, protect=rid):
             return False, moves
-        refs[j] = ("dev", self.free_dev.pop())
+        p = self.free_dev.pop()
+        refs[j] = ("dev", p)
+        self.rc[p] = 1
         return True, moves
 
+    def make_writable(self, rid: int, j: int
+                      ) -> Tuple[bool, List[_Move],
+                                 Optional[Tuple[int, int]]]:
+        """Enforce the write rule on logical page ``j`` before a decode
+        scatter: a page may only be written while rc == 1 AND
+        unregistered. Shared (rc > 1) pages copy-on-write to a fresh
+        page — returns ``(src, dst)`` for the pool's device copy;
+        private registered pages just unregister (the write would
+        invalidate the indexed content). not ok = COW needed but no
+        room (caller preempts the slot; moves still execute)."""
+        refs = self.tables[rid]
+        e = refs[j]
+        assert e is not None and e[0] == "dev", (rid, j, e)
+        p = e[1]
+        if self.rc[p] == 1:
+            self._unregister(p)
+            return True, [], None
+        moves: List[_Move] = []
+        if not self._make_room(1, moves, protect=rid):
+            return False, moves, None
+        q = self.free_dev.pop()
+        self.rc[q] = 1
+        refs[j] = ("dev", q)
+        self._unref(p)
+        self.cow += 1
+        return True, moves, (p, q)
+
     def free(self, rid: int):
-        """EOS / failure: return every page to the free lists."""
+        """EOS / failure: drop every table reference. Private device
+        pages return to the free list — unless registered in the
+        prefix index, in which case they turn *cached* (rc 0, still
+        matchable, evicted LRU under pressure); shared pages live on
+        with their co-owners."""
         assert rid in self.tables, f"double free of rid {rid}"
         self.resident.discard(rid)
         if rid in self.preempted:
@@ -305,8 +540,10 @@ class PageAllocator:
         for e in self.tables.pop(rid):
             if e is None:
                 continue
-            (self.free_dev if e[0] == "dev" else self.free_host) \
-                .append(e[1])
+            if e[0] == "dev":
+                self._unref(e[1])
+            else:
+                self.free_host.append(e[1])
 
     def preempt(self, rid: int):
         """Unmap from its slot: pages stay allocated but become cold
@@ -337,6 +574,7 @@ class PageAllocator:
                 moves.append(("fault", rid, j, e[1], dev))
                 self.free_host.append(e[1])
                 refs[j] = ("dev", dev)
+                self.rc[dev] = 1
                 self.faults += 1
         self.preempted.remove(rid)
         self.resident.add(rid)
@@ -344,17 +582,24 @@ class PageAllocator:
 
     # -- invariants ----------------------------------------------------
     def check(self):
-        owned_dev, owned_host = [], []
+        ref_count: Dict[int, int] = {}
+        owned_host = []
         for rid, refs in self.tables.items():
             for e in refs:
                 if e is None:
                     continue
-                (owned_dev if e[0] == "dev" else owned_host).append(e[1])
-        assert sorted(owned_dev + self.free_dev) == self._all_dev, \
-            "device pages leaked or double-owned"
+                if e[0] == "dev":
+                    ref_count[e[1]] = ref_count.get(e[1], 0) + 1
+                else:
+                    owned_host.append(e[1])
+        assert ref_count == self.rc, \
+            (f"refcount != block-table references: rc={self.rc} "
+             f"vs tables={ref_count}")
+        owned_dev = sorted(ref_count)
+        assert sorted(owned_dev + self.free_dev + self.cached) \
+            == self._all_dev, "device pages leaked or double-owned"
         assert sorted(owned_host + self.free_host) == \
             list(range(self.n_host)), "host slots leaked or double-owned"
-        assert len(set(owned_dev)) == len(owned_dev)
         assert len(set(owned_host)) == len(owned_host)
         assert self.used_dev <= self.cap, \
             f"watermark breached: {self.used_dev} > {self.cap}"
@@ -364,6 +609,19 @@ class PageAllocator:
             assert all(e is None or e[0] == "dev"
                        for e in self.tables[rid]), \
                 f"resident rid {rid} holds spilled pages"
+        # prefix-index consistency: every cached page is registered;
+        # every registered page is resident on device (owned or
+        # cached) and its node points back at it; holes carry no page
+        assert len(set(self.cached)) == len(self.cached)
+        for p in self.cached:
+            assert p in self._node_of, f"cached page {p} unregistered"
+        for p, node in self._node_of.items():
+            assert node.page == p, (p, node.page)
+            assert p in self.rc or p in self.cached, \
+                f"registered page {p} neither owned nor cached"
+        if not self.share:
+            assert not self._node_of and not self.cached
+            assert all(c == 1 for c in self.rc.values())
 
 
 # ---------------------------------------------------------------------------
@@ -407,7 +665,7 @@ class PagedKVPool:
     def __init__(self, params, cfg: ModelConfig, *, cache_len: int,
                  device_pages: int, page_len: Optional[int] = None,
                  watermark: float = 1.0, host_pages: int = 0,
-                 mesh=None, profile: str = "tp"):
+                 mesh=None, profile: str = "tp", share: bool = False):
         if any(m != MIXER_ATTN for m in cfg.layer_mixer_kinds()):
             raise ValueError(
                 "paged KV requires an attention-only stack (SSM/hybrid "
@@ -417,15 +675,21 @@ class PagedKVPool:
         if not 0.0 < watermark <= 1.0:
             raise ValueError(
                 f"kv watermark={watermark} must lie in (0, 1]")
+        if share and cfg.kv_quant:
+            raise ValueError(
+                "kv_share is incompatible with kv_quant: suffix prefill "
+                "attends DEQUANTIZED int8 prefix KV, which breaks the "
+                "bit-identity contract vs the solo/contiguous engine")
         self.cfg = cfg
         self.cache_len = int(cache_len)
         self.page_len = tile_aligned_page_len(cfg, cache_len, page_len)
         self.NB = self.cache_len // self.page_len
         self.n_device = int(device_pages)
         cap = max(1, int(math.floor(self.n_device * watermark)))
+        self.share = bool(share)
         self.alloc = PageAllocator(
             range(RESERVED_PAGES, RESERVED_PAGES + self.n_device),
-            host_pages, cap, self.NB)
+            host_pages, cap, self.NB, share=self.share)
         P = self.n_device + RESERVED_PAGES
         self.data = lm.init_caches(params, cfg, P, self.page_len,
                                    uniform_cap=True)
@@ -457,6 +721,11 @@ class PagedKVPool:
             lambda data, ids: jax.tree.map(
                 lambda a: a.at[:, ids].set(a[:, ZERO_PAGE][:, None]),
                 data))
+        # copy-on-write: duplicate one physical page (all layers) so a
+        # divergent writer stops aliasing its shared prefix
+        self._copy = jax.jit(
+            lambda data, src, dst: jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), data))
 
     # -- sizing --------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -475,6 +744,22 @@ class PagedKVPool:
         self._execute(moves)
         return ok
 
+    def admit_prefix(self, rid: int, n_pages: int,
+                     keys: Sequence[bytes] = (), min_pages: int = 1
+                     ) -> Tuple[bool, int]:
+        """Sharing-aware admission: returns (ok, matched_pages) — the
+        engine prefills only the suffix beyond ``matched_pages``."""
+        ok, moves, m = self.alloc.admit_prefix(rid, n_pages, keys,
+                                               min_pages=min_pages)
+        self._execute(moves)
+        return ok, m
+
+    def register_prefix(self, rid: int, keys: Sequence[bytes]):
+        """Publish ``rid``'s freshly prefilled full prompt pages into
+        the prefix index (no-op with sharing off)."""
+        if self.share and keys:
+            self.alloc.register_prefix(rid, keys)
+
     def ensure_page(self, rid: int, j: int) -> bool:
         fresh = self.alloc.tables[rid][j] is None
         ok, moves = self.alloc.ensure(rid, j)
@@ -483,6 +768,23 @@ class PagedKVPool:
             self.data = self._scrub(
                 self.data,
                 jnp.asarray([self.alloc.tables[rid][j][1]], jnp.int32))
+        return ok
+
+    def ensure_writable(self, rid: int, j: int) -> bool:
+        """Decode pre-step guard: page ``j`` must exist AND satisfy the
+        write rule (rc == 1, unregistered) before the step's scatter.
+        Absent pages allocate+scrub (growth); shared pages copy-on-write
+        (one device page copy); private registered pages unregister.
+        With sharing off this reduces exactly to :meth:`ensure_page`."""
+        if self.alloc.tables[rid][j] is None:
+            return self.ensure_page(rid, j)
+        ok, moves, copy = self.alloc.make_writable(rid, j)
+        self._execute(moves)
+        if ok and copy is not None:
+            src, dst = copy
+            self.data = self._copy(self.data,
+                                   jnp.asarray(src, jnp.int32),
+                                   jnp.asarray(dst, jnp.int32))
         return ok
 
     def resume(self, rid: int) -> bool:
@@ -521,16 +823,38 @@ class PagedKVPool:
                 bt[i, j] = ZERO_PAGE if p is None else p
         return bt
 
-    def dest_table(self, rids: Sequence[int], n_rows: int) -> np.ndarray:
+    def dest_table(self, rids: Sequence[int], n_rows: int,
+                   skip_pages: Optional[Sequence[int]] = None
+                   ) -> np.ndarray:
         """(n_rows, NB) prefill WRITE destinations: allocated pages for
         each admitted request, trash everywhere else (unallocated
-        logical pages, admission-group padding rows)."""
+        logical pages, admission-group padding rows). ``skip_pages[i]``
+        routes request i's first k logical pages to trash as well —
+        the suffix prefill must never scatter over its SHARED prefix
+        pages (they are resident and possibly rc > 1)."""
         dests = np.full((n_rows, self.NB), TRASH_PAGE, np.int32)
         for i, rid in enumerate(rids):
+            skip = 0 if skip_pages is None else int(skip_pages[i])
             for j, p in enumerate(self.alloc.dev_pages(rid)):
-                if p is not None:
+                if p is not None and j >= skip:
                     dests[i, j] = p
         return dests
+
+    def prefix_table(self, rids: Sequence[int],
+                     shared_pages: Sequence[int],
+                     n_rows: int) -> np.ndarray:
+        """(n_rows, NB) READ table for the suffix prefill: ONLY the
+        matched prefix pages are mapped — everything else (the suffix
+        region, pad rows) points at the zero page (pos = -1, masked),
+        so the gathered ring is exactly 'prefix resident, rest empty'
+        and suffix keys enter attention solely through the fresh K/V."""
+        bt = np.full((n_rows, self.NB), ZERO_PAGE, np.int32)
+        for i, (rid, m) in enumerate(zip(rids, shared_pages)):
+            pages = self.alloc.dev_pages(rid)
+            for j in range(int(m)):
+                assert pages[j] is not None, (rid, j, m)
+                bt[i, j] = pages[j]
+        return bt
 
     # -- data movement -------------------------------------------------
     def _execute(self, moves: List[_Move]):
@@ -566,4 +890,9 @@ class PagedKVPool:
             watermark=a.cap, device_used=a.used_dev,
             host_used=a.used_host,
             preempted_resident=a.preempted_dev_pages(),
-            spills=a.spills, faults=a.faults, drops=a.drops)
+            spills=a.spills, faults=a.faults, drops=a.drops,
+            shared_pages=sum(1 for c in a.rc.values() if c > 1),
+            cached_pages=len(a.cached),
+            prefix_hits=a.prefix_hits,
+            prefix_pages_reused=a.prefix_pages_reused,
+            cow_copies=a.cow, cache_evictions=a.evictions)

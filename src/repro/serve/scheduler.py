@@ -149,6 +149,13 @@ class SchedulerConfig:
     kv_page_len: Optional[int] = None
     kv_watermark: float = 1.0
     kv_host_pages: int = 0
+    # --- prefix sharing (DESIGN.md §16) -------------------------------
+    # refcounted prefix sharing over the paged pool: admission maps a
+    # new prompt's full pages onto already-resident identical pages and
+    # prefills only the suffix; min_pages gates how many whole pages
+    # must match before sharing is worth the bookkeeping
+    kv_share: bool = False
+    kv_share_min_pages: int = 1
 
 
 class ShardedScheduler:
@@ -214,7 +221,9 @@ class ShardedScheduler:
                      rank=r, buckets=self.bucket_tables[r],
                      kv_pages=s.kv_pages, kv_page_len=s.kv_page_len,
                      kv_watermark=s.kv_watermark,
-                     kv_host_pages=s.kv_host_pages)
+                     kv_host_pages=s.kv_host_pages,
+                     kv_share=s.kv_share,
+                     kv_share_min_pages=s.kv_share_min_pages)
         eng.on_token = self._sink
         return eng
 

@@ -4,7 +4,15 @@ CI installs ``pytest-timeout``, which owns the ``timeout`` ini key in
 pytest.ini (a hung drain or wedged chaos worker must never stall a
 whole job). Environments without the plugin get the same cap from the
 SIGALRM fallback below — main-thread alarm, POSIX only — so the
-guarantee does not silently depend on an optional dependency."""
+guarantee does not silently depend on an optional dependency.
+
+``REPRO_KV_SHARE=1`` (CI's ``share`` matrix leg) force-enables prefix
+sharing on every paged engine the suite builds: an autouse fixture
+wraps ``Engine.__init__`` so any construction with ``kv_pages`` (and
+without int8 KV, which sharing rejects) defaults ``kv_share=True``.
+The whole paged test surface then doubles as a sharing bit-identity
+oracle — any stream difference is a sharing bug."""
+import os
 import signal
 
 import pytest
@@ -54,3 +62,24 @@ def pytest_runtest_call(item):
     finally:
         signal.setitimer(signal.ITIMER_REAL, 0)
         signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(autouse=True)
+def _force_kv_share(monkeypatch):
+    """CI share leg (REPRO_KV_SHARE=1): default kv_share=True on every
+    paged Engine so the existing paged tests re-run as sharing
+    oracles. Explicit kv_share arguments and contiguous / int8-KV
+    engines are left alone."""
+    if os.environ.get("REPRO_KV_SHARE") != "1":
+        yield
+        return
+    from repro.serve.engine import Engine
+    orig = Engine.__init__
+
+    def patched(self, params, cfg, *args, **kw):
+        if kw.get("kv_pages") and not getattr(cfg, "kv_quant", False):
+            kw.setdefault("kv_share", True)
+        return orig(self, params, cfg, *args, **kw)
+
+    monkeypatch.setattr(Engine, "__init__", patched)
+    yield

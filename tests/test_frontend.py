@@ -20,8 +20,18 @@ from repro.serve.frontend import ClusterFrontend, FrontendConfig, \
     SubprocessHost, make_local_hosts
 from repro.serve.scheduler import SchedulerConfig
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+from tools.analyze import check_page_refcounts  # noqa: E402
+
 KEY = jax.random.PRNGKey(0)
 SCHED = SchedulerConfig(slots_per_rank=2, cache_len=64)
+# paged + prefix-sharing variant: host death with shared (refcounted)
+# pages in flight must never strand a refcount (DESIGN.md §16)
+SCHED_SHARE = SchedulerConfig(slots_per_rank=2, cache_len=64,
+                              kv_pages=12, kv_page_len=8,
+                              kv_host_pages=8, kv_share=True)
 WORKER = os.path.join(os.path.dirname(__file__), "dist_worker.py")
 
 pytestmark = pytest.mark.chaos
@@ -261,26 +271,49 @@ def test_revive_host_replays_retryable_failures(setup):
 # ----------------------------------------------------------------------
 # property harness: random kill/revive schedules
 # ----------------------------------------------------------------------
-def _run_schedule(setup, schedule, n_reqs=5):
+def _assert_pool_refcounts(fe):
+    """tools.analyze.check_page_refcounts over every live paged shard:
+    no leaked page, no double-free, refcount == table references,
+    watermark held — checked after every kill/revive cycle so a host
+    death with shared pages in flight cannot strand refcounts."""
+    for h in fe.hosts:
+        sched = getattr(h, "sched", None)
+        if sched is None:
+            continue
+        for eng in sched.shards:
+            if eng.dead or getattr(eng, "pool", None) is None:
+                continue
+            errs = check_page_refcounts(eng.pool)
+            assert not errs, (h.host_id, eng.rank, errs)
+
+
+def _run_schedule(setup, schedule, n_reqs=5, sched=SCHED):
     """Drive a frontend under a {tick: [(op, host), ...]} schedule and
     assert the two global invariants: every request resolves exactly
     once, and no token index is ever streamed twice (delivered streams
-    are exact prefixes of the solo oracle)."""
+    are exact prefixes of the solo oracle). Paged configs additionally
+    get the refcount invariant check after every kill/revive cycle."""
     cfg, params, specs, solo = setup
-    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED)
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=sched)
     delivered = {}
     fe = ClusterFrontend(
         hosts, FrontendConfig(retries=3, backoff_base=0.001, rng_seed=7),
         on_token=_collector(delivered))
 
     def on_tick(t):
+        cycled = False
         for op, h in schedule.get(t, []):
             if op == "kill":
                 fe.hosts[h].killed = True
+                cycled = True
             elif op == "revive" and fe._state(h) == "dead":
                 fe.revive_host(h)
+                cycled = True
+        if cycled:
+            _assert_pool_refcounts(fe)
 
     fe.run(_mk(specs, range(n_reqs)), on_tick=on_tick)
+    _assert_pool_refcounts(fe)
     # exactly-once resolution
     resolved = fe.done + fe.failed + fe.rejected
     assert len(resolved) == n_reqs
@@ -306,6 +339,50 @@ def test_chaos_schedules_fixed_twin(setup):
     fe = _run_schedule(setup, {1: [("kill", 1)], 4: [("revive", 1)],
                                6: [("kill", 0)]})
     assert fe.n_retries >= 1 and not fe.failed
+
+
+def test_chaos_schedules_paged_share_fixed_twin(setup):
+    """The same kill/revive schedules over paged engines with prefix
+    sharing on: streams stay bit-exact and ``check_page_refcounts``
+    holds after every cycle (no refcount stranded by a host death)."""
+    fe = _run_schedule(setup, {2: [("kill", 0)]}, sched=SCHED_SHARE)
+    assert fe.n_retries >= 1 and not fe.failed
+    fe = _run_schedule(setup, {1: [("kill", 1)], 4: [("revive", 1)],
+                               6: [("kill", 0)]}, sched=SCHED_SHARE)
+    assert fe.n_retries >= 1 and not fe.failed
+
+
+def test_chaos_kill_with_shared_fanout_in_flight(setup):
+    """Fan-out of one prompt with sharing on, host 0 killed while the
+    forked (refcounted, possibly copy-on-written) pages are in flight:
+    every request resolves with the solo-oracle stream, the survivor's
+    pool passes the refcount check, and nothing leaks on drain."""
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, 64, size=(19,)).astype(np.int32)
+    solo_eng = Engine(params, cfg, batch_slots=1, cache_len=64)
+    solo = solo_eng.run([Request(rid=0, prompt=prompt.copy(),
+                                 max_new_tokens=8)])[0].out_tokens
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new_tokens=8)
+            for i in range(6)]
+    hosts = make_local_hosts(params, cfg, hosts=2, sched=SCHED_SHARE)
+    delivered = {}
+    fe = ClusterFrontend(
+        hosts, FrontendConfig(retries=3, backoff_base=0.001, rng_seed=7),
+        on_token=_collector(delivered))
+
+    def on_tick(t):
+        if t == 3 and not fe.hosts[0].killed:
+            fe.hosts[0].killed = True
+            _assert_pool_refcounts(fe)
+
+    done = fe.run(reqs, on_tick=on_tick)
+    _assert_pool_refcounts(fe)
+    assert not fe.failed and not fe.rejected
+    assert {r.rid: r.out_tokens for r in done} == {i: solo
+                                                   for i in range(6)}
+    mem = hosts[1].sched.shards[0].memory_stats()
+    assert mem.device_used == mem.cached_pages  # drained to cache only
 
 
 @pytest.mark.slow

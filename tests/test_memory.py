@@ -253,7 +253,10 @@ def test_paged_streams_bit_identical_and_no_leak(kv_pages, host):
     done = eng.run(_mk_requests(7, rng, eos=True))
     assert {r.rid: r.out_tokens for r in done} == ref
     mem = eng.memory_stats()
-    assert mem.device_used == 0 and mem.host_used == 0, mem.as_dict()
+    # sharing on (REPRO_KV_SHARE leg): retired prompts may survive as
+    # rc-0 cached prefix pages — reclaimable, not leaked
+    assert mem.device_used == mem.cached_pages, mem.as_dict()
+    assert mem.host_used == 0, mem.as_dict()
     eng.pool.alloc.check()
 
 
@@ -395,7 +398,10 @@ def test_preempt_keep_kv_false_frees_pages_immediately():
     for _ in range(3):
         eng.step()
     victim = eng.preempt_slot(0, keep_kv=False)
-    assert eng.memory_stats().device_used == 0      # freed outright
+    mem = eng.memory_stats()
+    # freed outright — under forced sharing (REPRO_KV_SHARE leg) the
+    # registered prompt pages legitimately linger as rc-0 cached
+    assert mem.device_used == mem.cached_pages, mem.as_dict()
     eng.submit(victim)
     done = []
     while eng.has_work():
@@ -485,3 +491,445 @@ def test_memory_stress_churn_no_leaks_bit_identical():
     assert {r.rid: r.out_tokens for r in done} == ref
     mem = eng.memory_stats()
     assert mem.device_used == 0 and mem.host_used == 0
+
+
+# ---------------------------------------------------------------------------
+# Refcounted prefix sharing (DESIGN.md §16): allocator state machine,
+# fixed twin, resume-under-host-pressure
+# ---------------------------------------------------------------------------
+
+# three prompt "chains" of four page keys each — prefixes collide across
+# requests, so random admissions exercise fork / cached reuse / COW
+_CHAINS = tuple(tuple(bytes([c, j]) for j in range(4)) for c in range(3))
+
+
+if HAVE_HYPOTHESIS:
+
+    class SharedPoolMachine(PoolMachine):
+        """The PR-5 machine over the REFCOUNTED allocator: random
+        interleavings of admit-with-shared-prefix / fork / register /
+        COW / grow / preempt / resume / spill / free must preserve "no
+        leaks, no double-frees, refcount == number of block-table
+        references, watermark respected" after every step (the ISSUE's
+        acceptance invariants; ``check()`` verifies all of them plus
+        radix-index consistency)."""
+
+        def __init__(self):
+            RuleBasedStateMachine.__init__(self)
+            self.a = PageAllocator(range(2, 14), host_slots=5,
+                                   watermark_cap=10, slot_pages=4,
+                                   share=True)
+            self.next_rid = 0
+
+        @rule(c=st.integers(0, 2), n=st.integers(1, 4),
+              reg=st.integers(0, 4))
+        def admit_shared(self, c, n, reg):
+            """Admit along chain ``c`` (same chain = fork) and publish
+            the first ``reg`` pages into the prefix index."""
+            rid = self.next_rid
+            self.next_rid += 1
+            keys = _CHAINS[c][:n]
+            ok, _, m = self.a.admit_prefix(rid, n, keys)
+            if not ok:
+                assert not self.a.has(rid)      # unwound, no leaked refs
+                return
+            assert 0 <= m <= n
+            self.a.register_prefix(rid, keys[:reg])
+
+        @precondition(lambda self: self.a.resident)
+        @rule(data=st.data())
+        def cow(self, data):
+            """Write rule: make a random resident page writable —
+            shared pages must COW, registered ones unregister."""
+            rid = data.draw(st.sampled_from(sorted(self.a.resident)))
+            js = [j for j, e in enumerate(self.a.tables[rid])
+                  if e is not None and e[0] == "dev"]
+            if not js:
+                return
+            j = data.draw(st.sampled_from(js))
+            p = self.a.tables[rid][j][1]
+            was_shared = self.a.rc[p] > 1
+            ok, _, copy = self.a.make_writable(rid, j)
+            if ok:
+                q = self.a.tables[rid][j][1]
+                assert self.a.rc[q] == 1 and q not in self.a._node_of
+                assert (copy is not None) == was_shared
+
+    SharedPoolMachine.TestCase.settings = settings(
+        max_examples=60, stateful_step_count=40, deadline=None)
+    TestSharedPoolMachine = SharedPoolMachine.TestCase
+
+
+def test_refcounted_allocator_fixed_twin():
+    """Deterministic twin of SharedPoolMachine (runs without
+    hypothesis): admit→register→fork→COW→grow→free-to-cached→cached
+    reuse→LRU eviction→pinned-shared spill ordering→drop→unwound
+    admit, with the full invariant check after every step."""
+    a = PageAllocator(range(2, 12), host_slots=4, watermark_cap=8,
+                      slot_pages=4, share=True)
+    K = tuple(bytes([9, j]) for j in range(4))
+    K2 = tuple(bytes([8, j]) for j in range(4))
+
+    # admit a 3-page prompt, register its 2 full pages
+    ok, _, m = a.admit_prefix(0, 3, K[:2])
+    assert ok and m == 0                        # cold index: no match
+    a.register_prefix(0, K[:2])
+    a.check()
+    p0, p1 = a.tables[0][0][1], a.tables[0][1][1]
+
+    # fork: identical prompt maps both registered pages
+    ok, _, m = a.admit_prefix(1, 3, K[:2])
+    assert ok and m == 2 and a.prefix_hits == 1
+    assert a.tables[1][0][1] == p0 and a.rc[p0] == 2
+    assert a.used_dev == 4                      # 3 + 1, not 6
+    a.check()
+
+    # COW: the writer forks the shared page, the reader keeps p1
+    ok, _, copy = a.make_writable(1, 1)
+    assert ok and copy is not None and copy[0] == p1
+    assert a.rc[p1] == 1 and a.tables[1][1][1] == copy[1]
+    assert a.tables[0][1][1] == p1 and a.cow == 1
+    a.check()
+
+    # private registered page: writable = just unregister (no copy)
+    ok, _, copy = a.make_writable(0, 1)
+    assert ok and copy is None and p1 not in a._node_of
+    a.check()
+
+    # decode growth on a shared table
+    assert a.ensure(0, 3)[0]
+    a.check()
+
+    # free: the registered page turns cached once BOTH owners drop it
+    a.free(1)
+    a.check()
+    assert a.rc[p0] == 1                        # rid 0 still owns it
+    a.free(0)
+    a.check()
+    assert a.cached == [p0] and p0 not in a.rc  # rc 0, matchable
+    assert a.used_dev == 1                      # cached pages stay dev
+
+    # cached reuse: a new prompt revives p0 from the cache
+    ok, _, m = a.admit_prefix(2, 2, K[:2])
+    assert ok and m == 1 and a.rc[p0] == 1 and not a.cached
+    a.check()
+    a.free(2)
+    assert a.cached == [p0]
+
+    # LRU eviction: room-making reclaims the cached page last-resort
+    assert a.admit(3, 4)[0]
+    assert a.admit(4, 4)[0]                     # needs the cached page
+    assert a.evictions == 1 and not a.cached and p0 not in a._node_of
+    a.check()
+    a.free(3)
+    a.free(4)
+
+    # spill ordering: shared pages are PINNED on device; only the
+    # victim's private page spills, then the shared-only holder drops
+    ok, _, m = a.admit_prefix(5, 3, K2[:2])
+    assert ok
+    a.register_prefix(5, K2[:2])
+    ok, _, m = a.admit_prefix(6, 2, K2[:2])
+    assert ok and m == 2                        # rid 6 fully shared
+    a.preempt(5)
+    assert a.admit(7, 4)[0]                     # used 3 + 4 = 7
+    ok, moves = a.admit(8, 4)                   # would need 4 more
+    assert not ok                               # shared pages can't spill
+    assert a.spills == 1                        # rid 5's private page
+    assert [m_[0] for m_ in moves] == ["spill"]
+    assert not a.has(5) and a.drops == 1        # shared-only holder drops
+    assert a.has(6)                             # co-owner keeps the pages
+    assert all(a.rc[e[1]] == 1 for e in a.tables[6] if e)
+    a.check()
+    assert a.admit(8, 2)[0]                     # the freed room admits
+    a.check()
+
+    # failed admit_prefix unwinds its matched refs exactly
+    a.free(7)
+    assert a.admit(10, 4)[0]                    # pool back at cap 8
+    shared = [e[1] for e in a.tables[6] if e]
+    ok, _, m = a.admit_prefix(12, 4, K2[:2])
+    assert not ok and m == 0 and not a.has(12)
+    assert all(a.rc[p] == 1 for p in shared)    # refs unwound
+    a.check()
+
+    for rid in (6, 8, 10):
+        a.free(rid)
+    a.check()
+    assert a.used_dev == len(a.cached)          # only cached pages remain
+
+
+def test_resume_when_host_pool_full_fails_clean_then_succeeds():
+    """Satellite: ``resume`` under host-pool pressure. Room-making for
+    the resume can neither spill (host full) nor drop (only the
+    protected rid is cold): the resume must fail CLEANLY — request
+    intact in its preempted position, zero faults executed, no
+    partially-gathered pages leaked — and succeed once room frees."""
+    a = PageAllocator(range(2, 8), host_slots=2, watermark_cap=6,
+                      slot_pages=4)
+    assert a.admit(0, 4)[0]
+    a.preempt(0)
+    assert a.admit(1, 4)[0]                     # spills 2 of rid 0's pages
+    assert a.used_host == 2 and a.spills == 2   # host pool now full
+    before = list(a.tables[0])
+    ok, moves = a.resume(0)
+    assert not ok and moves == []               # all-or-nothing: no faults
+    assert a.has(0) and a.preempted == [0]
+    assert a.tables[0] == before                # nothing leaked or moved
+    assert a.used_host == 2 and a.faults == 0
+    a.check()
+    a.free(1)
+    ok, moves = a.resume(0)                     # retry with room
+    assert ok and sum(1 for m in moves if m[0] == "fault") == 2
+    assert a.used_host == 0
+    a.check()
+    a.free(0)
+    assert a.used_dev == 0
+
+
+def test_pool_resume_under_host_pressure_keeps_spilled_data():
+    """Pool-level twin with real arrays: the failed resume must leave
+    the spilled pages' DATA intact in the host pool, so the retry
+    faults back exactly what was written."""
+    import jax.numpy as jnp
+
+    cfg, params = _setup()
+    pool = PagedKVPool(params, cfg, cache_len=64, device_pages=4,
+                       page_len=16, host_pages=2)   # NB = 4, cap = 4
+    assert pool.admit(0, 4)                     # rid 0 fills the pool
+    pages = jnp.asarray([p for p in pool.alloc.dev_pages(0)
+                         if p is not None])
+    pool.data = jax.tree.map(
+        lambda a: a.at[:, pages].set(jnp.asarray(7, a.dtype)),
+        pool.data)
+    pool.preempt(0)
+    assert pool.admit(1, 2)                     # spills 2 pages, host full
+    assert pool.stats().host_used == 2
+    assert not pool.resume(0)                   # no room: clean failure
+    assert pool.stats().host_used == 2 and pool.stats().faults == 0
+    pool.alloc.check()
+    pool.free(1)
+    assert pool.resume(0)                       # retry: faults back
+    got = pool._read(pool.data,
+                     jnp.asarray([p for p in pool.alloc.dev_pages(0)
+                                  if p is not None]))
+    for leaf in jax.tree.leaves(got):
+        assert (np.asarray(leaf) == 7).all(), "spilled data lost"
+    pool.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: engine bit-identity oracle (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = []
+    while eng.has_work():
+        done.extend(eng.step())
+    return {r.rid: list(r.out_tokens) for r in done}
+
+
+def _share_engine(params, cfg, share, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("kv_pages", 14)
+    kw.setdefault("kv_page_len", 8)
+    kw.setdefault("kv_host_pages", 8)
+    return Engine(params, cfg, kv_share=share, **kw)
+
+
+def test_share_fanout_bit_identical_and_leak_free():
+    """Best-of-N fan-out: one prompt, N greedy samplers, admissions
+    staggered through 2 slots so later arrivals map the first
+    admission's resident pages. Streams must equal sharing-off AND the
+    solo contiguous engine; afterwards every surviving device page is
+    a cached (rc-0) prefix page — nothing leaked."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, 64, size=(25,)).astype(np.int32)
+    mk = lambda: [Request(rid=i, prompt=prompt.copy(), max_new_tokens=7)
+                  for i in range(6)]
+    solo = _solo(params, cfg, mk()[0])
+    off = _drive(_share_engine(params, cfg, False), mk())
+    eng = _share_engine(params, cfg, True)
+    on = _drive(eng, mk())
+    assert on == off == {i: solo for i in range(6)}
+    mem = eng.memory_stats()
+    assert mem.prefix_hits > 0 and mem.prefix_pages_reused > 0
+    assert eng.stats["prefill_tokens_skipped"] > 0
+    assert mem.device_used == mem.cached_pages  # only the cache remains
+    assert not eng.pool.alloc.rc               # no owned page survives
+    eng.pool.alloc.check()
+
+
+@pytest.mark.parametrize("d", [0, 1, 7, 8])
+def test_share_divergence_at_page_boundaries_bit_identical(d):
+    """Divergence pinned at offset {0, 1, L-1, L} past a 16-token
+    (2-page) common prefix: the divergent page must never be mapped
+    shared (offsets 0/1/7 land inside page 2; offset 8 shares all of
+    it), and streams must equal sharing-off exactly."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(22)
+    base = rng.integers(0, 64, size=(16 + 9,)).astype(np.int32)
+    var = base.copy()
+    var[16 + d] = (var[16 + d] + 1) % 64
+    mk = lambda: [Request(rid=0, prompt=base.copy(), max_new_tokens=6),
+                  Request(rid=1, prompt=var.copy(), max_new_tokens=6)]
+    ref = {r.rid: _solo(params, cfg, r) for r in mk()}
+    # one slot forces strictly staggered admission: rid 1 sees rid 0's
+    # registered pages and shares exactly the still-common prefix
+    off = _drive(_share_engine(params, cfg, False, batch_slots=1), mk())
+    eng = _share_engine(params, cfg, True, batch_slots=1)
+    on = _drive(eng, mk())
+    assert on == off == ref
+    mem = eng.memory_stats()
+    shared_pages = (16 + d) // 8
+    assert mem.prefix_pages_reused == shared_pages, mem.as_dict()
+    eng.pool.alloc.check()
+
+
+def test_share_multi_turn_chat_replay_bit_identical():
+    """Multi-turn replay: each turn's prompt is the full conversation
+    so far (previous prompt + model reply + a new user turn). Sharing
+    must skip the whole resident prefix and still match sharing-off
+    and the solo engine on every turn."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(23)
+    sys_prompt = rng.integers(0, 64, size=(9,)).astype(np.int32)
+    turns = [rng.integers(0, 64, size=(5,)).astype(np.int32)
+             for _ in range(3)]
+
+    def replay(build):
+        history, streams = sys_prompt, []
+        for t, turn in enumerate(turns):
+            prompt = np.concatenate([history, turn]).astype(np.int32)
+            out = build(t, prompt)
+            streams.append(list(out))
+            history = np.concatenate(
+                [prompt, np.asarray(out, np.int32)])
+        return streams
+
+    ref = replay(lambda t, p: _solo(
+        params, cfg, Request(rid=t, prompt=p, max_new_tokens=5)))
+    e_off = _share_engine(params, cfg, False)
+    off = replay(lambda t, p: e_off.run(
+        [Request(rid=t, prompt=p, max_new_tokens=5)])[0].out_tokens)
+    e_on = _share_engine(params, cfg, True)
+    on = replay(lambda t, p: e_on.run(
+        [Request(rid=t, prompt=p, max_new_tokens=5)])[0].out_tokens)
+    assert on == off == ref
+    assert e_on.stats["prefill_tokens_skipped"] > 0
+    assert e_on.memory_stats().prefix_hits >= 2  # turns 2 and 3 share
+    e_on.pool.alloc.check()
+
+
+def test_share_ring_wrap_cow_bit_identical():
+    """Decode past the ring capacity wraps into the SHARED prompt
+    pages: the write rule must copy-on-write each one before the
+    scatter, keeping co-owners' streams bit-identical."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(24)
+    sys_prompt = rng.integers(0, 64, size=(24,)).astype(np.int32)
+    mk = lambda: [Request(rid=i, prompt=np.concatenate(
+        [sys_prompt, np.asarray([i + 1], np.int32)]),
+        max_new_tokens=45) for i in range(4)]
+    off = _drive(_share_engine(params, cfg, False), mk())
+    eng = _share_engine(params, cfg, True)
+    on = _drive(eng, mk())
+    assert on == off
+    mem = eng.memory_stats()
+    assert mem.cow_copies >= 1, mem.as_dict()   # wrap hit a shared page
+    eng.pool.alloc.check()
+
+
+def test_share_preempt_spill_resume_bit_identical():
+    """The PR-5 acceptance cycle WITH sharing: two batch requests fork
+    a shared prompt, an interactive deadline preempts them, their
+    private pages spill to host and fault back on resume — streams
+    still equal the solo contiguous engine bit-for-bit."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(25)
+    shared = rng.integers(0, 64, size=(17,)).astype(np.int32)
+    inter = rng.integers(0, 64, size=(40,)).astype(np.int32)
+    mk = lambda: [
+        Request(rid=0, prompt=shared.copy(), max_new_tokens=12,
+                slo="batch"),
+        Request(rid=1, prompt=np.concatenate(
+            [shared, np.asarray([3], np.int32)]), max_new_tokens=12,
+            slo="batch"),
+        Request(rid=2, prompt=inter.copy(), max_new_tokens=3,
+                slo="interactive", deadline=0.01)]
+    ref = {r.rid: _solo(params, cfg, r) for r in mk()}
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode="kv", kv_pages=8,
+                              kv_page_len=8, kv_host_pages=10,
+                              kv_share=True))
+    reqs = mk()
+    assert sched.submit(reqs[0])
+    for _ in range(4):
+        sched.step()
+    assert sched.submit(reqs[1])
+    for _ in range(2):
+        sched.step()
+    assert sched.submit(reqs[2])
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    st = sched.stats()
+    mem = st["per_rank"][0]["memory"]
+    assert {r.rid: r.out_tokens for r in done} == ref
+    assert st["preemptions"] >= 1
+    assert mem["spills"] >= 1 and mem["faults"] >= 1, mem
+    sched.shards[0].pool.alloc.check()
+
+
+@pytest.mark.slow
+def test_share_radix_churn_stress_bit_identical_no_leaks():
+    """Radix-churn stress: 20 requests drawn from 3 prompt families
+    (shared system prefixes of different lengths) churn through 3
+    slots over a tiny shared pool with EDF preemption — every stream
+    must match the solo engine, the refcount invariants must hold
+    after every step, and the pool must drain to cached-only."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(26)
+    families = [rng.integers(0, 64, size=(s,)).astype(np.int32)
+                for s in (9, 17, 25)]
+
+    def mk():
+        rng2 = np.random.default_rng(27)
+        out = []
+        for i in range(20):
+            fam = families[i % 3]
+            tail = rng2.integers(0, 64, size=(int(
+                rng2.integers(1, 8)),)).astype(np.int32)
+            out.append(Request(
+                rid=i, prompt=np.concatenate([fam, tail]),
+                max_new_tokens=int(rng2.integers(2, 10)),
+                slo="interactive" if i % 4 == 0 else "batch",
+                deadline=0.02 if i % 4 == 0 else 30.0))
+        return out
+
+    ref = {r.rid: _solo(params, cfg, r) for r in mk()}
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=3, cache_len=64,
+                              policy="edf", aging=0.01, preempt=True,
+                              kv_pages=16, kv_page_len=8,
+                              kv_host_pages=12, kv_share=True))
+    for r in mk():
+        assert sched.submit(r)
+    eng = sched.shards[0]
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+        eng.pool.alloc.check()
+    assert {r.rid: r.out_tokens for r in done} == ref
+    mem = eng.memory_stats()
+    assert mem.prefix_hits > 0
+    assert mem.device_used == mem.cached_pages and mem.host_used == 0

@@ -9,14 +9,21 @@ Five passes over the serving stack's implicit contracts:
 5. ``packed``       — PackedSASPWeight/PackedFFN format invariants
 
 Run ``python -m tools.analyze [--strict] [--baseline FILE]``.
+
+Also home to :mod:`tools.analyze.pages` — a device-free runtime
+invariant helper (``check_page_refcounts``) for the refcounted paged-KV
+allocator (DESIGN.md §16); it validates live objects, so it is called
+from tests/chaos harnesses rather than registered as a pass.
 """
 
 from .rules import RULES, Rule, rules_for_pass, PASS_NAMES
 from .common import Finding, load_baseline, write_baseline
+from .pages import check_page_refcounts
 
 __all__ = [
     "RULES", "Rule", "Finding", "PASS_NAMES", "rules_for_pass",
     "load_baseline", "write_baseline", "run_all",
+    "check_page_refcounts",
 ]
 
 

@@ -1,0 +1,97 @@
+"""Paged-KV refcount invariant helper (DESIGN.md §16).
+
+Device-free validation of a live :class:`repro.serve.memory`
+``PageAllocator`` (or the ``PagedKVPool`` wrapping one), in the style
+of the packed-format validators in :mod:`tools.analyze.packed`: plain
+host-side bookkeeping checks that tests and chaos harnesses can run
+after every adversarial event (kill/revive, preempt storm, forced
+spill) without touching the accelerator.
+
+Unlike the five analyzer passes this is NOT a registered static-
+analysis rule — there is no source file to scan; the subject is a
+runtime object.  ``check_page_refcounts`` returns a list of error
+strings (empty = healthy) instead of asserting, so a harness can
+attach context before failing:
+
+    errs = check_page_refcounts(engine.pool)
+    assert not errs, errs
+
+Invariants (the prose form of ``PageAllocator.check``):
+
+* refcount == number of block-table references, for every owned page
+* device pages partition exactly into {owned} ∪ {free} ∪ {cached} —
+  no leaks, no double-frees
+* host slots partition into {spilled refs} ∪ {free}
+* high watermark respected (``used_dev <= cap``)
+* every cached (rc-0, LRU-evictable) page is registered in the radix
+  index, every registered page is device-resident, nodes point back
+  at their page
+* share disabled ⇒ no radix state and every refcount is exactly 1
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+def check_page_refcounts(pool_or_alloc) -> List[str]:
+    """Validate refcount/partition invariants. Returns error strings
+    (empty list = all invariants hold). Accepts a ``PagedKVPool``, a
+    bare ``PageAllocator``, or ``None`` (contiguous engine — nothing
+    to check)."""
+    if pool_or_alloc is None:
+        return []
+    a = getattr(pool_or_alloc, "alloc", pool_or_alloc)
+    errs: List[str] = []
+
+    ref_count: Dict[int, int] = {}
+    owned_host: List[int] = []
+    for rid, refs in a.tables.items():
+        for e in refs:
+            if e is None:
+                continue
+            if e[0] == "dev":
+                ref_count[e[1]] = ref_count.get(e[1], 0) + 1
+            else:
+                owned_host.append(e[1])
+
+    if ref_count != a.rc:
+        errs.append(f"refcount != block-table references: "
+                    f"rc={a.rc} vs tables={ref_count}")
+    seen = sorted(list(ref_count) + list(a.free_dev) + list(a.cached))
+    if seen != a._all_dev:
+        errs.append(f"device pages leaked or double-owned: "
+                    f"owned+free+cached={seen} vs all={a._all_dev}")
+    if sorted(owned_host + list(a.free_host)) != list(range(a.n_host)):
+        errs.append(f"host slots leaked or double-owned: "
+                    f"owned={sorted(owned_host)} free={a.free_host}")
+    if len(set(owned_host)) != len(owned_host):
+        errs.append(f"host slot double-referenced: {sorted(owned_host)}")
+    if a.used_dev > a.cap:
+        errs.append(f"watermark breached: {a.used_dev} > cap {a.cap}")
+    if not set(a.preempted).isdisjoint(a.resident):
+        errs.append("request both resident and preempted: "
+                    f"{set(a.preempted) & a.resident}")
+    if set(a.tables) != a.resident | set(a.preempted):
+        errs.append("table set != resident ∪ preempted")
+    for rid in a.resident:
+        if any(e is not None and e[0] != "dev" for e in a.tables[rid]):
+            errs.append(f"resident rid {rid} holds spilled pages")
+    if len(set(a.cached)) != len(a.cached):
+        errs.append(f"cached LRU holds duplicates: {a.cached}")
+    for p in a.cached:
+        if p not in a._node_of:
+            errs.append(f"cached page {p} not in the radix index")
+    for p, node in a._node_of.items():
+        if node.page != p:
+            errs.append(f"radix node for page {p} points at "
+                        f"{node.page}")
+        if p not in a.rc and p not in a.cached:
+            errs.append(f"registered page {p} neither owned nor cached")
+    if not a.share:
+        if a._node_of or a.cached:
+            errs.append("share disabled but radix state exists")
+        bad = {p: c for p, c in a.rc.items() if c != 1}
+        if bad:
+            errs.append(f"share disabled but refcounts != 1: {bad}")
+    return errs
