@@ -35,6 +35,14 @@ p50/p95 and per-class tokens/sec — the acceptance bar is
 interactive-class p95 strictly better under EDF with batch-class
 throughput within 10% of FCFS.
 
+The speculative-decoding section (DESIGN.md §17) reruns the packed
+paged engine with a higher-sparsity self-drafter (draft-k/verify-1
+over shared scratch pages) at trained-model-like acceptance (crafted
+prunable-tile magnitudes; see ``_spec_crafted_params``) plus a
+natural-weights acceptance-floor row — the acceptance bar is >1.5x
+decode tok/s at some draft sparsity in [0.5, 0.75] with streams
+bit-identical to the spec-off engine.
+
 The frontend-recovery section (DESIGN.md §14) drives the same fixed
 Poisson load through the fault-tolerant cluster frontend over 2 hosts
 with 0 vs 1 host chaos-killed mid-load — goodput and p50/p95 with a
@@ -572,6 +580,136 @@ def bench_engine_share() -> List:
     return rows
 
 
+SPEC_DS = (0.5, 0.625, 0.75)    # drafter sparsities on the ladder
+SPEC_K = 12                     # draft tokens per verify pass
+SPEC_EPS = 0.05                 # crafted prunable-tile magnitude
+SPEC_MAX_NEW = 40
+SPEC_REPS = 4
+
+
+def _spec_requests(vocab: int) -> List[Request]:
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=(8 + 5 * i,))
+                    .astype(np.int32),
+                    max_new_tokens=SPEC_MAX_NEW)
+            for i in range(SLOTS)]
+
+
+def _spec_crafted_params(params, cfg, block: int = 8):
+    """Weights whose drafter/target agreement mirrors a TRAINED
+    pruned model's. Random-init weights give the self-speculation
+    ladder nothing to agree on (drafter and target argmaxes are
+    uncorrelated noise), so acceptance — the one workload-dependent
+    input to speculative throughput — would be meaningless. A model
+    actually trained under SASP concentrates magnitude in the
+    surviving tiles; we reproduce that structure directly: tiles
+    OUTSIDE the max-draft-sparsity survivor set are scaled to
+    SPEC_EPS of their init value, so a drafter re-pruned at up to
+    max(SPEC_DS) computes nearly the same function as the target and
+    the bench measures the machinery at trained-model-like acceptance
+    (reported per row, alongside a natural-weights reference row)."""
+    from repro.configs.base import SASPConfig
+    from repro.core.pruning import prune_params
+    sasp = SASPConfig(enabled=True, block_k=block, block_n=block,
+                      sparsity=max(SPEC_DS), scope="ffn")
+    pruned, _ = prune_params(params, sasp)
+    return jax.tree.map(lambda d, p: p + SPEC_EPS * (d - p),
+                        params, pruned)
+
+
+def bench_engine_spec() -> List:
+    """Self-speculative decoding on the sparsity ladder (DESIGN.md
+    §17): the packed target drafts k tokens through a higher-sparsity
+    repack of its OWN weights, then verifies them in one batched
+    target pass — greedy streams stay bit-identical to sequential
+    decode (checked). Decode throughput wins come from amortizing the
+    per-step dispatch + engine overhead across k+1 tokens per verify
+    (and, on real tile-skip hardware, from the drafter's pruned-tile
+    FLOP discount that interpret-mode CPU kernels do not reproduce).
+    Acceptance bar: >1.5x decode tok/s over the spec-off engine at
+    some draft sparsity in [0.5, 0.75], streams identical."""
+    rows = []
+    print("\n== self-speculative decoding: drafter on the sparsity "
+          f"ladder, k={SPEC_K}, target packed@0.50 ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    crafted = _spec_crafted_params(params0, cfg0)
+    tparams, tcfg = build_serving_params(
+        crafted, cfg0, path="packed", sparsity=0.5, block_k=8,
+        block_n=8, verbose=False)
+    nparams, ncfg = build_serving_params(
+        params0, cfg0, path="packed", sparsity=0.5, block_k=8,
+        block_n=8, verbose=False)
+
+    def drive(params, cfg, ds):
+        kw = dict(batch_slots=SLOTS, cache_len=MEM_CACHE,
+                  kv_pages=2 * SLOTS * (MEM_CACHE // MEM_PAGE),
+                  kv_page_len=MEM_PAGE)
+        if ds is not None:
+            kw.update(draft_sparsity=ds, draft_k=SPEC_K)
+        eng = Engine(params, cfg, **kw)
+        eng.run(_spec_requests(cfg.vocab_size))     # jit warm-up
+        best = 0.0
+        for _ in range(SPEC_REPS):                  # dispatch-bound:
+            reqs = _spec_requests(cfg.vocab_size)   # best-of filters
+            t0 = time.perf_counter()                # scheduler noise
+            done = eng.run(reqs)
+            dt = time.perf_counter() - t0
+            best = max(best, sum(len(r.out_tokens) for r in done) / dt)
+        streams = {r.rid: list(r.out_tokens) for r in done}
+        st = eng.stats
+        acc = st.get("spec_accepted_tokens", 0)
+        drafted = st.get("spec_draft_tokens", 0)
+        return best, streams, (acc, drafted, st.get("spec_rounds", 0))
+
+    base, ref, _ = drive(tparams, tcfg, None)
+    print(f"  spec off          : {base:7.1f} tok/s")
+    rows.append(("engine/spec/off", 1e6 / base,
+                 f"tok_s={base:.2f};target=packed@0.50;k={SPEC_K}"))
+    best_x = 0.0
+    for ds in SPEC_DS:
+        tok, streams, (acc, drafted, rounds) = drive(tparams, tcfg, ds)
+        agree = int(streams == ref)
+        x = tok / base
+        best_x = max(best_x, x)
+        acc_pct = 100.0 * acc / max(1, drafted)
+        print(f"  draft sp={ds:5.3f}   : {tok:7.1f} tok/s  x{x:.2f}  "
+              f"accepted {acc}/{drafted} ({acc_pct:.0f}%), "
+              f"{rounds} rounds, streams "
+              f"{'==' if agree else '!='}")
+        rows.append((f"engine/spec/ds{ds:.3f}", 1e6 / tok,
+                     f"tok_s={tok:.2f};speedup_x={x:.3f};"
+                     f"accept_pct={acc_pct:.1f};accepted={acc};"
+                     f"drafted={drafted};rounds={rounds};k={SPEC_K};"
+                     f"agree={agree}"))
+    # reference: natural (uncrafted) random-init weights. NOTE tiny
+    # random models emit degenerate (repetitive) streams, so even this
+    # drafter tracks the target — the row records the measured
+    # acceptance rather than assuming it; the adversarial LOW-
+    # acceptance regime is covered by the stubbed-drafter tests in
+    # tests/test_spec_decode.py, where acceptance is controlled exactly
+    nbase, nref, _ = drive(nparams, ncfg, None)
+    ntok, nstreams, (acc, drafted, rounds) = drive(nparams, ncfg, 0.75)
+    nagree = int(nstreams == nref)
+    acc_pct = 100.0 * acc / max(1, drafted)
+    print(f"  natural sp=0.750  : {ntok:7.1f} tok/s  x{ntok/nbase:.2f}"
+          f"  accepted {acc}/{drafted} ({acc_pct:.0f}%), streams "
+          f"{'==' if nagree else '!='}")
+    rows.append(("engine/spec/natural0.750", 1e6 / ntok,
+                 f"tok_s={ntok:.2f};speedup_x={ntok/nbase:.3f};"
+                 f"accept_pct={acc_pct:.1f};accepted={acc};"
+                 f"drafted={drafted};rounds={rounds};k={SPEC_K};"
+                 f"agree={nagree}"))
+    ok = best_x > 1.5
+    print(f"  best speedup x{best_x:.2f} "
+          f"({'OK' if ok else 'REGRESSION: spec bar missed!'})")
+    rows.append(("engine/spec/best", 0.0,
+                 f"best_speedup_x={best_x:.3f};bar=1.5;"
+                 f"ok={int(ok)}"))
+    return rows
+
+
 FE_REQ = 12
 FE_MAX_NEW = (2, 12, 4, 16, 6, 2, 10, 4)
 FE_KILL_STEP = 6                # host 0 dies this many ticks in
@@ -706,6 +844,7 @@ def bench_engine() -> List:
     rows.extend(bench_engine_qos())
     rows.extend(bench_engine_memory())
     rows.extend(bench_engine_share())
+    rows.extend(bench_engine_spec())
     rows.extend(bench_engine_recovery())
     return rows
 

@@ -487,6 +487,64 @@ def deploy_packed(params: Params, cfg: ModelConfig, *,
     return out, cfg
 
 
+_PACKED_OVERLAYS = ("sasp_packed", "sasp_fused", "sasp_bsr")
+
+
+def strip_packed(params: Params) -> Params:
+    """Drop every deployment overlay (packed / fused / BSR containers)
+    from a deployed tree, leaving the dense source-of-truth weights —
+    the starting point for re-deploying the SAME weights at a different
+    fidelity (``draft_pack``, ``reshard_packed`` rebuilds)."""
+    out = dict(params)
+    segs = []
+    for seg in params.get("segments", ()):
+        new_seg = {}
+        for slot_name, slot in seg.items():
+            slot = dict(slot)
+            for part in ("ffn", "mixer"):
+                sub = slot.get(part)
+                if isinstance(sub, dict) and any(
+                        k in sub for k in _PACKED_OVERLAYS):
+                    slot[part] = {k: v for k, v in sub.items()
+                                  if k not in _PACKED_OVERLAYS}
+            new_seg[slot_name] = slot
+        segs.append(new_seg)
+    out["segments"] = tuple(segs)
+    return out
+
+
+def draft_pack(params: Params, cfg: ModelConfig, *,
+               sparsity: float, quantize: bool = False,
+               fuse_ffn: bool = True, mesh=None,
+               tp: Optional[int] = None) -> Tuple[Params, ModelConfig]:
+    """Self-speculation drafter on the sparsity ladder (DESIGN.md §17).
+
+    Re-prune the DEPLOYED weights at a HIGHER sparsity and pack the
+    result: the returned ``(params', cfg')`` is a cheap drafter for the
+    full-fidelity target built from the SAME weights — identical
+    architecture, so identical cache geometry, so drafter and target
+    share one paged KV pool. Greedy exactness never depends on the
+    drafter (every emitted token is a target argmax); drafter fidelity
+    only moves the acceptance rate.
+
+    sparsity: the drafter's global tile sparsity (normally well above
+    the target's — equal or lower is legal but buys nothing).
+    quantize: additionally pack drafter values as int8 + per-block
+    scales (the ladder's other axis)."""
+    if not 0.0 < float(sparsity) < 1.0:
+        raise ValueError(
+            f"draft sparsity={sparsity} must lie in (0, 1)")
+    from repro.core.pruning import prune_params
+    dsasp = dataclasses.replace(
+        cfg.sasp, enabled=True, sparsity=float(sparsity),
+        quantize=bool(quantize))
+    dcfg = dataclasses.replace(cfg, sasp=dsasp)
+    dense = strip_packed(params)
+    pruned, _ = prune_params(dense, dsasp)
+    return deploy_packed(pruned, dcfg, quantize=bool(quantize),
+                         fuse_ffn=fuse_ffn, mesh=mesh, tp=tp)
+
+
 # ---------------------------------------------------------------------------
 # Elastic re-deploy: reshard existing containers (ROADMAP fast path)
 # ---------------------------------------------------------------------------

@@ -145,6 +145,69 @@ def parse_buckets(spec: Optional[str], cache_len: int
     return lens
 
 
+def validate_kv_flags(*, kv_pages: Optional[int], kv_watermark: float,
+                      kv_share: bool, kv_share_min_pages: int,
+                      int8_kv: bool, draft_sparsity: Optional[float],
+                      draft_k: int = 4, draft_int8: bool = False,
+                      kv_dedup_every: int = 0, cache_len: int = 256):
+    """Single source of truth for cross-flag KV / speculative-decode
+    validation. Every serving path (--hosts frontend, --scheduler,
+    solo engine) builds its engines from the same flag set, so they
+    must reject the same combinations identically — the checks used to
+    be scattered per-branch and drifted (a bad combo that the solo
+    path rejected sailed through the frontend until an engine deep in
+    a host raised). Raises SystemExit with a usage message."""
+    if not 0.0 < kv_watermark <= 1.0:
+        raise SystemExit(
+            f"--kv-watermark must lie in (0, 1], got {kv_watermark}")
+    if kv_pages is not None and kv_pages < 1:
+        raise SystemExit(f"--kv-pages must be >= 1, got {kv_pages}")
+    if kv_share:
+        if kv_pages is None:
+            raise SystemExit("--kv-share requires --kv-pages (prefix "
+                             "sharing lives on the paged pool)")
+        if int8_kv:
+            raise SystemExit("--kv-share is incompatible with "
+                             "--int8-kv: suffix prefill would attend "
+                             "dequantized prefix KV and break "
+                             "bit-identity (DESIGN.md §16)")
+    if kv_share_min_pages < 1:
+        raise SystemExit(f"--kv-share-min-pages must be >= 1, got "
+                         f"{kv_share_min_pages}")
+    if draft_sparsity is not None:
+        if kv_pages is None:
+            raise SystemExit("--draft-sparsity requires --kv-pages: "
+                             "speculative drafts live on scratch pages "
+                             "of the paged pool (DESIGN.md §17)")
+        if int8_kv:
+            raise SystemExit("--draft-sparsity is incompatible with "
+                             "--int8-kv: verification attends fresh "
+                             "fp KV while sequential decode attends "
+                             "dequantized KV, breaking bit-identity "
+                             "(DESIGN.md §17)")
+        if not 0.0 < draft_sparsity < 1.0:
+            raise SystemExit(f"--draft-sparsity must lie in (0, 1), "
+                             f"got {draft_sparsity}")
+        if draft_k < 1:
+            raise SystemExit(f"--draft-k must be >= 1, got {draft_k}")
+        if draft_k + 1 > cache_len:
+            raise SystemExit(
+                f"--draft-k {draft_k} needs a draft+verify window of "
+                f"{draft_k + 1} tokens inside --cache-len "
+                f"({cache_len}); shrink --draft-k")
+    elif draft_int8:
+        raise SystemExit("--draft-int8 modifies the drafter pack; add "
+                         "--draft-sparsity S")
+    if kv_dedup_every < 0:
+        raise SystemExit(f"--kv-dedup-every must be >= 0, got "
+                         f"{kv_dedup_every}")
+    if kv_dedup_every and not (kv_pages and kv_share):
+        raise SystemExit("--kv-dedup-every requires --kv-pages and "
+                         "--kv-share: the dedup sweep re-links "
+                         "identical resident pages through the prefix "
+                         "radix (DESIGN.md §16)")
+
+
 def check_ranks(ranks: Optional[int], mesh, profile: str = "tp"):
     """--ranks vs the mesh's DP size: a clear usage error instead of
     the cryptic submesh-count ValueError from the scheduler."""
@@ -259,6 +322,29 @@ def main():
                     help="minimum whole pages a prompt must match "
                          "before sharing is taken (shorter matches "
                          "prefill from scratch)")
+    ap.add_argument("--draft-sparsity", type=float, default=None,
+                    help="self-speculative decoding (DESIGN.md §17): "
+                         "repack the SAME weights at this higher tile "
+                         "sparsity as a cheap drafter; greedy streams "
+                         "stay bit-identical (every emitted token is a "
+                         "target argmax). Requires --kv-pages, "
+                         "incompatible with --int8-kv")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculation depth: drafter tokens proposed "
+                         "per verify step (draft-k/verify-1)")
+    ap.add_argument("--draft-int8", action="store_true",
+                    help="quantize the drafter pack's weights to INT8 "
+                         "on top of --draft-sparsity (drafter fidelity "
+                         "only moves acceptance rate, never outputs)")
+    ap.add_argument("--draft-interactive", action="store_true",
+                    help="let interactive-SLO requests speculate too "
+                         "(default: batch-class only — speculation "
+                         "trades per-step latency for throughput)")
+    ap.add_argument("--kv-dedup-every", type=int, default=0,
+                    help="cross-request dedup sweep cadence in decode "
+                         "steps (0 = off): re-link identical "
+                         "already-resident pages that missed "
+                         "admission-time sharing; requires --kv-share")
     ap.add_argument("--buckets", default=None,
                     help="prefill shape bucketing: an int count builds "
                          "a geometric table up to --cache-len; "
@@ -326,24 +412,15 @@ def main():
     else:
         chaos_cfg = None
     buckets = parse_buckets(args.buckets, args.cache_len)
-    if not 0.0 < args.kv_watermark <= 1.0:
-        raise SystemExit(
-            f"--kv-watermark must lie in (0, 1], got "
-            f"{args.kv_watermark}")
-    if args.kv_pages is not None and args.kv_pages < 1:
-        raise SystemExit(f"--kv-pages must be >= 1, got {args.kv_pages}")
-    if args.kv_share:
-        if args.kv_pages is None:
-            raise SystemExit("--kv-share requires --kv-pages (prefix "
-                             "sharing lives on the paged pool)")
-        if args.int8_kv:
-            raise SystemExit("--kv-share is incompatible with "
-                             "--int8-kv: suffix prefill would attend "
-                             "dequantized prefix KV and break "
-                             "bit-identity (DESIGN.md §16)")
-    if args.kv_share_min_pages < 1:
-        raise SystemExit(f"--kv-share-min-pages must be >= 1, got "
-                         f"{args.kv_share_min_pages}")
+    # one validator for all three serving paths (frontend / scheduler
+    # / solo) — they must reject the same flag combos identically
+    validate_kv_flags(
+        kv_pages=args.kv_pages, kv_watermark=args.kv_watermark,
+        kv_share=args.kv_share,
+        kv_share_min_pages=args.kv_share_min_pages,
+        int8_kv=args.int8_kv, draft_sparsity=args.draft_sparsity,
+        draft_k=args.draft_k, draft_int8=args.draft_int8,
+        kv_dedup_every=args.kv_dedup_every, cache_len=args.cache_len)
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -410,7 +487,11 @@ def main():
                 kv_watermark=args.kv_watermark,
                 kv_host_pages=args.kv_host_pool,
                 kv_share=args.kv_share,
-                kv_share_min_pages=args.kv_share_min_pages))
+                kv_share_min_pages=args.kv_share_min_pages,
+                draft_sparsity=args.draft_sparsity,
+                draft_k=args.draft_k, draft_int8=args.draft_int8,
+                draft_interactive=args.draft_interactive,
+                kv_dedup_every=args.kv_dedup_every))
         fe = ClusterFrontend(hosts, FrontendConfig(
             retries=args.retries, backoff_base=args.backoff,
             request_timeout=args.timeout,
@@ -461,7 +542,11 @@ def main():
                 kv_watermark=args.kv_watermark,
                 kv_host_pages=args.kv_host_pool,
                 kv_share=args.kv_share,
-                kv_share_min_pages=args.kv_share_min_pages))
+                kv_share_min_pages=args.kv_share_min_pages,
+                draft_sparsity=args.draft_sparsity,
+                draft_k=args.draft_k, draft_int8=args.draft_int8,
+                draft_interactive=args.draft_interactive,
+                kv_dedup_every=args.kv_dedup_every))
         t0 = time.time()
         done = drive(sched.run, sched.stream)
         dt = time.time() - t0
@@ -492,10 +577,22 @@ def main():
                      kv_watermark=args.kv_watermark,
                      kv_host_pages=args.kv_host_pool,
                      kv_share=args.kv_share,
-                     kv_share_min_pages=args.kv_share_min_pages)
+                     kv_share_min_pages=args.kv_share_min_pages,
+                     draft_sparsity=args.draft_sparsity,
+                     draft_k=args.draft_k, draft_int8=args.draft_int8,
+                     draft_interactive=args.draft_interactive,
+                     kv_dedup_every=args.kv_dedup_every)
         t0 = time.time()
         done = drive(eng.run, eng.stream)
         dt = time.time() - t0
+        if args.draft_sparsity is not None:
+            st = eng.stats
+            drafted = st["spec_draft_tokens"]
+            acc = st["spec_accepted_tokens"]
+            print(f"speculative: {st['spec_rounds']} rounds, "
+                  f"{acc}/{max(drafted, 1)} drafts accepted "
+                  f"({acc / max(drafted, 1):.0%}), "
+                  f"{st['spec_fallbacks']} fallbacks")
         mem = eng.memory_stats()
         if mem is not None:
             print(f"paged KV: {mem.device_pages} device pages × "

@@ -257,12 +257,20 @@ def _apply_slot_prefill_past(sp: Dict, spec: LayerSpec, cfg: ModelConfig,
     C = cache.k.shape[1]
     S = x.shape[1]
     h = rmsnorm_apply(sp["norm1"], x, eps=cfg.norm_eps)
-    # global layers: window > any valid delta (max is prompt_len - 1
-    # <= C - 1); the reference full prefill's S_full + 1 and this
-    # C + S + 1 are both effectively unbounded, so masks agree on
-    # every valid pair. Local layers share cfg.sliding_window exactly.
+    # global layers: window = C, the ring capacity. Sequential decode
+    # can never attend an entry more than C - 1 positions back (the
+    # ring holds exactly the last C positions and overwrites before
+    # attending), so delta >= C pairs only arise here from OLD-LAP
+    # entries a post-wrap past gather still carries — entries the
+    # sequential path has already overwritten. Capping at C masks them,
+    # which keeps this pass step-equivalent to sequential decode (the
+    # speculative verify relies on this, DESIGN.md §17). Pre-wrap
+    # callers (suffix prefill of a fresh prompt: all deltas <=
+    # prompt_len - 1 <= C - 1) see every valid pair unmasked, exactly
+    # as the reference full prefill does. Local layers share
+    # cfg.sliding_window exactly.
     window = cfg.sliding_window if (
-        spec[1] == ATTN_LOCAL and cfg.sliding_window) else C + S + 1
+        spec[1] == ATTN_LOCAL and cfg.sliding_window) else C
     y, new_cache = attn_mod.attn_apply_prefill_past(
         sp["mixer"], cfg, h, positions, cache, window)
     x = x + y
@@ -299,7 +307,8 @@ def _run_segments_prefill_past(params, cfg: ModelConfig, x, positions,
     return x, tuple(new_caches)
 
 
-def prefill_with_past(params, cfg: ModelConfig, tokens, positions, past):
+def prefill_with_past(params, cfg: ModelConfig, tokens, positions, past,
+                      all_logits: bool = False):
     """Suffix-only prefill for prefix sharing (DESIGN.md §16).
 
     tokens: (B, S) the SUFFIX of each prompt, left-padded; positions:
@@ -307,12 +316,16 @@ def prefill_with_past(params, cfg: ModelConfig, tokens, positions, past):
     gather of each request's matched prefix pages — all other ring
     slots hold pos = -1 and mask out). Returns (last-token logits
     (B, 1, V), suffix-only caches) — the caches scatter to the fresh
-    suffix pages and must never touch the shared prefix pages."""
+    suffix pages and must never touch the shared prefix pages.
+
+    ``all_logits=True`` returns logits for EVERY suffix position
+    ((B, S, V)) — the speculative verify pass (DESIGN.md §17) needs
+    the target's prediction after each drafted token in one call."""
     x = _embed_in(params, cfg, tokens, None)
     positions = jnp.asarray(positions, jnp.int32)
     x, caches = _run_segments_prefill_past(params, cfg, x, positions,
                                            past)
-    logits = logits_fn(params, cfg, x[:, -1:])
+    logits = logits_fn(params, cfg, x if all_logits else x[:, -1:])
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
     return logits, caches

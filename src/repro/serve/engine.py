@@ -186,17 +186,25 @@ class Engine:
                  kv_watermark: float = 1.0,
                  kv_host_pages: int = 0,
                  kv_share: bool = False,
-                 kv_share_min_pages: int = 1):
+                 kv_share_min_pages: int = 1,
+                 draft_sparsity: Optional[float] = None,
+                 draft_k: int = 4,
+                 draft_int8: bool = False,
+                 draft_interactive: bool = False,
+                 kv_dedup_every: int = 0):
         assert admission in ADMISSION_MODES, admission
         self.admission = admission
         self.rank = rank
         self.dead = False               # set by the scheduler on a raise
         self.stats = {"decode_steps": 0, "admitted": 0,
                       "prefill_tokens": 0, "prefill_tokens_skipped": 0,
+                      "reprefill_tokens": 0,
                       "generated_tokens": 0,
                       "continuous_refills": 0, "preemptions": 0,
                       "resumes": 0, "failed": 0, "requeued": 0,
-                      "cancelled": 0, "deaths": 0}
+                      "cancelled": 0, "deaths": 0,
+                      "spec_rounds": 0, "spec_draft_tokens": 0,
+                      "spec_accepted_tokens": 0, "spec_fallbacks": 0}
         self.mesh = mesh
         self.profile = profile
         if mesh is not None:
@@ -274,6 +282,60 @@ class Engine:
             lambda leaf: leaf[:, slot], caches))
         self._restore = jax.jit(lambda caches, saved, slot: jax.tree.map(
             lambda leaf, s: leaf.at[:, slot].set(s), caches, saved))
+        # self-speculative decoding (DESIGN.md §17): the SAME weights
+        # re-pruned at a higher sparsity (optionally int8) draft k
+        # tokens per round into scratch pages; one full-fidelity verify
+        # pass accepts a prefix of them. Greedy exactness never rests
+        # on the drafter — every emitted token is a target argmax.
+        self.draft_sparsity = draft_sparsity
+        self.draft_k = int(draft_k)
+        self.draft_interactive = bool(draft_interactive)
+        self._draft = None
+        if draft_sparsity is not None:
+            if self.pool is None:
+                raise ValueError(
+                    "speculative decoding (draft_sparsity) requires "
+                    "the paged KV pool (kv_pages) — draft tokens live "
+                    "on scratch pages")
+            if getattr(cfg, "kv_quant", False):
+                raise ValueError(
+                    "speculative decoding is incompatible with "
+                    "kv_quant: the verify pass attends fresh fp "
+                    "suffix K/V while sequential decode attends "
+                    "dequantized int8 entries, breaking the "
+                    "bit-identity contract")
+            if self.draft_k < 1:
+                raise ValueError(f"draft_k={draft_k} must be >= 1")
+            if self.draft_k + 1 > cache_len:
+                raise ValueError(
+                    f"draft_k={draft_k} needs k+1 <= cache_len="
+                    f"{cache_len}: a round's write range must fit the "
+                    f"ring without self-overlap")
+            from repro.core.deploy import draft_pack
+            dparams, dcfg = draft_pack(
+                self.params, cfg, sparsity=float(draft_sparsity),
+                quantize=bool(draft_int8))
+            if mesh is not None:
+                from repro.distribution import sharding as shd
+                dsh = shd.param_shardings(
+                    dcfg, jax.eval_shape(lambda: dparams), mesh,
+                    profile)
+                dparams = jax.device_put(dparams, dsh)
+            self._draft = (dparams, dcfg)
+            self._draft_decode = jax.jit(partial(
+                self._paged_decode_step, dcfg, self.pool.NB,
+                self.pool.page_len))
+            self._verify = jax.jit(partial(
+                self._paged_spec_verify, cfg))
+        # opportunistic cross-request dedup (ROADMAP item 1 leftover):
+        # re-link identical already-resident pages every N steps
+        self.kv_dedup_every = max(0, int(kv_dedup_every))
+        if self.kv_dedup_every and (self.pool is None
+                                    or not self.pool.share):
+            raise ValueError(
+                "kv_dedup_every requires the sharing page pool "
+                "(kv_pages + kv_share) — without the radix index "
+                "there is no content evidence to merge on")
 
     @staticmethod
     def _prefill_and_write(cfg, cache_len, params, toks, poss, caches,
@@ -363,6 +425,30 @@ class Engine:
         done = active & ((nxt == eos) | (remaining <= 1))
         data = kvmem.scatter_written_pages(data, caches, bt, pos, NB, L)
         return nxt, done, data, key
+
+    @staticmethod
+    def _paged_spec_verify(cfg, params, toks, poss, data, past_bt,
+                           dests):
+        """Jitted speculative verify (DESIGN.md §17): ONE full-fidelity
+        suffix pass over [x0, d1..dk] (absolute positions P..P+k, pad
+        rows all -1) against each slot's REAL pages, returning the
+        target's greedy token after EVERY position — t_pred[j] is what
+        sequential decode would emit after consuming position P+j. The
+        fresh target K/V merges into the round's SCRATCH pages
+        (``dests``), pos-masked so pre-range and old-lap entries seeded
+        from the real pages survive: whatever is later promoted is
+        exact target KV (the drafter's writes are fully overwritten —
+        its entries never outlive the round)."""
+        from repro.serve import memory as kvmem
+        past = kvmem.gather_block_tables(data, past_bt)
+        logits, caches1 = lm.prefill_with_past(params, cfg, toks, poss,
+                                               past, all_logits=True)
+        # same greedy read as _sample_tokens' temp<=0 branch: argmax
+        # over f32 logits — bit-identical token selection
+        pred = jnp.argmax(logits.astype(jnp.float32),
+                          axis=-1).astype(jnp.int32)
+        data = kvmem.masked_scatter_pages(data, caches1, dests)
+        return pred, data
 
     # ------------------------------------------------------------------
     def _mesh_ctx(self):
@@ -795,8 +881,16 @@ class Engine:
             for slot, req in pending:
                 seq = self._prefill_tokens(req)
                 skip = self._shared_tokens.get(req.rid, 0)
-                self.stats["prefill_tokens"] += len(seq) - skip
-                self.stats["prefill_tokens_skipped"] += skip
+                if req._resume_pos is None:
+                    self.stats["prefill_tokens"] += len(seq) - skip
+                    self.stats["prefill_tokens_skipped"] += skip
+                else:
+                    # re-prefill resume: the prompt was already counted
+                    # (and its shared pages already credited) at first
+                    # admission — charging it again double-counts both
+                    # stats vs the solo run. The recovery work is its
+                    # own counter.
+                    self.stats["reprefill_tokens"] += len(seq) - skip
                 (shared if skip else normal).append((slot, req, seq))
             if shared:
                 self._prefill_group_shared(
@@ -850,6 +944,10 @@ class Engine:
         self._admit()
 
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        # speculative rounds (DESIGN.md §17) claim eligible slots
+        # FIRST: their decode writes land on scratch pages, so they
+        # skip the write-rule guard below entirely
+        specs = self._collect_specs(active) if active else []
         if self.pool is not None and active:
             # decode growth + write rule: the page holding this step's
             # write position must be resident AND writable (rc == 1,
@@ -867,7 +965,7 @@ class Engine:
                         req.rid, (int(self.pos[i]) % C) // L):
                     self.queue.insert(0, self.preempt_slot(i))
                     active.remove(i)
-        if not active:
+        if not active and not specs:
             finished = self._finished_at_admission
             self._finished_at_admission = []
             if self.pool is not None:
@@ -878,37 +976,49 @@ class Engine:
         # can still recover them as completed (they are done, not lost)
         finished: List[Request] = []
 
-        last = np.zeros((self.B, 1), np.int32)
-        temps = np.zeros((self.B,), np.float32)
-        act = np.zeros((self.B,), bool)
-        eos = np.full((self.B,), -1, np.int64)
-        remaining = np.zeros((self.B,), np.int32)
-        for i in active:
-            req = self.slot_req[i]
-            last[i, 0] = req.out_tokens[-1]
-            temps[i] = req.temperature
-            act[i] = True
-            eos[i] = -1 if req.eos_id is None else req.eos_id
-            remaining[i] = req.max_new_tokens - len(req.out_tokens)
+        if active:
+            last = np.zeros((self.B, 1), np.int32)
+            temps = np.zeros((self.B,), np.float32)
+            act = np.zeros((self.B,), bool)
+            eos = np.full((self.B,), -1, np.int64)
+            remaining = np.zeros((self.B,), np.int32)
+            for i in active:
+                req = self.slot_req[i]
+                last[i, 0] = req.out_tokens[-1]
+                temps[i] = req.temperature
+                act[i] = True
+                eos[i] = -1 if req.eos_id is None else req.eos_id
+                remaining[i] = req.max_new_tokens - len(req.out_tokens)
 
-        if self.pool is not None:
-            bt = jnp.asarray(self.pool.block_table(
-                [r.rid if r is not None else None
-                 for r in self.slot_req]))
-            nxt, done, self.pool.data, self._key = self._decode(
-                self.params, jnp.asarray(last),
-                jnp.asarray(self.pos, jnp.int32), self.pool.data, bt,
-                self._key, jnp.asarray(temps), jnp.asarray(act),
-                jnp.asarray(eos.astype(np.int32)),
-                jnp.asarray(remaining))
+            if self.pool is not None:
+                # speculating slots are masked AND their rows read/write
+                # the trash tables — the normal decode never touches
+                # their pages this step
+                bt = jnp.asarray(self.pool.block_table(
+                    [r.rid if (r is not None and i in active) else None
+                     for i, r in enumerate(self.slot_req)]))
+                nxt, done, self.pool.data, self._key = self._decode(
+                    self.params, jnp.asarray(last),
+                    jnp.asarray(self.pos, jnp.int32), self.pool.data, bt,
+                    self._key, jnp.asarray(temps), jnp.asarray(act),
+                    jnp.asarray(eos.astype(np.int32)),
+                    jnp.asarray(remaining))
+            else:
+                nxt, done, self.caches, self._key = self._decode(
+                    self.params, jnp.asarray(last),
+                    jnp.asarray(self.pos, jnp.int32), self.caches,
+                    self._key,
+                    jnp.asarray(temps), jnp.asarray(act),
+                    jnp.asarray(eos.astype(np.int32)),
+                    jnp.asarray(remaining))
+            nxt = np.asarray(nxt)               # (B,) int32 — the ONLY
+            done = np.asarray(done)             # per-token host traffic
         else:
-            nxt, done, self.caches, self._key = self._decode(
-                self.params, jnp.asarray(last),
-                jnp.asarray(self.pos, jnp.int32), self.caches, self._key,
-                jnp.asarray(temps), jnp.asarray(act),
-                jnp.asarray(eos.astype(np.int32)), jnp.asarray(remaining))
-        nxt = np.asarray(nxt)                   # (B,) int32 — the ONLY
-        done = np.asarray(done)                 # per-token host traffic
+            # every live slot is speculating: still split the step key
+            # once so the RNG key-state stays in lockstep with the
+            # non-speculative engine (temperature>0 requests admitted
+            # later draw identical randomness either way)
+            self._next_key()
 
         self.stats["decode_steps"] += 1
         self.stats["generated_tokens"] += len(active)
@@ -924,10 +1034,188 @@ class Engine:
                     self.pool.free(req.rid)
                 finished.append(req)
                 self.slot_req[i] = None
+        if specs:
+            finished += self._run_spec_round(specs)
+        if (self.kv_dedup_every
+                and self.stats["decode_steps"] % self.kv_dedup_every
+                == 0):
+            self.pool.dedup_sweep()
         finished = self._finished_at_admission + finished
         self._finished_at_admission = []
         if self.pool is not None:
             self.stats["memory"] = self.pool.stats().as_dict()
+        return finished
+
+    # -- speculative decoding (DESIGN.md §17) --------------------------
+    def _collect_specs(self, active: List[int]
+                       ) -> List[Tuple[int, Request, dict]]:
+        """Claim the slots that speculate this step (removed from
+        ``active``): greedy (temperature 0) requests — batch-class by
+        default, interactive only when opted in — with at least two
+        tokens of budget left, whose draft round can get its scratch
+        pages. Under pool pressure a slot silently decodes the normal
+        way this step (never preempted just to speculate)."""
+        if self._draft is None:
+            return []
+        C, L = self.cache_len, self.pool.page_len
+        k = self.draft_k
+        specs = []
+        for i in list(active):
+            req = self.slot_req[i]
+            if req.temperature > 0:
+                continue
+            if req.slo == "interactive" and not self.draft_interactive:
+                continue
+            if req.max_new_tokens - len(req.out_tokens) < 2:
+                continue                  # one token left: just decode
+            P = int(self.pos[i])
+            js = sorted({((P + t) % C) // L for t in range(k + 1)})
+            got = self.pool.begin_scratch(req.rid, js)
+            if got is None:
+                self.stats["spec_fallbacks"] += 1
+                continue
+            specs.append((i, req, got))
+            active.remove(i)
+        return specs
+
+    def _run_spec_round(self, specs: List[Tuple[int, Request, dict]]
+                        ) -> List[Request]:
+        """Draft-k/verify-1 over the claimed slots, batched.
+
+        Draft: k drafter decode steps through a block table whose
+        write-range logical pages are swapped to the round's scratch
+        pages — the drafter reads the real prefix, its KV lands only on
+        scratch. Verify: ONE target pass over [x0, d1..dk] against the
+        REAL pages, whose fresh KV overwrites the drafter's entries in
+        the same scratch pages (promoted KV is always target KV). With
+        a = the longest prefix of drafts matching the target's greedy
+        predictions, positions P..P+a were verified exactly as
+        sequential decode would have computed them: emit t_pred[0..a]
+        (all target argmaxes — a+1 tokens), promote the scratch pages
+        fully inside the accepted range, masked-merge the boundary
+        page, discard the rest. EOS/budget truncates the emitted run
+        and frees everything. On a promotion failure (pool exhausted
+        mid-merge) the slot falls back to an exact re-prefill resume —
+        rollback is always an unmap, never a copy."""
+        from repro.serve.memory import ZERO_PAGE, TRASH_PAGE
+        k = self.draft_k
+        C, L, NB = self.cache_len, self.pool.page_len, self.pool.NB
+        B = self.B
+        dparams, _ = self._draft
+        finished: List[Request] = []
+        try:
+            slot_rids: List[Optional[int]] = [None] * B
+            for i, req, _ in specs:
+                slot_rids[i] = req.rid
+            dbt = self.pool.block_table(slot_rids)
+            for i, req, got in specs:
+                for j, s in got.items():
+                    dbt[i, j] = s
+            dbt_j = jnp.asarray(dbt)
+            cur = np.zeros((B, 1), np.int32)
+            act = np.zeros((B,), bool)
+            for i, req, _ in specs:
+                cur[i, 0] = req.out_tokens[-1]
+                act[i] = True
+            pos_d = self.pos.astype(np.int32).copy()
+            temps0 = jnp.zeros((B,), jnp.float32)
+            eos_none = jnp.full((B,), -1, jnp.int32)
+            rem_big = jnp.full((B,), 1 << 30, jnp.int32)
+            act_j = jnp.asarray(act)
+            dkey = jax.random.PRNGKey(0)  # temp 0: argmax ignores it
+            drafts = np.zeros((k, B), np.int32)
+            for t in range(k):
+                nxt, _, self.pool.data, _ = self._draft_decode(
+                    dparams, jnp.asarray(cur),
+                    jnp.asarray(pos_d), self.pool.data, dbt_j,
+                    dkey, temps0, act_j, eos_none, rem_big)
+                drafts[t] = np.asarray(nxt)
+                cur = drafts[t].reshape(B, 1)
+                pos_d += 1
+            toks = np.zeros((B, k + 1), np.int32)
+            poss = np.full((B, k + 1), -1, np.int32)
+            verify_bt = np.full((B, NB), ZERO_PAGE, np.int32)
+            dests = np.full((B, NB), TRASH_PAGE, np.int32)
+            for i, req, got in specs:
+                P = int(self.pos[i])
+                toks[i, 0] = req.out_tokens[-1]
+                toks[i, 1:] = drafts[:, i]
+                poss[i] = np.arange(P, P + k + 1)
+                for j, p in enumerate(
+                        self.pool.alloc.dev_pages(req.rid)):
+                    if p is not None:
+                        verify_bt[i, j] = p
+                for j, s in got.items():
+                    dests[i, j] = s
+            pred, self.pool.data = self._verify(
+                self.params, jnp.asarray(toks), jnp.asarray(poss),
+                self.pool.data, jnp.asarray(verify_bt),
+                jnp.asarray(dests))
+            pred = np.asarray(pred)             # (B, k+1) target argmax
+            for i, req, got in specs:
+                P = int(self.pos[i])
+                a = 0
+                while a < k and drafts[a, i] == pred[i, a]:
+                    a += 1
+                self.stats["spec_rounds"] += 1
+                self.stats["spec_draft_tokens"] += k
+                self.stats["spec_accepted_tokens"] += a
+                done = False
+                for t in range(a + 1):
+                    tok = int(pred[i, t])
+                    self._emit(req, tok)
+                    self.stats["generated_tokens"] += 1
+                    if ((req.eos_id is not None and tok == req.eos_id)
+                            or len(req.out_tokens)
+                            >= req.max_new_tokens):
+                        done = True
+                        break
+                if done:
+                    self.pool.discard_scratch(req.rid)
+                    req.done = True
+                    req.status = "done"
+                    req.t_done = time.monotonic()
+                    self.pool.free(req.rid)
+                    finished.append(req)
+                    self.slot_req[i] = None
+                    continue
+                # not done => all a+1 tokens emitted; keep KV for
+                # positions P..P+a. Promotion invariant: a real page
+                # never holds entries beyond the slot's last written
+                # position — fully-accepted pages swap in (pure
+                # bookkeeping), the boundary page masked-merges only
+                # the accepted range, rejected pages just unmap.
+                hi = P + a
+                ok = True
+                for j in sorted(got):
+                    wj = [p for p in range(P, P + k + 1)
+                          if (p % C) // L == j]
+                    kj = [p for p in wj if p <= hi]
+                    if not kj:
+                        continue      # fully rejected: discard below
+                    if len(kj) == len(wj):
+                        self.pool.promote_scratch(req.rid, j)
+                    else:
+                        if not self.pool.ensure_writable(req.rid, j):
+                            ok = False
+                            break
+                        dst = self.pool.alloc.dev_pages(req.rid)[j]
+                        self.pool.merge_scratch_slots(got[j], dst,
+                                                      P, hi)
+                self.pool.discard_scratch(req.rid)
+                if not ok:
+                    # pool exhausted mid-promotion: the emitted tokens
+                    # stand; resume re-prefills prompt + out[:-1]
+                    # (always exact), releasing every page
+                    self.stats["spec_fallbacks"] += 1
+                    self.queue.insert(
+                        0, self.preempt_slot(i, keep_kv=False))
+                    continue
+                self.pos[i] = P + a + 1
+        finally:
+            # containment: a raise mid-round must not leak scratch
+            for _, req, _ in specs:
+                self.pool.discard_scratch(req.rid)
         return finished
 
     # -- failure containment (DESIGN.md §12/§14) -----------------------

@@ -140,6 +140,9 @@ class MemoryStats:
     prefix_pages_reused: int = 0  # pages mapped instead of allocated
     cow_copies: int = 0      # shared pages copied before a write
     cache_evictions: int = 0  # cached pages reclaimed by room-making
+    # speculative decoding (DESIGN.md §17) / cross-request dedup
+    scratch_pages: int = 0   # pages held by in-flight draft rounds
+    dedup_merges: int = 0    # resident duplicate pages re-linked
 
     @property
     def device_free(self) -> int:
@@ -228,6 +231,18 @@ class PageAllocator:
         self.prefix_pages_reused = 0
         self.cow = 0
         self.evictions = 0
+        # speculative-decode scratch (DESIGN.md §17): rid -> {logical
+        # page j -> physical page} for an IN-FLIGHT verify round. A
+        # scratch page sits outside the free list and every block
+        # table: no refcount, never registered, invisible to
+        # room-making — promote_scratch/discard_scratch resolve it.
+        self.scratch: Dict[int, Dict[int, int]] = {}
+        # per-request page content keys (the prompt's full-page token
+        # bytes), kept while the page is still byte-identical to what
+        # was prefilled — the cross-request dedup sweep's evidence. A
+        # write (COW/unregister path) invalidates the page's key.
+        self._keys: Dict[int, List[Optional[bytes]]] = {}
+        self.dedup_merges = 0
 
     # -- views ---------------------------------------------------------
     @property
@@ -339,6 +354,10 @@ class PageAllocator:
         at that depth are skipped without disturbing the walk."""
         if not self.share:
             return
+        # remember the content keys: pages stay byte-identical to what
+        # was prefilled until a write invalidates them (make_writable /
+        # promote_scratch), which is the dedup sweep's evidence
+        self._keys[rid] = list(keys)
         node = self._radix
         for j, key in enumerate(keys):
             e = self.tables[rid][j]
@@ -348,6 +367,14 @@ class PageAllocator:
             if node.page is None and e[1] not in self._node_of:
                 node.page = e[1]
                 self._node_of[e[1]] = node
+
+    def _stale_key(self, rid: int, j: int):
+        """A write is about to land on logical page ``j``: its content
+        no longer matches the prefilled prompt bytes, so it must stop
+        participating in dedup matching."""
+        ks = self._keys.get(rid)
+        if ks and j < len(ks):
+            ks[j] = None
 
     # -- room making (evict-cached, spill-private, then-drop policy) ---
     def _spill_victim(self, protect) -> Optional[int]:
@@ -374,6 +401,8 @@ class PageAllocator:
                 self._unref(e[1])
             else:
                 self.free_host.append(e[1])
+        self.free_dev.extend(self.scratch.pop(rid, {}).values())
+        self._keys.pop(rid, None)
         self.preempted.remove(rid)
         self.drops += 1
 
@@ -514,6 +543,7 @@ class PageAllocator:
         e = refs[j]
         assert e is not None and e[0] == "dev", (rid, j, e)
         p = e[1]
+        self._stale_key(rid, j)
         if self.rc[p] == 1:
             self._unregister(p)
             return True, [], None
@@ -544,11 +574,17 @@ class PageAllocator:
                 self._unref(e[1])
             else:
                 self.free_host.append(e[1])
+        # a request can die mid-draft-round (engine containment):
+        # defensively reclaim any scratch it still holds
+        self.free_dev.extend(self.scratch.pop(rid, {}).values())
+        self._keys.pop(rid, None)
 
     def preempt(self, rid: int):
         """Unmap from its slot: pages stay allocated but become cold
         (spillable). No data moves — this is the paged replacement for
         the KV-snapshot copy."""
+        assert rid not in self.scratch, \
+            f"rid {rid} preempted mid-draft-round (scratch leak)"
         self.resident.remove(rid)
         self.preempted.append(rid)
 
@@ -580,6 +616,97 @@ class PageAllocator:
         self.resident.add(rid)
         return True, moves
 
+    # -- speculative-decode scratch (DESIGN.md §17) --------------------
+    def alloc_scratch(self, rid: int, js: Sequence[int]
+                      ) -> Tuple[bool, List[_Move], Dict[int, int]]:
+        """Reserve one scratch page per logical page in ``js`` for a
+        draft/verify round. Scratch pages leave the free list (they
+        count toward the watermark) but take NO table reference: they
+        are invisible to sharing, spill and room-making until the
+        round resolves them via promote/discard. not ok = pool
+        pressure — the caller decodes this slot non-speculatively this
+        step (partial spill moves still execute)."""
+        assert rid in self.resident, f"scratch for non-resident {rid}"
+        assert rid not in self.scratch, f"rid {rid} already drafting"
+        moves: List[_Move] = []
+        if not self._make_room(len(js), moves, protect=rid):
+            return False, moves, {}
+        got = {int(j): self.free_dev.pop() for j in js}
+        self.scratch[rid] = got
+        return True, moves, dict(got)
+
+    def promote_scratch(self, rid: int, j: int) -> int:
+        """Accept a FULLY-verified scratch page: swap it into the block
+        table at logical page ``j`` (rc 1, unregistered) and drop the
+        ref on the old page — co-owners keep it, a registered private
+        page turns cached. Pure bookkeeping: rollback-by-unmap, never
+        a copy. Returns the promoted physical page."""
+        s = self.scratch[rid].pop(j)
+        refs = self.tables[rid]
+        old = refs[j]
+        refs[j] = ("dev", s)
+        self.rc[s] = 1
+        self._stale_key(rid, j)   # speculated content != prompt bytes
+        if old is not None:
+            assert old[0] == "dev", (rid, j, old)
+            self._unref(old[1])
+        if not self.scratch[rid]:
+            del self.scratch[rid]
+        return s
+
+    def discard_scratch(self, rid: int):
+        """Reject (or finish) a draft round: every scratch page still
+        held returns to the free list. Idempotent."""
+        self.free_dev.extend(self.scratch.pop(rid, {}).values())
+
+    # -- cross-request dedup sweep (ROADMAP item 1 leftover) -----------
+    def dedup_sweep(self) -> int:
+        """Re-link identical ALREADY-RESIDENT pages: requests admitted
+        before the radix index knew their content (e.g. simultaneous
+        same-prompt admissions in one bucket group, or pages whose
+        canonical twin was registered later) hold private duplicates.
+        Walk each resident request's stored content keys down the trie;
+        where the canonical page differs from ours, move our table ref
+        onto the canonical page and drop ours (freed, or kept by
+        co-owners). Holes met on the way are repaired by publishing our
+        page. Exactness: both pages hold KV from a deterministic
+        prefill of the same tokens at the same absolute positions —
+        the same argument admission-time prefix sharing rests on
+        (DESIGN.md §16). Returns pages merged; no data moves."""
+        if not self.share:
+            return 0
+        merged = 0
+        for rid in sorted(self.resident):
+            keys = self._keys.get(rid)
+            if not keys or rid in self.scratch:
+                continue
+            refs = self.tables[rid]
+            node = self._radix
+            for j, key in enumerate(keys):
+                if key is None:
+                    break      # written since prefill: content unknown
+                node = node.children.get(key)
+                if node is None:
+                    break
+                e = refs[j]
+                if e is None or e[0] != "dev":
+                    break
+                p = e[1]
+                if node.page is None:
+                    if p not in self._node_of:
+                        node.page = p       # repair the eviction hole
+                        self._node_of[p] = node
+                    continue
+                q = node.page
+                if q == p or p in self._node_of:
+                    continue
+                self._ref(q)
+                refs[j] = ("dev", q)
+                self._unref(p)
+                merged += 1
+        self.dedup_merges += merged
+        return merged
+
     # -- invariants ----------------------------------------------------
     def check(self):
         ref_count: Dict[int, int] = {}
@@ -596,7 +723,10 @@ class PageAllocator:
             (f"refcount != block-table references: rc={self.rc} "
              f"vs tables={ref_count}")
         owned_dev = sorted(ref_count)
-        assert sorted(owned_dev + self.free_dev + self.cached) \
+        scratch_pages = [p for d in self.scratch.values()
+                         for p in d.values()]
+        assert sorted(owned_dev + self.free_dev + self.cached
+                      + scratch_pages) \
             == self._all_dev, "device pages leaked or double-owned"
         assert sorted(owned_host + self.free_host) == \
             list(range(self.n_host)), "host slots leaked or double-owned"
@@ -619,6 +749,16 @@ class PageAllocator:
             assert node.page == p, (p, node.page)
             assert p in self.rc or p in self.cached, \
                 f"registered page {p} neither owned nor cached"
+        # speculative scratch: only resident requests draft, scratch
+        # pages carry no refcount and are never registered
+        for rid, d in self.scratch.items():
+            assert rid in self.resident, \
+                f"scratch held by non-resident rid {rid}"
+            for p in d.values():
+                assert p not in self.rc and p not in self._node_of, \
+                    f"scratch page {p} owned or registered"
+        assert set(self._keys) <= set(self.tables), \
+            "content keys for departed requests"
         if not self.share:
             assert not self._node_of and not self.cached
             assert all(c == 1 for c in self.rc.values())
@@ -651,6 +791,54 @@ def scatter_prefill_pages(data, caches, dests: jnp.ndarray):
     return jax.tree.map(
         lambda a, c: attn_mod.scatter_prefill_pages(a, c, dests),
         data, caches)
+
+
+def masked_scatter_pages(data, caches, dests: jnp.ndarray):
+    """Merge suffix caches (logical rings (R, G, C, …) with ``pos = -1``
+    at untouched ring slots) into the pool at ``dests`` (G, NB),
+    writing ONLY the slots the suffix actually holds and keeping the
+    pool's existing content everywhere else. This is the speculative
+    verify scatter (DESIGN.md §17): scratch pages seeded from the real
+    pages keep their pre-range and old-lap entries while the speculated
+    range is overwritten with the verify pass's exact target K/V.
+    Unwanted rows route to TRASH_PAGE (rewritten with its own content —
+    harmless). jit-traceable."""
+    G, NB = dests.shape
+    idx = dests.reshape(-1)
+
+    def per_cache(pool_c, new_c):
+        L = pool_c.pos.shape[2]
+        m = (new_c.pos >= 0).reshape(new_c.pos.shape[0], G * NB, L)
+
+        def mix(a, v):
+            r = v.reshape((v.shape[0], G * NB, L) + v.shape[3:])
+            mm = m.reshape(m.shape + (1,) * (a.ndim - 3))
+            return a.at[:, idx].set(
+                jnp.where(mm, r.astype(a.dtype), a[:, idx]))
+        return jax.tree.map(mix, pool_c, new_c)
+
+    return jax.tree.map(per_cache, data, caches,
+                        is_leaf=lambda x: isinstance(x, attn_mod.KVCache))
+
+
+def merge_page_slots(data, src, dst, lo, hi):
+    """Copy the ring slots whose entry position lies in [lo, hi] from
+    physical page ``src`` into page ``dst``, all layers at once — the
+    boundary-page promotion of a partially-accepted draft (DESIGN.md
+    §17): only the ACCEPTED speculated entries move; the destination's
+    other slots (pre-range content, old-lap entries the rejected tail
+    must not clobber) stay put. jit-traceable."""
+    def per_cache(c):
+        m = (c.pos[:, src] >= lo) & (c.pos[:, src] <= hi)   # (R, L)
+
+        def mix(a):
+            mm = m.reshape(m.shape + (1,) * (a.ndim - 3))
+            return a.at[:, dst].set(
+                jnp.where(mm, a[:, src], a[:, dst]))
+        return jax.tree.map(mix, c)
+
+    return jax.tree.map(per_cache, data,
+                        is_leaf=lambda x: isinstance(x, attn_mod.KVCache))
 
 
 class PagedKVPool:
@@ -726,6 +914,8 @@ class PagedKVPool:
         self._copy = jax.jit(
             lambda data, src, dst: jax.tree.map(
                 lambda a: a.at[:, dst].set(a[:, src]), data))
+        # boundary-page promotion of a partially-accepted draft
+        self._merge = jax.jit(merge_page_slots)
 
     # -- sizing --------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -791,6 +981,56 @@ class PagedKVPool:
         ok, moves = self.alloc.resume(rid)
         self._execute(moves)
         return ok
+
+    # -- speculative-decode scratch (DESIGN.md §17) --------------------
+    def begin_scratch(self, rid: int, js: Sequence[int]
+                      ) -> Optional[Dict[int, int]]:
+        """Open a draft round for ``rid``: allocate one scratch page
+        per logical page in ``js`` and seed each with the CURRENT real
+        page's content (scrubbed-empty where unallocated) so pre-range
+        in-page entries and post-wrap old-lap entries survive the
+        round. Returns {logical page -> scratch page}, or None under
+        pool pressure (the slot decodes non-speculatively this step)."""
+        ok, moves, got = self.alloc.alloc_scratch(rid, list(js))
+        self._execute(moves)
+        if not ok:
+            return None
+        pages = self.alloc.dev_pages(rid)
+        fresh = [s for j, s in got.items() if pages[j] is None]
+        if fresh:
+            self.data = self._scrub(self.data,
+                                    jnp.asarray(fresh, jnp.int32))
+        seeded = [(pages[j], s) for j, s in got.items()
+                  if pages[j] is not None]
+        if seeded:
+            src = jnp.asarray([a for a, _ in seeded], jnp.int32)
+            dst = jnp.asarray([b for _, b in seeded], jnp.int32)
+            self.data = self._write(self.data, dst,
+                                    self._read(self.data, src))
+        return got
+
+    def promote_scratch(self, rid: int, j: int) -> int:
+        """Fully-accepted page: pure bookkeeping swap (never a copy)."""
+        return self.alloc.promote_scratch(rid, j)
+
+    def discard_scratch(self, rid: int):
+        self.alloc.discard_scratch(rid)
+
+    def merge_scratch_slots(self, src: int, dst: int,
+                            lo: int, hi: int):
+        """Boundary page of a partial acceptance: copy the entries with
+        positions in [lo, hi] from scratch page ``src`` onto real page
+        ``dst`` (which must already satisfy the write rule)."""
+        self.data = self._merge(self.data,
+                                jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32),
+                                jnp.asarray(lo, jnp.int32),
+                                jnp.asarray(hi, jnp.int32))
+
+    def dedup_sweep(self) -> int:
+        """Cross-request dedup of already-resident identical pages —
+        bookkeeping only (the pages are byte-identical twins)."""
+        return self.alloc.dedup_sweep()
 
     def free(self, rid: int):
         self.alloc.free(rid)
@@ -895,4 +1135,6 @@ class PagedKVPool:
             cached_pages=len(a.cached),
             prefix_hits=a.prefix_hits,
             prefix_pages_reused=a.prefix_pages_reused,
-            cow_copies=a.cow, cache_evictions=a.evictions)
+            cow_copies=a.cow, cache_evictions=a.evictions,
+            scratch_pages=sum(len(d) for d in a.scratch.values()),
+            dedup_merges=a.dedup_merges)

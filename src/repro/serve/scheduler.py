@@ -156,6 +156,19 @@ class SchedulerConfig:
     # must match before sharing is worth the bookkeeping
     kv_share: bool = False
     kv_share_min_pages: int = 1
+    # --- speculative decoding (DESIGN.md §17) -------------------------
+    # self-speculation over the sparsity ladder: each rank engine packs
+    # a drafter from the SAME weights at draft_sparsity (optionally
+    # int8) and runs draft-k/verify-1 rounds on greedy requests.
+    # Speculation engages for batch-class SLOs only by default (the
+    # draft round adds per-step latency variance interactive traffic
+    # should not pay); draft_interactive opts interactive in too.
+    draft_sparsity: Optional[float] = None
+    draft_k: int = 4
+    draft_int8: bool = False
+    draft_interactive: bool = False
+    # periodic cross-request dedup sweep (0 = off; needs kv_share)
+    kv_dedup_every: int = 0
 
 
 class ShardedScheduler:
@@ -223,7 +236,11 @@ class ShardedScheduler:
                      kv_watermark=s.kv_watermark,
                      kv_host_pages=s.kv_host_pages,
                      kv_share=s.kv_share,
-                     kv_share_min_pages=s.kv_share_min_pages)
+                     kv_share_min_pages=s.kv_share_min_pages,
+                     draft_sparsity=s.draft_sparsity,
+                     draft_k=s.draft_k, draft_int8=s.draft_int8,
+                     draft_interactive=s.draft_interactive,
+                     kv_dedup_every=s.kv_dedup_every)
         eng.on_token = self._sink
         return eng
 

@@ -11,7 +11,13 @@ sharing on every paged engine the suite builds: an autouse fixture
 wraps ``Engine.__init__`` so any construction with ``kv_pages`` (and
 without int8 KV, which sharing rejects) defaults ``kv_share=True``.
 The whole paged test surface then doubles as a sharing bit-identity
-oracle — any stream difference is a sharing bug."""
+oracle — any stream difference is a sharing bug.
+
+``REPRO_SPEC=1`` (CI's ``spec`` matrix leg) does the same for
+self-speculative decoding: every paged engine defaults a 75%-sparsity
+drafter (interactive requests included), so the paged surface doubles
+as a speculation bit-identity oracle — greedy speculative streams
+must match sequential decode exactly (DESIGN.md §17)."""
 import os
 import signal
 
@@ -79,6 +85,30 @@ def _force_kv_share(monkeypatch):
     def patched(self, params, cfg, *args, **kw):
         if kw.get("kv_pages") and not getattr(cfg, "kv_quant", False):
             kw.setdefault("kv_share", True)
+        return orig(self, params, cfg, *args, **kw)
+
+    monkeypatch.setattr(Engine, "__init__", patched)
+    yield
+
+
+@pytest.fixture(autouse=True)
+def _force_spec_decode(monkeypatch):
+    """CI spec leg (REPRO_SPEC=1): default a drafter on every paged
+    Engine so the existing paged tests re-run as speculative
+    bit-identity oracles. Explicit draft arguments, contiguous
+    engines, and int8-KV engines (speculation rejects kv_quant) are
+    left alone. draft_interactive defaults on so interactive-SLO
+    test requests exercise the draft path too."""
+    if os.environ.get("REPRO_SPEC") != "1":
+        yield
+        return
+    from repro.serve.engine import Engine
+    orig = Engine.__init__
+
+    def patched(self, params, cfg, *args, **kw):
+        if kw.get("kv_pages") and not getattr(cfg, "kv_quant", False):
+            kw.setdefault("draft_sparsity", 0.75)
+            kw.setdefault("draft_interactive", True)
         return orig(self, params, cfg, *args, **kw)
 
     monkeypatch.setattr(Engine, "__init__", patched)

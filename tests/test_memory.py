@@ -933,3 +933,97 @@ def test_share_radix_churn_stress_bit_identical_no_leaks():
     mem = eng.memory_stats()
     assert mem.prefix_hits > 0
     assert mem.device_used == mem.cached_pages and mem.host_used == 0
+
+
+# ---------------------------------------------------------------------------
+# Cross-request dedup sweep (ROADMAP item 1 leftover)
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_sweep_relinks_simultaneous_duplicates():
+    """Two same-prompt requests admitted before either registered (the
+    one-bucket-group race): both hold private copies of identical
+    pages. The sweep must re-link the later request onto the canonical
+    pages (refcount merge) and free its duplicates — and a COW write
+    must stale the content key so the sweep never re-links a page that
+    has diverged."""
+    keys = [b"k0", b"k1"]
+    a = PageAllocator(range(8), host_slots=0, watermark_cap=8,
+                      slot_pages=4, share=True)
+    assert a.admit_prefix(0, 3, keys)[0]
+    assert a.admit_prefix(1, 3, keys)[2] == 0   # race: nothing matched
+    a.register_prefix(0, keys)                  # canonical (first wins)
+    a.register_prefix(1, keys)                  # nodes taken: no-op
+    dup = [e[1] for e in a.tables[1][:2]]
+    canon = [e[1] for e in a.tables[0][:2]]
+    free_before = len(a.free_dev)
+    assert a.dedup_sweep() == 2
+    assert a.dedup_merges == 2
+    assert [e[1] for e in a.tables[1][:2]] == canon
+    assert all(a.rc[p] == 2 for p in canon)
+    assert len(a.free_dev) == free_before + 2   # duplicates freed
+    assert all(p in a.free_dev for p in dup)
+    a.check()
+    assert a.dedup_sweep() == 0                 # idempotent
+    # COW on rid 1's shared page 0: the fresh copy's content will
+    # diverge, so its key is staled and the sweep must leave it alone
+    ok, _, copy = a.make_writable(1, 0)
+    assert ok and copy is not None
+    assert a.dedup_sweep() == 0
+    a.check()
+    a.free(0)
+    a.free(1)
+    a.check()
+
+
+def test_dedup_sweep_promotes_cached_canonical_and_repairs_holes():
+    """Sweep vs the page cache: (1) when the canonical twin went
+    cached (owner freed), re-linking must promote it back to owned;
+    (2) when eviction left a hole in the radix, a resident duplicate
+    repairs it so later admissions share again."""
+    keys = [b"k0", b"k1"]
+    a = PageAllocator(range(8), host_slots=0, watermark_cap=8,
+                      slot_pages=4, share=True)
+    assert a.admit_prefix(0, 3, keys)[0]
+    assert a.admit_prefix(1, 3, keys)[2] == 0
+    a.register_prefix(0, keys)
+    a.register_prefix(1, keys)
+    canon = [e[1] for e in a.tables[0][:2]]
+    a.free(0)                                   # canonical turns cached
+    assert sorted(a.cached) == sorted(canon)
+    assert a.dedup_sweep() == 2
+    assert [e[1] for e in a.tables[1][:2]] == canon
+    assert not a.cached and all(a.rc[p] == 1 for p in canon)
+    a.check()
+    # hole repair: strip the index, then sweep republishes rid 1's
+    # (still byte-identical) pages so a newcomer matches them
+    while a.cached:
+        a._evict_cached_lru()
+    for p in list(a._node_of):
+        a._unregister(p)
+    assert a.dedup_sweep() == 0                 # no merges, just repair
+    assert all(p in a._node_of for p in canon)
+    assert a.admit_prefix(2, 3, keys)[2] == 2   # newcomer shares again
+    a.check()
+
+
+def test_engine_dedup_sweep_bit_identical_and_frees_duplicates():
+    """Engine-level dedup (kv_dedup_every=1): two identical prompts
+    admitted in the SAME bucket group miss admission-time sharing; the
+    sweep merges their prompt pages mid-decode and the streams still
+    equal both the sharing-off engine and the solo reference."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, 64, size=(20,)).astype(np.int32)
+    mk = lambda: [Request(rid=i, prompt=prompt.copy(),
+                          max_new_tokens=6) for i in range(2)]
+    solo = _solo(params, cfg, mk()[0])
+    off = _drive(_share_engine(params, cfg, False), mk())
+    eng = _share_engine(params, cfg, True, kv_dedup_every=1)
+    on = _drive(eng, mk())
+    assert on == off == {0: solo, 1: solo}
+    mem = eng.memory_stats()
+    # 20-token prompt = 2 full pages at page_len 8, re-linked for the
+    # second admission of the pair
+    assert mem.dedup_merges == 2, mem.as_dict()
+    eng.pool.alloc.check()

@@ -88,3 +88,72 @@ def test_engine_rejects_buckets_beyond_cache_len():
     with pytest.raises(ValueError, match="cache_len"):
         Engine(params, cfg, batch_slots=1, cache_len=32,
                buckets=(16, 64))
+
+
+def _valid_kv(**over):
+    """validate_kv_flags kwargs for a healthy paged+spec config;
+    override per-case to isolate the rule under test."""
+    from repro.launch.serve import validate_kv_flags
+    kw = dict(kv_pages=24, kv_watermark=0.9, kv_share=True,
+              kv_share_min_pages=1, int8_kv=False, draft_sparsity=0.75,
+              draft_k=4, draft_int8=False, kv_dedup_every=64,
+              cache_len=256)
+    kw.update(over)
+    return validate_kv_flags(**kw)
+
+
+def test_validate_kv_flags_accepts_healthy_combinations():
+    _valid_kv()                                    # paged+share+spec
+    _valid_kv(draft_sparsity=None, kv_dedup_every=0)
+    _valid_kv(kv_pages=None, kv_share=False, draft_sparsity=None,
+              kv_dedup_every=0)                    # contiguous engine
+    _valid_kv(kv_share=False, kv_dedup_every=0,
+              int8_kv=False, draft_int8=True)      # int8 drafter pack
+
+
+@pytest.mark.parametrize("over,match", [
+    (dict(kv_watermark=0.0), "--kv-watermark"),
+    (dict(kv_watermark=1.5), "--kv-watermark"),
+    (dict(kv_pages=0), "--kv-pages must be >= 1"),
+    (dict(kv_pages=None, draft_sparsity=None, kv_dedup_every=0),
+     "--kv-share requires --kv-pages"),
+    (dict(int8_kv=True, draft_sparsity=None, kv_dedup_every=0),
+     "--kv-share is incompatible with --int8-kv"),
+    (dict(kv_share_min_pages=0), "--kv-share-min-pages"),
+    (dict(kv_pages=None, kv_share=False, kv_dedup_every=0),
+     "--draft-sparsity requires --kv-pages"),
+    (dict(kv_share=False, int8_kv=True, kv_dedup_every=0),
+     "--draft-sparsity is incompatible with --int8-kv"),
+    (dict(draft_sparsity=1.0), "--draft-sparsity must lie in"),
+    (dict(draft_sparsity=-0.5), "--draft-sparsity must lie in"),
+    (dict(draft_k=0), "--draft-k must be >= 1"),
+    (dict(draft_k=400), "shrink --draft-k"),
+    (dict(draft_sparsity=None, draft_int8=True, kv_dedup_every=0),
+     "add --draft-sparsity"),
+    (dict(kv_dedup_every=-1), "--kv-dedup-every must be >= 0"),
+    (dict(kv_share=False), "--kv-dedup-every requires"),
+    (dict(kv_pages=None, kv_share=False, draft_sparsity=None),
+     "--kv-dedup-every requires"),
+])
+def test_validate_kv_flags_rejects_bad_combinations(over, match):
+    with pytest.raises(SystemExit, match=match):
+        _valid_kv(**over)
+
+
+def test_draft_flags_validate_identically_on_all_three_paths(
+        monkeypatch):
+    """The same bad --draft-* combo must exit with the same message
+    whether the launcher would build a frontend, a scheduler, or a
+    solo engine — the whole point of the consolidated validator."""
+    monkeypatch.setenv("XLA_FLAGS", "")
+    for path in ([], ["--scheduler"], ["--hosts", "2"]):
+        _main_exits(path + ["--draft-sparsity", "0.75"],
+                    "--draft-sparsity requires --kv-pages", monkeypatch)
+        _main_exits(path + ["--kv-pages", "16", "--int8-kv",
+                            "--draft-sparsity", "0.75"],
+                    "incompatible with --int8-kv", monkeypatch)
+        _main_exits(path + ["--draft-int8"],
+                    "add --draft-sparsity", monkeypatch)
+        _main_exits(path + ["--kv-pages", "16", "--kv-dedup-every",
+                            "32"],
+                    "--kv-dedup-every requires", monkeypatch)

@@ -1,0 +1,464 @@
+"""Self-speculative decoding on the sparsity ladder (DESIGN.md §17).
+
+The contract under test: with a drafter enabled (the SAME weights
+re-packed at higher tile sparsity), every greedy stream is
+bit-identical to the non-speculative engine — acceptance rate moves
+throughput, never outputs — and the scratch-page lifecycle never leaks
+(promote/discard resolve every round, ``PageAllocator.check`` +
+``tools.analyze.check_page_refcounts`` hold after every verify step).
+
+Because a correct engine never depends on WHAT the drafter proposes,
+the adversarial tests stub ``eng._draft_decode`` outright: a random-
+token drafter drives acceptance toward zero, and an oracle drafter
+that copies the reference stream for exactly m positions pins the
+acceptance offset at m ∈ {0, k-1, k}. (Tiny random-init models decay
+to near-constant streams, so a REAL high-sparsity drafter accepts
+almost everything — useless for exercising the rejection paths.)"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+from tools.analyze import check_page_refcounts
+
+KEY = jax.random.PRNGKey(0)
+VOCAB = 64
+
+
+def _setup():
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64,
+                  vocab=VOCAB)
+    params = lm.init_params(KEY, cfg)
+    # position-dependent streams (same amplification as test_memory.py)
+    return cfg, jax.tree.map(lambda a: a * 3.0, params)
+
+
+def _solo(params, cfg, req: Request):
+    r = Request(rid=req.rid, prompt=req.prompt,
+                max_new_tokens=req.max_new_tokens, eos_id=req.eos_id)
+    return Engine(params, cfg, batch_slots=1, cache_len=64).run(
+        [r])[0].out_tokens
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = []
+    while eng.has_work():
+        done.extend(eng.step())
+    return {r.rid: list(r.out_tokens) for r in done}
+
+
+def _engine(params, cfg, draft=None, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("kv_pages", 20)
+    kw.setdefault("kv_page_len", 8)
+    if draft is not None:
+        kw.setdefault("draft_sparsity", draft)
+    return Engine(params, cfg, **kw)
+
+
+def _spec_clean(eng):
+    """Post-run invariants every spec test ends on: no scratch page
+    survives a round, allocator bookkeeping intact."""
+    assert not eng.pool.alloc.scratch, eng.pool.alloc.scratch
+    assert eng.pool.stats().scratch_pages == 0
+    errs = check_page_refcounts(eng.pool)
+    assert not errs, errs
+    eng.pool.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Fixed twins: spec-on == spec-off == solo, across draft depths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_spec_fixed_twins_bit_identical(k):
+    """A mixed workload (greedy batch, greedy with EOS, interactive,
+    temperature>0) through the real 75%-sparsity drafter at draft_k ∈
+    {1, 2, 4}: every stream equals the non-speculative paged engine,
+    greedy ones also equal the solo contiguous engine. The temp>0 row
+    doubles as an RNG-parity oracle: speculation must consume exactly
+    one key split per step, so the sampled stream cannot drift."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+
+    def mk():
+        return [
+            Request(rid=0, prompt=rng.integers(0, VOCAB, size=(11,))
+                    .astype(np.int32), max_new_tokens=9),
+            Request(rid=1, prompt=rng.integers(0, VOCAB, size=(7,))
+                    .astype(np.int32), max_new_tokens=12, eos_id=5),
+            Request(rid=2, prompt=rng.integers(0, VOCAB, size=(9,))
+                    .astype(np.int32), max_new_tokens=8,
+                    slo="interactive"),
+            Request(rid=3, prompt=rng.integers(0, VOCAB, size=(8,))
+                    .astype(np.int32), max_new_tokens=7,
+                    temperature=0.8),
+        ]
+
+    rng = np.random.default_rng(3)
+    ref = {r.rid: _solo(params, cfg, r) for r in mk()
+           if r.temperature == 0}
+    rng = np.random.default_rng(3)
+    off = _drive(_engine(params, cfg, batch_slots=4), mk())
+    rng = np.random.default_rng(3)
+    eng = _engine(params, cfg, draft=0.75, draft_k=k, batch_slots=4)
+    on = _drive(eng, mk())
+    assert on == off
+    for rid, toks in ref.items():
+        assert on[rid] == toks
+    assert eng.stats["spec_rounds"] > 0
+    assert eng.stats["spec_draft_tokens"] == \
+        k * eng.stats["spec_rounds"]
+    _spec_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Controlled acceptance offsets via an oracle-drafter stub
+# ---------------------------------------------------------------------------
+
+
+def _offset_drafter(eng, ref, m, k):
+    """Drafter stub proposing the reference stream for exactly the
+    first ``m`` positions of every round, then a provably-wrong token
+    — pins acceptance at offset m ∈ {0 .. k}."""
+    state = {"calls": 0, "n": 0}
+
+    def fake(dparams, cur, pos, data, dbt, key, temps, act, eos, rem):
+        t = state["calls"] % k
+        if t == 0:      # round start: snapshot the emitted-token count
+            state["n"] = len(eng.slot_req[0].out_tokens)
+        state["calls"] += 1
+        idx = state["n"] + t
+        if t < m and idx < len(ref):
+            tok = int(ref[idx])
+        else:
+            tok = (int(ref[min(idx, len(ref) - 1)]) + 1) % VOCAB
+        return (jnp.full((eng.B,), tok, jnp.int32), None, data, None)
+
+    return fake
+
+
+@pytest.mark.parametrize("k,m", [(1, 0), (1, 1), (2, 0), (2, 1),
+                                 (2, 2), (4, 0), (4, 3), (4, 4)])
+def test_spec_acceptance_offsets_exact(k, m):
+    """Acceptance offsets {0, k-1, k}: the oracle drafter makes every
+    round accept exactly m drafts, so the accepted-token counter is
+    m · rounds EXACTLY, and the stream still equals the
+    non-speculative reference bit for bit (full rejection emits the
+    verify pass's own argmax — never a stall, never a wrong token)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, VOCAB, size=(10,)).astype(np.int32)
+    # every spec round advances m+1 tokens from n=1, so this budget
+    # ends with remaining == 1 after six full rounds — no truncated
+    # tail round, and every oracle index stays inside the reference
+    max_new = 6 * (m + 1) + 2
+    mk = lambda: [Request(rid=0, prompt=prompt.copy(),
+                          max_new_tokens=max_new)]
+    off = _drive(_engine(params, cfg, batch_slots=1), mk())
+    ref = off[0]
+    eng = _engine(params, cfg, draft=0.75, draft_k=k, batch_slots=1)
+    eng._draft_decode = _offset_drafter(eng, ref, m, k)
+    on = _drive(eng, mk())
+    assert on == off
+    st = eng.stats
+    assert st["spec_rounds"] > 0
+    assert st["spec_accepted_tokens"] == m * st["spec_rounds"], st
+    _spec_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Chaos drafter: random proposals, refcounts checked after every verify
+# ---------------------------------------------------------------------------
+
+
+def test_spec_random_drafter_invariants_after_every_verify():
+    """A drafter emitting seeded random garbage drives acceptance
+    toward zero while the engine keeps emitting correct target tokens.
+    ``check_page_refcounts`` runs after EVERY verify round (the chaos-
+    harness hook), so a single leaked or double-owned scratch page
+    fails at the round that leaked it, not at drain."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(6)
+    mk = lambda: [Request(
+        rid=i, prompt=rng.integers(0, VOCAB, size=(6 + 5 * i,))
+        .astype(np.int32), max_new_tokens=14) for i in range(4)]
+    rng = np.random.default_rng(6)
+    off = _drive(_engine(params, cfg), mk())
+    rng = np.random.default_rng(6)
+    eng = _engine(params, cfg, draft=0.75, draft_k=4)
+    bad = np.random.default_rng(99)
+
+    def chaos_draft(dparams, cur, pos, data, dbt, key, temps, act,
+                    eos, rem):
+        toks = bad.integers(0, VOCAB, size=(eng.B,))
+        return (jnp.asarray(toks, jnp.int32), None, data, None)
+
+    eng._draft_decode = chaos_draft
+    orig = eng._run_spec_round
+    rounds_checked = [0]
+
+    def checked(specs):
+        out = orig(specs)
+        errs = check_page_refcounts(eng.pool)
+        assert not errs, errs
+        rounds_checked[0] += 1
+        return out
+
+    eng._run_spec_round = checked
+    on = _drive(eng, mk())
+    assert on == off
+    st = eng.stats
+    assert rounds_checked[0] > 0
+    assert st["spec_rounds"] > 0
+    # random proposals over a 64-token vocab: near-total rejection
+    assert st["spec_accepted_tokens"] < st["spec_draft_tokens"] // 2
+    _spec_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Ring wrap mid-draft
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_spec_ring_wrap_during_draft_bit_identical(k):
+    """Decode far past the ring capacity (cache_len 16, several laps)
+    so draft write ranges straddle the wrap seam and land on pages
+    holding a previous lap's entries — the masked scatter and the
+    window-C attention rule must keep streams equal to the
+    non-speculative paged engine through every lap."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(8)
+    mk = lambda: [Request(
+        rid=i, prompt=rng.integers(0, VOCAB, size=(5 + 3 * i,))
+        .astype(np.int32), max_new_tokens=40) for i in range(2)]
+    rng = np.random.default_rng(8)
+    off = _drive(_engine(params, cfg, cache_len=16, kv_page_len=4,
+                         kv_pages=12), mk())
+    rng = np.random.default_rng(8)
+    eng = _engine(params, cfg, draft=0.75, draft_k=k, cache_len=16,
+                  kv_page_len=4, kv_pages=12)
+    on = _drive(eng, mk())
+    assert on == off
+    assert eng.stats["spec_rounds"] > 0
+    _spec_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Scratch pressure: begin_scratch fails, slot decodes normally
+# ---------------------------------------------------------------------------
+
+
+def test_spec_scratch_denied_under_pool_pressure_falls_back():
+    """kv_pages sized to exactly two full rings: with both slots
+    resident there is never a free page for scratch, so speculation
+    must silently fall back to plain decode (spec_fallbacks) — a slot
+    is NEVER preempted just to speculate — and resume drafting once a
+    slot drains. Streams stay bit-identical throughout."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(9)
+    # near-full rings (4 pages each at cache 32 / page 8): two
+    # residents own all 8 pages, so scratch allocation must fail
+    mk = lambda: [Request(
+        rid=i, prompt=rng.integers(0, VOCAB, size=(28 + i,))
+        .astype(np.int32), max_new_tokens=10) for i in range(3)]
+    rng = np.random.default_rng(9)
+    off = _drive(_engine(params, cfg, cache_len=32, kv_page_len=8,
+                         kv_pages=8), mk())
+    rng = np.random.default_rng(9)
+    eng = _engine(params, cfg, draft=0.75, draft_k=4, cache_len=32,
+                  kv_page_len=8, kv_pages=8)
+    on = _drive(eng, mk())
+    assert on == off
+    st = eng.stats
+    assert st["spec_fallbacks"] > 0, st    # both-resident phases denied
+    assert st["spec_rounds"] > 0, st       # single-resident tail drafts
+    _spec_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Interaction with preemption, spill and prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def test_spec_with_preempt_spill_share_bit_identical():
+    """The PR-8 acceptance cycle WITH a drafter: shared-prefix batch
+    requests speculate, an interactive deadline preempts them (scratch
+    is empty between steps by construction — preempt asserts it),
+    private pages spill and fault back — streams still equal the solo
+    contiguous engine bit for bit."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(10)
+    shared = rng.integers(0, VOCAB, size=(17,)).astype(np.int32)
+    inter = rng.integers(0, VOCAB, size=(40,)).astype(np.int32)
+    mk = lambda: [
+        Request(rid=0, prompt=shared.copy(), max_new_tokens=12,
+                slo="batch"),
+        Request(rid=1, prompt=np.concatenate(
+            [shared, np.asarray([3], np.int32)]), max_new_tokens=12,
+            slo="batch"),
+        Request(rid=2, prompt=inter.copy(), max_new_tokens=3,
+                slo="interactive", deadline=0.01)]
+    ref = {r.rid: _solo(params, cfg, r) for r in mk()}
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode="kv", kv_pages=10,
+                              kv_page_len=8, kv_host_pages=10,
+                              kv_share=True, draft_sparsity=0.75,
+                              draft_k=2))
+    reqs = mk()
+    assert sched.submit(reqs[0])
+    for _ in range(4):
+        sched.step()
+    assert sched.submit(reqs[1])
+    for _ in range(2):
+        sched.step()
+    assert sched.submit(reqs[2])
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    eng = sched.shards[0]
+    st = sched.stats()
+    assert {r.rid: r.out_tokens for r in done} == ref
+    assert st["preemptions"] >= 1
+    assert eng.stats["spec_rounds"] >= 1, eng.stats
+    _spec_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Serving-stat bugfix: reprefill resume must not re-charge prefill stats
+# ---------------------------------------------------------------------------
+
+
+def test_reprefill_resume_stats_equal_unpreempted_run():
+    """Regression (the ``prefill_tokens_skipped`` double-count): a
+    reprefill-mode resume re-admits through the shared-prefix path and
+    used to charge prefill_tokens / prefill_tokens_skipped AGAIN for
+    tokens already counted at first admission. Both counters must now
+    equal a run of the same requests that was never preempted, with
+    the resume's actual work visible in ``reprefill_tokens``."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, VOCAB, size=(17,)).astype(np.int32)
+    inter = rng.integers(0, VOCAB, size=(40,)).astype(np.int32)
+    mk = lambda: [
+        Request(rid=0, prompt=shared.copy(), max_new_tokens=10,
+                slo="batch"),
+        Request(rid=1, prompt=np.concatenate(
+            [shared, np.asarray([3], np.int32)]), max_new_tokens=10,
+            slo="batch"),
+        Request(rid=2, prompt=inter.copy(), max_new_tokens=3,
+                slo="interactive", deadline=0.01)]
+    ref = {r.rid: _solo(params, cfg, r) for r in mk()}
+
+    def serve(preempt):
+        sched = ShardedScheduler(
+            params, cfg, ranks=1,
+            sched=SchedulerConfig(
+                slots_per_rank=1, cache_len=64,
+                policy="edf" if preempt else "fcfs", preempt=preempt,
+                preempt_mode="reprefill", kv_pages=12, kv_page_len=8,
+                kv_host_pages=0, kv_share=True))
+        reqs = mk()
+        assert sched.submit(reqs[0])
+        for _ in range(4):
+            sched.step()
+        assert sched.submit(reqs[1])
+        for _ in range(2):
+            sched.step()
+        assert sched.submit(reqs[2])
+        done = []
+        while sched.has_work():
+            done.extend(sched.step())
+        assert {r.rid: r.out_tokens for r in done} == ref
+        return sched.stats(), sched.shards[0].stats
+
+    base_st, base = serve(False)
+    pre_st, pre = serve(True)
+    assert pre_st["preemptions"] >= 1, pre_st
+    assert pre["reprefill_tokens"] > 0, pre
+    assert base["reprefill_tokens"] == 0, base
+    # the bug charged resume tokens here a second time
+    assert pre["prefill_tokens"] == base["prefill_tokens"], (pre, base)
+    assert pre["prefill_tokens_skipped"] == \
+        base["prefill_tokens_skipped"], (pre, base)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_engine_validation():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="kv_pages"):
+        Engine(params, cfg, batch_slots=1, cache_len=64,
+               draft_sparsity=0.5)
+    with pytest.raises(ValueError, match="draft_k"):
+        _engine(params, cfg, draft=0.5, draft_k=0)
+    with pytest.raises(ValueError, match="cache_len"):
+        _engine(params, cfg, draft=0.5, draft_k=64, cache_len=32,
+                kv_page_len=8, kv_pages=8)
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    qparams = lm.init_params(KEY, qcfg)
+    with pytest.raises(ValueError, match="kv_quant"):
+        Engine(qparams, qcfg, batch_slots=1, cache_len=64,
+               kv_pages=16, kv_page_len=8, draft_sparsity=0.5)
+    with pytest.raises(ValueError, match="kv_dedup_every"):
+        Engine(params, cfg, batch_slots=1, cache_len=64,
+               kv_pages=16, kv_page_len=8, kv_dedup_every=4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: arbitrary workloads, spec-on == spec-off
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10**6), k=st.sampled_from([1, 2, 4]),
+           eos=st.booleans())
+    def test_spec_property_bit_identical(seed, k, eos):
+        """Random prompts/budgets/EOS and draft depth: the speculative
+        engine's streams always equal the non-speculative paged twin,
+        and the pool drains clean."""
+        cfg, params = _setup()
+
+        def mk():
+            r = np.random.default_rng(seed)
+            return [Request(
+                rid=i,
+                prompt=r.integers(0, VOCAB, size=(int(
+                    r.integers(4, 20)),)).astype(np.int32),
+                max_new_tokens=int(r.integers(2, 9)),
+                eos_id=int(r.integers(0, VOCAB)) if eos else None)
+                for i in range(3)]
+
+        off = _drive(_engine(params, cfg, cache_len=32, kv_page_len=8,
+                             kv_pages=16), mk())
+        eng = _engine(params, cfg, draft=0.75, draft_k=k,
+                      cache_len=32, kv_page_len=8, kv_pages=16)
+        on = _drive(eng, mk())
+        assert on == off
+        _spec_clean(eng)

@@ -27,6 +27,9 @@ Invariants (the prose form of ``PageAllocator.check``):
   index, every registered page is device-resident, nodes point back
   at their page
 * share disabled ⇒ no radix state and every refcount is exactly 1
+* speculative scratch pages (DESIGN.md §17) are held only by resident
+  requests, carry no refcount, and are never registered — they join
+  the device-page partition but stay invisible to sharing
 """
 
 from __future__ import annotations
@@ -58,10 +61,20 @@ def check_page_refcounts(pool_or_alloc) -> List[str]:
     if ref_count != a.rc:
         errs.append(f"refcount != block-table references: "
                     f"rc={a.rc} vs tables={ref_count}")
-    seen = sorted(list(ref_count) + list(a.free_dev) + list(a.cached))
+    scratch = getattr(a, "scratch", {})
+    scratch_pages = [p for d in scratch.values() for p in d.values()]
+    seen = sorted(list(ref_count) + list(a.free_dev) + list(a.cached)
+                  + scratch_pages)
     if seen != a._all_dev:
         errs.append(f"device pages leaked or double-owned: "
-                    f"owned+free+cached={seen} vs all={a._all_dev}")
+                    f"owned+free+cached+scratch={seen} "
+                    f"vs all={a._all_dev}")
+    for rid, d in scratch.items():
+        if rid not in a.resident:
+            errs.append(f"scratch held by non-resident rid {rid}")
+        for p in d.values():
+            if p in a.rc or p in a._node_of:
+                errs.append(f"scratch page {p} owned or registered")
     if sorted(owned_host + list(a.free_host)) != list(range(a.n_host)):
         errs.append(f"host slots leaked or double-owned: "
                     f"owned={sorted(owned_host)} free={a.free_host}")
