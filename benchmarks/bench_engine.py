@@ -76,6 +76,7 @@ from repro.configs import get_config, reduced
 from repro.launch.serve import build_serving_params
 from repro.models import lm
 from repro.serve.engine import Engine, Request
+from repro.serve.telemetry import Telemetry, pcts_ms as _pcts_ms
 
 ARCH = "qwen3-32b"
 SPARSITIES = (0.0, 0.25, 0.5, 0.75)
@@ -188,13 +189,6 @@ LOAD_PROMPT_LEN = 10            # ONE length → admission-group shapes
 # wide budget spread: the drain baseline idles (slots, max-in-batch)
 # on every batch, so heterogeneous budgets are exactly its weak spot
 LOAD_MAX_NEW = (2, 40, 4, 48, 8, 2, 36, 4, 24, 2, 44, 6)
-
-
-def _pcts_ms(lats: List[float]):
-    """(p50, p95) in ms from sorted latencies (nearest-rank, clamped)."""
-    p50 = lats[len(lats) // 2] * 1e3
-    p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))] * 1e3
-    return p50, p95
 
 
 def _load_requests(vocab: int, n: int = LOAD_REQ,
@@ -312,7 +306,11 @@ def _class_stats(done, klass: str, dt: float):
     rs = [r for r in done if r.slo == klass]
     toks = sum(len(r.out_tokens) for r in rs)
     p50, p95 = _pcts_ms(sorted(r.latency for r in rs))
-    return dict(n=len(rs), tok_s=toks / dt, p50_ms=p50, p95_ms=p95)
+    ttfts = sorted(r.t_first - r.t_submit for r in rs
+                   if r.t_first is not None and r.t_submit is not None)
+    t50, t95 = _pcts_ms(ttfts) if ttfts else (0.0, 0.0)
+    return dict(n=len(rs), tok_s=toks / dt, p50_ms=p50, p95_ms=p95,
+                ttft_p50_ms=t50, ttft_p95_ms=t95)
 
 
 def bench_engine_qos() -> List:
@@ -359,7 +357,10 @@ def bench_engine_qos() -> List:
                 f"engine/sched/qos_{mode}/{k}", st[k]["p95_ms"] * 1e3,
                 f"tok_s={st[k]['tok_s']:.2f};"
                 f"p50_ms={st[k]['p50_ms']:.1f};"
-                f"p95_ms={st[k]['p95_ms']:.1f};slots={LOAD_SLOTS};"
+                f"p95_ms={st[k]['p95_ms']:.1f};"
+                f"ttft_p50_ms={st[k]['ttft_p50_ms']:.1f};"
+                f"ttft_p95_ms={st[k]['ttft_p95_ms']:.1f};"
+                f"slots={LOAD_SLOTS};"
                 f"reqs={st[k]['n']};"
                 f"preemptions={st['preemptions']}"))
     int_p95_x = (results["fcfs"]["interactive"]["p95_ms"]
@@ -710,6 +711,65 @@ def bench_engine_spec() -> List:
     return rows
 
 
+OBS_REPS = 4
+
+
+def bench_engine_obs() -> List:
+    """Telemetry overhead (DESIGN.md §18): the same packed paged engine
+    with the span tracer + metrics registry ARMED vs the telemetry-off
+    default, best-of-N decode throughput. The tracer is host-side only
+    (monotonic clock reads + deque appends, no device sync), so the
+    acceptance bar is streams bit-identical and decode tok/s overhead
+    < 3%."""
+    rows = []
+    print("\n== telemetry overhead: tracer+metrics armed vs off ==")
+    cfg0 = reduced(get_config(ARCH), layers=2, d_model=64, vocab=128)
+    params0 = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    pparams, pcfg = build_serving_params(
+        params0, cfg0, path="packed", sparsity=0.5, block_k=8,
+        block_n=8, verbose=False)
+
+    def build(trace: bool):
+        tel = Telemetry(trace=trace)
+        eng = Engine(pparams, pcfg, batch_slots=SLOTS,
+                     cache_len=MEM_CACHE,
+                     kv_pages=2 * SLOTS * (MEM_CACHE // MEM_PAGE),
+                     kv_page_len=MEM_PAGE, telemetry=tel)
+        eng.run(_spec_requests(pcfg.vocab_size))    # jit warm-up
+        return eng, tel
+
+    def timed(eng):
+        reqs = _spec_requests(pcfg.vocab_size)
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        return toks / dt, {r.rid: list(r.out_tokens) for r in done}
+
+    # interleave the reps so clock drift (thermal / background load)
+    # cancels instead of billing whichever engine runs second
+    eng_off, _ = build(False)
+    eng_on, tel = build(True)
+    base = traced = 0.0
+    for _ in range(OBS_REPS):
+        r_off, ref = timed(eng_off)
+        r_on, streams = timed(eng_on)
+        base, traced = max(base, r_off), max(traced, r_on)
+    agree = int(streams == ref)
+    overhead_pct = 100.0 * (base - traced) / base
+    ok = agree and overhead_pct < 3.0
+    print(f"  off: {base:7.1f} tok/s  |  armed: {traced:7.1f} tok/s  "
+          f"overhead {overhead_pct:+.2f}% "
+          f"({len(tel.tracer)} events, streams "
+          f"{'==' if agree else '!='}) "
+          f"({'OK' if ok else 'REGRESSION: telemetry overhead bar!'})")
+    rows.append(("engine/obs/overhead", 0.0,
+                 f"overhead_pct={overhead_pct:.2f};"
+                 f"base_tok_s={base:.2f};traced_tok_s={traced:.2f};"
+                 f"events={len(tel.tracer)};agree={agree};bar=3.0"))
+    return rows
+
+
 FE_REQ = 12
 FE_MAX_NEW = (2, 12, 4, 16, 6, 2, 10, 4)
 FE_KILL_STEP = 6                # host 0 dies this many ticks in
@@ -845,6 +905,7 @@ def bench_engine() -> List:
     rows.extend(bench_engine_memory())
     rows.extend(bench_engine_share())
     rows.extend(bench_engine_spec())
+    rows.extend(bench_engine_obs())
     rows.extend(bench_engine_recovery())
     return rows
 

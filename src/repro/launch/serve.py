@@ -20,8 +20,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import re
+import threading
 import time
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -32,6 +33,7 @@ from repro.core.sasp import bsr_overlay_from_masks, merge_overlay, \
     quantize_params
 from repro.models import lm
 from repro.serve.engine import Engine, Request
+from repro.serve.telemetry import Telemetry, pcts_ms
 from repro.train.checkpoint import CheckpointManager
 
 PATHS = ("dense", "masked", "bsr", "kernel", "packed")
@@ -206,6 +208,23 @@ def validate_kv_flags(*, kv_pages: Optional[int], kv_watermark: float,
                          "--kv-share: the dedup sweep re-links "
                          "identical resident pages through the prefix "
                          "radix (DESIGN.md §16)")
+
+
+def start_metrics_reporter(summary_fn: Callable[[], dict],
+                           interval: float) -> threading.Event:
+    """Print ``summary_fn()`` every ``interval`` seconds from a daemon
+    thread until the returned event is set (--metrics-interval)."""
+    stop = threading.Event()
+    if interval <= 0:
+        return stop
+
+    def loop():
+        while not stop.wait(interval):
+            s = summary_fn()
+            print(f"metrics: {s}")
+
+    threading.Thread(target=loop, daemon=True).start()
+    return stop
 
 
 def check_ranks(ranks: Optional[int], mesh, profile: str = "tp"):
@@ -388,6 +407,17 @@ def main():
                          "'kill:0@12,raise:1@3,drop-hb:0@5x3,"
                          "slow:1@0.02,seed:7' (serve/chaos.py grammar; "
                          "requires --hosts)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="arm the span tracer and write a Chrome "
+                         "trace-event JSON of the whole run — load it "
+                         "at ui.perfetto.dev or chrome://tracing "
+                         "(DESIGN.md §18)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write Prometheus text exposition of every "
+                         "registered counter/gauge/histogram at exit")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="print an aggregated metrics summary every N "
+                         "seconds while serving (0 = off)")
     args = ap.parse_args()
 
     # BEFORE any backend-initializing jax call: may set XLA_FLAGS
@@ -476,6 +506,7 @@ def main():
         hosts = make_local_hosts(
             params, cfg, hosts=args.hosts, ranks=args.ranks or 1,
             chaos=ChaosMonkey(chaos_cfg) if chaos_cfg else None,
+            trace=bool(args.trace_out),
             sched=SchedulerConfig(
                 slots_per_rank=args.slots_per_rank or args.slots,
                 cache_len=args.cache_len, max_queue=args.max_queue,
@@ -504,11 +535,24 @@ def main():
                     print(f"  stream: req {req.rid} += {tok}")
                 n_stream[0] += 1
             fe.on_token = _tok
+        trace_writer, prom_fn = fe.write_trace, fe.prometheus
+
+        def cluster_summary():
+            out: dict = {}
+            for h in hosts:
+                cs = h.telemetry.registry.summary()["counters"]
+                for k, v in cs.items():
+                    out[k] = out.get(k, 0) + v
+            return out
+
+        stop_rep = start_metrics_reporter(cluster_summary,
+                                          args.metrics_interval)
         t0 = time.time()
         done = fe.run(reqs)
         drained, clean = fe.drain()     # bounded graceful shutdown
         done += drained
         dt = time.time() - t0
+        stop_rep.set()
         fe.close()
         if args.stream:
             print(f"  … streamed {n_stream[0]} tokens incrementally")
@@ -531,6 +575,7 @@ def main():
             ShardedScheduler
         sched = ShardedScheduler(
             params, cfg, mesh=mesh, ranks=args.ranks,
+            telemetry=Telemetry(trace=bool(args.trace_out)),
             sched=SchedulerConfig(
                 slots_per_rank=args.slots_per_rank or args.slots,
                 cache_len=args.cache_len, max_queue=args.max_queue,
@@ -547,9 +592,15 @@ def main():
                 draft_k=args.draft_k, draft_int8=args.draft_int8,
                 draft_interactive=args.draft_interactive,
                 kv_dedup_every=args.kv_dedup_every))
+        trace_writer = sched.telemetry.write_trace
+        prom_fn = sched.telemetry.prometheus
+        stop_rep = start_metrics_reporter(
+            lambda: sched.telemetry.registry.summary()["counters"],
+            args.metrics_interval)
         t0 = time.time()
         done = drive(sched.run, sched.stream)
         dt = time.time() - t0
+        stop_rep.set()
         st = sched.stats()
         print(f"scheduler: {st['ranks']} rank(s), "
               f"{st['accepted']}/{st['submitted']} admitted "
@@ -564,11 +615,12 @@ def main():
                 lats = sorted(r.latency for r in done
                               if r.slo == klass and r.latency)
                 if lats:
-                    p50 = lats[len(lats) // 2] * 1e3
-                    p95 = lats[min(len(lats) - 1,
-                                   int(len(lats) * 0.95))] * 1e3
+                    p50, p95 = pcts_ms(lats)
                     print(f"  {klass:12s}: n={len(lats)} "
                           f"p50={p50:.0f}ms p95={p95:.0f}ms")
+        for klass, d in st.get("ttft", {}).items():
+            print(f"  ttft {klass:12s}: n={d['count']} "
+                  f"p50={d['p50_ms']:.1f}ms p95={d['p95_ms']:.1f}ms")
     else:
         eng = Engine(params, cfg, batch_slots=args.slots,
                      cache_len=args.cache_len, mesh=mesh,
@@ -581,10 +633,17 @@ def main():
                      draft_sparsity=args.draft_sparsity,
                      draft_k=args.draft_k, draft_int8=args.draft_int8,
                      draft_interactive=args.draft_interactive,
-                     kv_dedup_every=args.kv_dedup_every)
+                     kv_dedup_every=args.kv_dedup_every,
+                     telemetry=Telemetry(trace=bool(args.trace_out)))
+        trace_writer = eng.telemetry.write_trace
+        prom_fn = eng.telemetry.prometheus
+        stop_rep = start_metrics_reporter(
+            lambda: eng.telemetry.registry.summary()["counters"],
+            args.metrics_interval)
         t0 = time.time()
         done = drive(eng.run, eng.stream)
         dt = time.time() - t0
+        stop_rep.set()
         if args.draft_sparsity is not None:
             st = eng.stats
             drafted = st["spec_draft_tokens"]
@@ -603,6 +662,14 @@ def main():
                       f"{mem.prefix_pages_reused} pages reused, "
                       f"{eng.stats['prefill_tokens_skipped']} prefill "
                       f"tokens skipped, {mem.cow_copies} COW copies")
+    if args.trace_out:
+        n_ev = trace_writer(args.trace_out)
+        print(f"trace: {n_ev} events -> {args.trace_out} "
+              "(load at ui.perfetto.dev)")
+    if args.metrics_dump:
+        with open(args.metrics_dump, "w", encoding="utf-8") as fh:
+            fh.write(prom_fn())
+        print(f"metrics -> {args.metrics_dump}")
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s, "

@@ -100,6 +100,7 @@ import numpy as np
 
 from repro.configs.base import MIXER_ATTN, ModelConfig
 from repro.models import lm
+from repro.serve.telemetry import Telemetry
 
 ADMISSION_MODES = ("continuous", "drain")
 SLO_CLASSES = ("interactive", "batch")
@@ -163,6 +164,46 @@ class Request:                          # is a mutable in-flight object
                             if self.out_tokens else None)
 
 
+# Engine counter keys, declared (declare-if-absent) into the telemetry
+# registry scope for this engine's rank. The analyzer's
+# TELEMETRY-DECLARED pass checks every stats[...] write in serve/
+# against repro.serve.telemetry.DECLARED_STATS.
+_STAT_KEYS = ("decode_steps", "admitted",
+              "prefill_tokens", "prefill_tokens_skipped",
+              "reprefill_tokens", "generated_tokens",
+              "continuous_refills", "preemptions",
+              "resumes", "failed", "requeued",
+              "cancelled", "deaths",
+              "spec_rounds", "spec_draft_tokens",
+              "spec_accepted_tokens", "spec_fallbacks")
+
+
+def _exec_path_label(params, cfg: ModelConfig) -> str:
+    """The execution-path label this engine's decode tokens are
+    credited to (telemetry per-path tok/s gauges, ROADMAP item 4):
+    dense / masked / bsr / kernel / packed / int8. Resolved once at
+    construction — a pure host-side walk of the param tree for the
+    packed-container markers (``deploy_packed`` sets path="kernel" and
+    replaces the BSR overlay with ``sasp_packed``/``sasp_fused``)."""
+    s = cfg.sasp
+    if not getattr(s, "enabled", False):
+        return "dense"
+    if getattr(s, "quantize", False):
+        return "int8"
+
+    def has_packed(p) -> bool:
+        if isinstance(p, dict):
+            return ("sasp_packed" in p or "sasp_fused" in p
+                    or any(has_packed(v) for v in p.values()))
+        if isinstance(p, (list, tuple)):
+            return any(has_packed(v) for v in p)
+        return False
+
+    if s.path == "kernel" and has_packed(params):
+        return "packed"
+    return s.path
+
+
 def _sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray
                    ) -> jnp.ndarray:
     """logits: (B, V) -> (B,) int32. Greedy where temp <= 0, else
@@ -191,20 +232,22 @@ class Engine:
                  draft_k: int = 4,
                  draft_int8: bool = False,
                  draft_interactive: bool = False,
-                 kv_dedup_every: int = 0):
+                 kv_dedup_every: int = 0,
+                 telemetry: Optional[Telemetry] = None):
         assert admission in ADMISSION_MODES, admission
         self.admission = admission
         self.rank = rank
         self.dead = False               # set by the scheduler on a raise
-        self.stats = {"decode_steps": 0, "admitted": 0,
-                      "prefill_tokens": 0, "prefill_tokens_skipped": 0,
-                      "reprefill_tokens": 0,
-                      "generated_tokens": 0,
-                      "continuous_refills": 0, "preemptions": 0,
-                      "resumes": 0, "failed": 0, "requeued": 0,
-                      "cancelled": 0, "deaths": 0,
-                      "spec_rounds": 0, "spec_draft_tokens": 0,
-                      "spec_accepted_tokens": 0, "spec_fallbacks": 0}
+        # telemetry (DESIGN.md §18): counters live in the registry's
+        # per-rank scope behind the same mapping surface the ad-hoc
+        # stats dict had; declare-if-absent keeps values across a
+        # revive_rank rebuild against a shared Telemetry. A private
+        # default (tracing off) keeps solo engines zero-config.
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry()
+        self._trace = self.telemetry.tracer
+        self.stats = self.telemetry.engine_stats(rank) \
+            .declare(_STAT_KEYS)
         self.mesh = mesh
         self.profile = profile
         if mesh is not None:
@@ -245,7 +288,8 @@ class Engine:
                 params, cfg, cache_len=cache_len,
                 device_pages=kv_pages, page_len=kv_page_len,
                 watermark=kv_watermark, host_pages=kv_host_pages,
-                mesh=mesh, profile=profile, share=kv_share)
+                mesh=mesh, profile=profile, share=kv_share,
+                telemetry=self.telemetry)
             self.caches = None
         else:
             self.caches = lm.init_caches(params, cfg, batch_slots,
@@ -336,6 +380,23 @@ class Engine:
                 "kv_dedup_every requires the sharing page pool "
                 "(kv_pages + kv_share) — without the radix index "
                 "there is no content evidence to merge on")
+        # per-path tok/s attribution (ROADMAP item 4's autotuner input)
+        self.path_label = _exec_path_label(self.params, cfg)
+        if self.pool is not None:
+            # export-time memory gauges — keyed so a revive_rank
+            # rebuild replaces its predecessor's collector instead of
+            # exporting a dead pool forever
+            self.telemetry.registry.register_collector(
+                self._memory_metrics, key=("kv_pool", rank))
+
+    def _memory_metrics(self):
+        """Prometheus lines for the page pool's MemoryStats (pure host
+        counters — no device sync)."""
+        out = {}
+        for k, v in self.pool.stats().as_dict().items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f'serve_kv_{k}{{rank="{self.rank}"}}'] = v
+        return out
 
     @staticmethod
     def _prefill_and_write(cfg, cache_len, params, toks, poss, caches,
@@ -471,6 +532,8 @@ class Engine:
         req.rank = self.rank
         req.status = "queued"
         self.queue.append(req)
+        self._trace.instant("submit", tid=self.rank, rid=req.rid,
+                            queue=len(self.queue))
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -540,6 +603,7 @@ class Engine:
     def _emit(self, req: Request, tok: int):
         """Append + stream a freshly sampled token."""
         req.out_tokens.append(tok)
+        self._trace.instant("token", tid=self.rank, rid=req.rid)
         if self.on_token is not None:
             self.on_token(req, tok)
 
@@ -577,6 +641,8 @@ class Engine:
         req.status = "queued"
         self.slot_req[slot] = None
         self.stats["preemptions"] += 1
+        self._trace.instant("preempt", tid=self.rank, rid=req.rid,
+                            kept_kv=bool(keep_kv))
         return req
 
     def _finish_resume(self, slot: int, req: Request):
@@ -585,6 +651,7 @@ class Engine:
         req.status = "running"
         self.slot_req[slot] = req
         self.stats["resumes"] += 1
+        self._trace.instant("resume", tid=self.rank, rid=req.rid)
 
     def _restore_slot(self, slot: int, req: Request):
         """KV-snapshot resume: scatter the saved cache rows back — no
@@ -669,6 +736,7 @@ class Engine:
         cache PAGES into the pool at each request's allocated pages
         (padding rows write to the trash page — no mask needed).
         Returns the last-token logits (G, V)."""
+        t0 = self._trace.t0()
         if self.pool is not None:
             dests = self.pool.dest_table([r.rid for r in reqs],
                                          toks.shape[0])
@@ -679,6 +747,10 @@ class Engine:
             logits_last, self.caches = self._prefill(
                 self.params, toks, poss, self.caches,
                 jnp.asarray(np.asarray(all_slots, np.int32)), valid)
+        self._trace.complete("prefill", t0, tid=self.rank,
+                             rids=[r.rid for r in reqs],
+                             rows=int(toks.shape[0]),
+                             S=int(toks.shape[1]))
         return logits_last
 
     def _prefill_into_slot(self, slot: int, req: Request,
@@ -698,6 +770,7 @@ class Engine:
         (nxt,) = self._sample_host(logits_last, [req])
         self._emit(req, nxt)
         req.t_first = time.monotonic()
+        self._observe_ttft(req)
         if self._retired_at_admission(req):
             return
         req.status = "running"
@@ -751,10 +824,19 @@ class Engine:
                 continue
             self._emit(req, nxt)
             req.t_first = now
+            self._observe_ttft(req)
             if self._retired_at_admission(req):
                 continue
             req.status = "running"
             self.slot_req[slot] = req
+
+    def _observe_ttft(self, req: Request):
+        """Aggregate time-to-first-token into the per-SLO-class
+        histogram the moment ``t_first`` is stamped (the stamp used to
+        be write-only — nothing ever read it back)."""
+        if req.t_submit is not None and req.t_first is not None:
+            self.telemetry.observe_ttft(req.slo,
+                                        req.t_first - req.t_submit)
 
     def _register_prompt(self, reqs: List[Request],
                          seqs: List[np.ndarray]):
@@ -800,9 +882,12 @@ class Engine:
         past_bt = self.pool.prefix_table(rids, skip_pages, nrows)
         dests = self.pool.dest_table(rids, nrows,
                                      skip_pages=skip_pages)
+        t0 = self._trace.t0()
         logits_last, self.pool.data = self._prefill_past(
             self.params, jnp.asarray(toks), jnp.asarray(poss),
             self.pool.data, jnp.asarray(past_bt), jnp.asarray(dests))
+        self._trace.complete("prefill", t0, tid=self.rank, rids=rids,
+                             rows=int(nrows), S=int(S), shared=True)
         self._register_prompt(reqs, seqs)
         temps = np.zeros((nrows,), np.float32)
         for g, r in enumerate(reqs):
@@ -820,6 +905,7 @@ class Engine:
                 continue
             self._emit(req, nxt)
             req.t_first = now
+            self._observe_ttft(req)
             if self._retired_at_admission(req):
                 continue
             req.status = "running"
@@ -872,6 +958,10 @@ class Engine:
             if len(free) < self.B:  # refill while other slots decode
                 self.stats["continuous_refills"] += len(popped)
             self.stats["admitted"] += len(popped)
+            if self._trace.enabled:
+                for req in popped:
+                    self._trace.instant("admit", tid=self.rank,
+                                        rid=req.rid)
             if not pending:
                 return
             # split sharing admissions (suffix-only prefill through the
@@ -1022,6 +1112,7 @@ class Engine:
 
         self.stats["decode_steps"] += 1
         self.stats["generated_tokens"] += len(active)
+        self.telemetry.note_tokens(self.path_label, len(active))
         for i in active:
             req = self.slot_req[i]
             self.pos[i] += 1
@@ -1103,6 +1194,8 @@ class Engine:
         B = self.B
         dparams, _ = self._draft
         finished: List[Request] = []
+        t_round = self._trace.t0()
+        emitted = 0
         try:
             slot_rids: List[Optional[int]] = [None] * B
             for i, req, _ in specs:
@@ -1160,11 +1253,13 @@ class Engine:
                 self.stats["spec_rounds"] += 1
                 self.stats["spec_draft_tokens"] += k
                 self.stats["spec_accepted_tokens"] += a
+                self.telemetry.note_spec_round(a, k)
                 done = False
                 for t in range(a + 1):
                     tok = int(pred[i, t])
                     self._emit(req, tok)
                     self.stats["generated_tokens"] += 1
+                    emitted += 1
                     if ((req.eos_id is not None and tok == req.eos_id)
                             or len(req.out_tokens)
                             >= req.max_new_tokens):
@@ -1216,6 +1311,10 @@ class Engine:
             # containment: a raise mid-round must not leak scratch
             for _, req, _ in specs:
                 self.pool.discard_scratch(req.rid)
+        if emitted:
+            self.telemetry.note_tokens("draft", emitted)
+        self._trace.complete("spec_round", t_round, tid=self.rank,
+                             slots=len(specs), emitted=emitted)
         return finished
 
     # -- failure containment (DESIGN.md §12/§14) -----------------------

@@ -73,6 +73,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.serve.chaos import ChaosMonkey
 from repro.serve.engine import Request
 from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+from repro.serve.telemetry import Telemetry, merged_ttft_stats
 
 HOST_STATES = ("healthy", "suspect", "dead")
 OUTCOMES = ("done", "rejected", "failed")
@@ -127,6 +128,7 @@ class LocalHost:
                  chaos: Optional[ChaosMonkey] = None):
         self.host_id = host_id
         self.sched = scheduler
+        self.telemetry = scheduler.telemetry
         self.chaos = chaos
         self.steps = 0                  # local step counter (chaos keys)
         self.killed = False             # chaos hard-kill latch
@@ -143,6 +145,8 @@ class LocalHost:
             return False
         if self.chaos is not None and self.chaos.heartbeat_dropped(
                 self.host_id, self.steps):
+            self.telemetry.tracer.instant("hb_drop", cat="chaos",
+                                          step=self.steps)
             return False
         return bool(self.sched._live())
 
@@ -176,6 +180,8 @@ class LocalHost:
         self.steps += 1
         if self.chaos is not None:
             if self.chaos.kill_due(self.host_id, self.steps):
+                self.telemetry.tracer.instant("host_kill", cat="chaos",
+                                              step=self.steps)
                 self.killed = True      # hard death: strands its work
                 return [], [], []
             d = self.chaos.delay_s(self.host_id)
@@ -414,17 +420,23 @@ class SubprocessHost:
 def make_local_hosts(params, cfg, *, hosts: int = 2,
                      sched: Optional[SchedulerConfig] = None,
                      ranks: int = 1, chaos: Optional[ChaosMonkey] = None,
-                     profile: str = "tp") -> List[LocalHost]:
+                     profile: str = "tp",
+                     trace: bool = False) -> List[LocalHost]:
     """Build N in-process hosts, each its own ShardedScheduler over
     ``ranks`` engine shards (rng seeds offset per host so hosts are
-    distinct engines, which greedy decoding never observes)."""
+    distinct engines, which greedy decoding never observes). Each host
+    gets its OWN Telemetry (same-rank engines on different hosts must
+    not share counter scopes); ``trace`` arms every host's span
+    tracer — the frontend merges the ring buffers at export."""
     sched = sched or SchedulerConfig()
     out = []
     for h in range(hosts):
         s = replace(sched, rng_seed=sched.rng_seed + h * max(1, ranks))
         out.append(LocalHost(
             h, ShardedScheduler(params, cfg, sched=s, ranks=ranks,
-                                profile=profile), chaos=chaos))
+                                profile=profile,
+                                telemetry=Telemetry(trace=trace)),
+            chaos=chaos))
     return out
 
 
@@ -438,7 +450,8 @@ class ClusterFrontend:
 
     def __init__(self, hosts: Sequence, cfg: Optional[FrontendConfig]
                  = None, *, on_token: Optional[
-                     Callable[[Request, int], None]] = None):
+                     Callable[[Request, int], None]] = None,
+                 telemetry: Optional[Telemetry] = None):
         assert hosts, "a frontend needs at least one host"
         ids = [h.host_id for h in hosts]
         assert len(set(ids)) == len(ids), f"duplicate host ids: {ids}"
@@ -446,6 +459,17 @@ class ClusterFrontend:
         self.cfg = cfg or FrontendConfig()
         self.on_token = on_token
         self.rng = random.Random(self.cfg.rng_seed)
+        # the frontend's OWN registry/tracer — retry/health/watchdog
+        # events land here, host events stay in the hosts' rings and
+        # merge at export. Default: trace iff any host traces.
+        if telemetry is None:
+            telemetry = Telemetry(trace=any(
+                getattr(h, "telemetry", None) is not None
+                and h.telemetry.tracer.enabled for h in hosts))
+        self.telemetry = telemetry
+        self._trace = telemetry.tracer
+        self.telemetry.registry.register_collector(
+            self._cluster_metrics, key="cluster")
         # guards trackers/outcome lists/health against concurrent
         # callers (submit from a caller thread while run()/step() ticks;
         # stats from a monitor). Reentrant: a LocalHost step fires
@@ -620,6 +644,8 @@ class ClusterFrontend:
         req.mark_resumable()
         req.status = "queued"
         tr.retry_at = time.monotonic() + self._backoff(tr.attempts)
+        self._trace.instant("retry", pid=-1, rid=req.rid,
+                            attempt=tr.attempts, reason=reason)
 
     def _flush_retries(self, now: float):
         for tr in self.unresolved():
@@ -648,6 +674,7 @@ class ClusterFrontend:
 
     def _mark_dead(self, hid: int, why: str):
         self._health[hid]["state"] = "dead"
+        self._trace.instant("host_dead", pid=-1, host=hid, why=why)
         host = self.hosts[hid]
         stranded = [t for t in self.unresolved() if t.host_id == hid]
         host.evacuate([t.req.rid for t in stranded])
@@ -663,6 +690,8 @@ class ClusterFrontend:
                 continue
             if tr.host_id is not None:
                 self.hosts[tr.host_id].cancel(tr.req.rid)
+            self._trace.instant("watchdog_cancel", pid=-1,
+                                rid=tr.req.rid)
             self._fail(tr, f"watchdog: exceeded {self.cfg.request_timeout}"
                        "s wall clock", replayable=False)
 
@@ -819,6 +848,7 @@ class ClusterFrontend:
             host.revive()
             host.set_sink(self._local_sink)
             self._health[host_id] = {"state": "healthy", "misses": 0}
+            self._trace.instant("host_revive", pid=-1, host=host_id)
             if not replay:
                 return
             for tr in list(self.trackers.values()):
@@ -835,6 +865,60 @@ class ClusterFrontend:
                 req.mark_resumable()
                 req.status = "queued"
                 self._dispatch(tr)
+
+    # -- telemetry export --------------------------------------------------
+    def _host_telemetries(self) -> List[Telemetry]:
+        return [h.telemetry for h in self.hosts.values()
+                if getattr(h, "telemetry", None) is not None]
+
+    def _cluster_metrics(self) -> Dict[str, float]:
+        """Collector on the frontend registry: per-host counter sums
+        (the ``host`` label keeps same-rank series from colliding) plus
+        the frontend's own lifecycle counters."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            out["serve_frontend_retries_total"] = self.n_retries
+            out["serve_frontend_deduped_tokens_total"] = self.n_deduped
+            for st in HOST_STATES:
+                n = sum(1 for h in self.hosts
+                        if self._state(h) == st)
+                out[f'serve_frontend_hosts{{state="{st}"}}'] = n
+            tels = list(self.hosts.items())
+        for hid, h in tels:
+            tel = getattr(h, "telemetry", None)
+            if tel is None:
+                continue
+            for k, v in tel.registry.summary()["counters"].items():
+                out[f'serve_{k}_total{{host="{hid}"}}'] = v
+        return out
+
+    def trace_events(self) -> List[Dict]:
+        """Chrome trace events merged across the frontend's own ring
+        (pid = -1) and every host's ring (pid rewritten to the host
+        id), time-sorted — one Perfetto track group per host, one row
+        per rank."""
+        evs = self.telemetry.tracer.events()
+        for hid, h in self.hosts.items():
+            tel = getattr(h, "telemetry", None)
+            if tel is None or tel.tracer is self.telemetry.tracer:
+                continue
+            for e in tel.tracer.events():
+                e["pid"] = hid
+                evs.append(e)
+        evs.sort(key=lambda e: e["ts"])
+        return evs
+
+    def write_trace(self, path: str) -> int:
+        trace = {"traceEvents": self.trace_events(),
+                 "displayTimeUnit": "ms"}
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(trace, fh)
+        return len(trace["traceEvents"])
+
+    def prometheus(self) -> str:
+        """Cluster-level text exposition: the frontend registry (whose
+        cluster collector folds in per-host counter sums)."""
+        return self.telemetry.prometheus()
 
     def stats(self) -> Dict:
         with self._lock:
@@ -853,5 +937,8 @@ class ClusterFrontend:
                 "deduped_tokens": self.n_deduped,
                 "delivered_tokens": sum(t.delivered
                                         for t in self.trackers.values()),
+                # cluster-wide TTFT per SLO class (associative
+                # snapshot merge across host registries)
+                "ttft": merged_ttft_stats(self._host_telemetries()),
                 "per_host": [h.stats() for h in self.hosts.values()],
             }

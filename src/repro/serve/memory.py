@@ -73,6 +73,7 @@ import jax.numpy as jnp
 from repro.configs.base import MIXER_ATTN, ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import lm
+from repro.serve.telemetry import SpanTracer, Telemetry
 
 ZERO_PAGE = 0
 TRASH_PAGE = 1
@@ -853,7 +854,8 @@ class PagedKVPool:
     def __init__(self, params, cfg: ModelConfig, *, cache_len: int,
                  device_pages: int, page_len: Optional[int] = None,
                  watermark: float = 1.0, host_pages: int = 0,
-                 mesh=None, profile: str = "tp", share: bool = False):
+                 mesh=None, profile: str = "tp", share: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         if any(m != MIXER_ATTN for m in cfg.layer_mixer_kinds()):
             raise ValueError(
                 "paged KV requires an attention-only stack (SSM/hybrid "
@@ -868,6 +870,9 @@ class PagedKVPool:
                 "kv_share is incompatible with kv_quant: suffix prefill "
                 "attends DEQUANTIZED int8 prefix KV, which breaks the "
                 "bit-identity contract vs the solo/contiguous engine")
+        self.telemetry = telemetry
+        self._trace = (telemetry.tracer if telemetry is not None
+                       else SpanTracer(enabled=False))
         self.cfg = cfg
         self.cache_len = int(cache_len)
         self.page_len = tile_aligned_page_len(cfg, cache_len, page_len)
@@ -1102,6 +1107,7 @@ class PagedKVPool:
         host per call, one batched scatter from host per call."""
         spills = [(m[3], m[4]) for m in moves if m[0] == "spill"]
         faults = [(m[3], m[4]) for m in moves if m[0] == "fault"]
+        t0 = self._trace.t0()
         if spills:
             dev_ids = jnp.asarray([d for d, _ in spills], jnp.int32)
             out = self._read(self.data, dev_ids)
@@ -1115,12 +1121,16 @@ class PagedKVPool:
                 hleaf[:, hs] = v
                 return hleaf
             jax.tree.map(put_host, self._host, vals)
+            self._trace.complete("spill", t0, cat="kv",
+                                 pages=len(spills))
         if faults:
             host_ids = [h for h, _ in faults]
             dev_ids = jnp.asarray([d for _, d in faults], jnp.int32)
             vals = jax.tree.map(lambda h: jnp.asarray(h[:, host_ids]),
                                 self._host)
             self.data = self._write(self.data, dev_ids, vals)
+            self._trace.complete("fault", t0, cat="kv",
+                                 pages=len(faults))
 
     # -- accounting ----------------------------------------------------
     def stats(self) -> MemoryStats:

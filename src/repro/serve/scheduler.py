@@ -91,6 +91,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, \
     Tuple
 
 from repro.serve.engine import Engine, Request
+from repro.serve.telemetry import Telemetry
 
 POLICIES = ("fcfs", "sjf", "edf")
 PREEMPT_MODES = ("kv", "reprefill")
@@ -182,7 +183,13 @@ class ShardedScheduler:
 
     def __init__(self, params, cfg, *, sched: Optional[SchedulerConfig]
                  = None, mesh=None, ranks: Optional[int] = None,
-                 profile: str = "tp"):
+                 profile: str = "tp",
+                 telemetry: Optional[Telemetry] = None):
+        # one registry/tracer per scheduler: rank engines share it (the
+        # rank label disambiguates), but two schedulers (= two hosts in
+        # the cluster frontend) never share counter scopes
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry()
         self.sched = sched or SchedulerConfig()
         assert self.sched.policy in POLICIES, self.sched.policy
         assert self.sched.preempt_mode in PREEMPT_MODES, \
@@ -240,7 +247,8 @@ class ShardedScheduler:
                      draft_sparsity=s.draft_sparsity,
                      draft_k=s.draft_k, draft_int8=s.draft_int8,
                      draft_interactive=s.draft_interactive,
-                     kv_dedup_every=s.kv_dedup_every)
+                     kv_dedup_every=s.kv_dedup_every,
+                     telemetry=self.telemetry)
         eng.on_token = self._sink
         return eng
 
@@ -268,6 +276,7 @@ class ShardedScheduler:
                               if isinstance(v, int)})
             self.shards[rank] = eng
             self.n_revived += 1
+            self.telemetry.tracer.instant("revive_rank", tid=rank)
             return self.shards[rank]
 
     def _resolve_buckets(self, ranks: int
@@ -486,6 +495,8 @@ class ShardedScheduler:
         not casualties."""
         eng.dead = True
         eng.stats["deaths"] += 1
+        self.telemetry.tracer.instant(
+            "rank_death", tid=eng.rank, error=type(err).__name__)
         done_at_admission = list(eng._finished_at_admission)
         eng._finished_at_admission = []
         requeue, eng.queue = list(eng.queue), []
@@ -681,5 +692,8 @@ class ShardedScheduler:
                                                 for h in headrooms)
                                     else sum(h for h in headrooms
                                              if h is not None)),
+                # TTFT (t_first - t_submit) quantiles per SLO class,
+                # observed by the engines at first-token stamp time
+                "ttft": self.telemetry.ttft_stats(),
                 "per_rank": [rank_stats(e) for e in self.shards],
             }

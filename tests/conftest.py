@@ -17,7 +17,13 @@ oracle — any stream difference is a sharing bug.
 self-speculative decoding: every paged engine defaults a 75%-sparsity
 drafter (interactive requests included), so the paged surface doubles
 as a speculation bit-identity oracle — greedy speculative streams
-must match sequential decode exactly (DESIGN.md §17)."""
+must match sequential decode exactly (DESIGN.md §17).
+
+``REPRO_TRACE=1`` (CI's ``trace`` matrix leg) arms the span tracer on
+every engine the suite builds: the serving tests then double as a
+telemetry bit-identity oracle — tracing consumes no RNG keys and
+forces no device syncs, so any stream difference is a telemetry bug
+(DESIGN.md §18)."""
 import os
 import signal
 
@@ -86,6 +92,26 @@ def _force_kv_share(monkeypatch):
         if kw.get("kv_pages") and not getattr(cfg, "kv_quant", False):
             kw.setdefault("kv_share", True)
         return orig(self, params, cfg, *args, **kw)
+
+    monkeypatch.setattr(Engine, "__init__", patched)
+    yield
+
+
+@pytest.fixture(autouse=True)
+def _force_trace(monkeypatch):
+    """CI trace leg (REPRO_TRACE=1): arm the span tracer + metrics on
+    every Engine so the serving tests re-run as telemetry bit-identity
+    oracles. Tracing is strictly host-side, so streams must be
+    unchanged (DESIGN.md §18)."""
+    if os.environ.get("REPRO_TRACE") != "1":
+        yield
+        return
+    from repro.serve.engine import Engine
+    orig = Engine.__init__
+
+    def patched(self, *args, **kw):
+        orig(self, *args, **kw)
+        self.telemetry.tracer.enabled = True
 
     monkeypatch.setattr(Engine, "__init__", patched)
     yield

@@ -17,7 +17,7 @@ sys.path.insert(0, REPO)
 
 from tools.analyze import PASS_NAMES, run_all  # noqa: E402
 from tools.analyze import (concurrency, packed, recompile, shim,  # noqa: E402
-                           trace_safety)
+                           telemetry, trace_safety)
 from tools.analyze.common import Finding, load_baseline, \
     write_baseline  # noqa: E402
 from tools.analyze.rules import RULES  # noqa: E402
@@ -293,6 +293,40 @@ def test_packed_repo_deployments_clean():
 
 
 # ---------------------------------------------------------------------------
+# pass 6: telemetry declaration discipline
+# ---------------------------------------------------------------------------
+
+def test_telemetry_fixture_true_positives():
+    found = telemetry.run(
+        FIX, files=[os.path.join(FIX, "telemetry_bad.py")])
+    assert _rules(found) == {"TELEMETRY-DECLARED"}, found
+    keys = {f.message.split("'")[1] for f in found}
+    assert keys == {"bogus_counter", "mystery_gauge"}, found
+
+
+def test_telemetry_clean_twin_silent():
+    found = telemetry.run(
+        FIX, files=[os.path.join(FIX, "telemetry_clean.py")])
+    assert found == [], found
+
+
+def test_telemetry_repo_serving_layer_clean():
+    """Every stats[...] write in src/repro/serve/ is declared — and the
+    scan has real coverage (the engine alone writes a dozen keys)."""
+    assert telemetry.run(REPO) == []
+    import ast as _ast
+    eng = os.path.join(REPO, "src", "repro", "serve", "engine.py")
+    with open(eng) as fh:
+        tree = _ast.parse(fh.read())
+    writes = [n for n in _ast.walk(tree)
+              if isinstance(n, (_ast.Assign, _ast.AugAssign))
+              and telemetry._stats_key(
+                  n.target if isinstance(n, _ast.AugAssign)
+                  else n.targets[0]) is not None]
+    assert len(writes) >= 8, len(writes)
+
+
+# ---------------------------------------------------------------------------
 # driver: baseline + strict gate
 # ---------------------------------------------------------------------------
 
@@ -303,7 +337,9 @@ def test_rule_registry_covers_all_findings():
         + recompile.run(REPO,
                         files=[os.path.join(FIX, "recompile_bad.py")])
         + concurrency.run(FIX, specs=FIX_LOCK_SPECS,
-                          lock_order=FIX_LOCK_ORDER))
+                          lock_order=FIX_LOCK_ORDER)
+        + telemetry.run(FIX,
+                        files=[os.path.join(FIX, "telemetry_bad.py")]))
     for f in fix_findings:
         assert f.rule in RULES, f
         assert f.severity == "error"

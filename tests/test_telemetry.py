@@ -1,0 +1,418 @@
+"""Serving telemetry subsystem (DESIGN.md §18): mergeable histogram
+snapshots (associative + commutative, quantiles invariant to merge
+order), the bounded span-tracer ring, Chrome trace-event schema
+round-trips, the backward-compatible CounterView surface, Prometheus
+export, per-path tok/s gauges + spec acceptance EMA — and the standing
+acceptance bar: greedy streams are bit-identical with tracing armed,
+across the plain, paged, shared-prefix, speculative, and
+preempt/spill/fault paths."""
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # the fixed twin below still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serve.chaos import ChaosConfig, ChaosMonkey
+from repro.serve.engine import Engine, Request
+from repro.serve.frontend import ClusterFrontend, FrontendConfig, \
+    make_local_hosts
+from repro.serve.scheduler import SchedulerConfig, ShardedScheduler
+from repro.serve.telemetry import CounterView, DECLARED_STATS, \
+    Histogram, HistSnapshot, MetricsRegistry, SpanTracer, Telemetry, \
+    TTFT_BOUNDS_S, merged_ttft_stats, nearest_rank, pcts_ms
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# nearest-rank quantiles (the deduped bench/CLI helpers)
+# ---------------------------------------------------------------------------
+
+
+def _legacy_pcts_ms(lats):
+    """The formula that used to live (twice) in bench_engine.py and
+    launch/serve.py — dedup must not move any reported number."""
+    xs = sorted(lats)
+    pct = lambda q: xs[min(len(xs) - 1, int(len(xs) * q))] * 1e3
+    return pct(0.5), pct(0.95)
+
+
+def test_pcts_ms_matches_legacy_formula():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 7, 19, 20, 100):
+        lats = sorted(rng.exponential(0.1, size=n).tolist())
+        assert pcts_ms(lats) == _legacy_pcts_ms(lats)
+    assert nearest_rank([5.0], 0.95) == 5.0
+    with pytest.raises(ValueError):
+        nearest_rank([], 0.5)
+
+
+# ---------------------------------------------------------------------------
+# histogram snapshots: merge is associative + commutative
+# ---------------------------------------------------------------------------
+
+
+def _snap(vals, bounds=TTFT_BOUNDS_S):
+    h = Histogram(bounds)
+    for v in vals:
+        h.observe(v)
+    return h.snapshot()
+
+
+def _same(x: HistSnapshot, y: HistSnapshot) -> None:
+    # everything discrete is exactly equal; total is a float sum, so
+    # merge order can move its last bit
+    assert (x.bounds, x.counts, x.count, x.vmin, x.vmax) == \
+        (y.bounds, y.counts, y.count, y.vmin, y.vmax)
+    assert x.total == pytest.approx(y.total)
+
+
+def _assert_merge_laws(a_vals, b_vals, c_vals):
+    a, b, c = _snap(a_vals), _snap(b_vals), _snap(c_vals)
+    _same(a.merge(b), b.merge(a))                        # commutative
+    _same(a.merge(b).merge(c), a.merge(b.merge(c)))      # associative
+    # any merge order equals one histogram observing the union
+    union = _snap(list(a_vals) + list(b_vals) + list(c_vals))
+    _same(c.merge(a).merge(b), union)
+    for q in (0.5, 0.95, 0.99):
+        assert a.merge(b).merge(c).quantile(q) == union.quantile(q)
+
+
+def test_hist_merge_laws_fixed_twin():
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        groups = [rng.exponential(0.2,
+                                  size=int(rng.integers(0, 40))).tolist()
+                  for _ in range(3)]
+        _assert_merge_laws(*groups)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(*(st.lists(st.floats(min_value=0.0, max_value=100.0,
+                                allow_nan=False), max_size=30)
+             for _ in range(3)))
+    def test_hist_merge_laws_property(a_vals, b_vals, c_vals):
+        _assert_merge_laws(a_vals, b_vals, c_vals)
+
+
+def test_hist_quantile_semantics():
+    bounds = (1.0, 2.0, 4.0)
+    assert HistSnapshot.empty(bounds).quantile(0.5) is None
+    # quantile resolves to the upper bound of the holding bucket
+    assert _snap([0.5], bounds).quantile(0.5) == 1.0
+    assert _snap([1.5, 1.6, 1.7], bounds).quantile(0.5) == 2.0
+    # overflow bucket answers vmax, the only exact value it has
+    assert _snap([9.0, 11.0], bounds).quantile(0.95) == 11.0
+    with pytest.raises(ValueError, match="different bucket bounds"):
+        _snap([1.0], bounds).merge(_snap([1.0], (1.0, 2.0)))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram((2.0, 1.0))
+    d = _snap([0.5, 3.0], bounds).as_dict()
+    assert d["count"] == 2 and d["min"] == 0.5 and d["max"] == 3.0
+
+
+def test_merged_ttft_stats_order_independent():
+    t1, t2 = Telemetry(), Telemetry()
+    for v in (0.002, 0.003, 0.004):
+        t1.observe_ttft("interactive", v)
+    for v in (0.2, 0.4):
+        t2.observe_ttft("interactive", v)
+    t2.observe_ttft("batch", 1.3)
+    ab = merged_ttft_stats([t1, t2])
+    assert ab == merged_ttft_stats([t2, t1])
+    assert ab["interactive"]["count"] == 5
+    assert ab["batch"]["count"] == 1
+    assert ab["interactive"]["p50_ms"] <= ab["interactive"]["p95_ms"]
+    # the facade view is the single-instance merge
+    assert t1.ttft_stats()["interactive"]["count"] == 3
+
+
+# ---------------------------------------------------------------------------
+# span tracer: bounded ring, free when disabled, Chrome schema
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_ring_never_exceeds_capacity():
+    tr = SpanTracer(capacity=16, enabled=True)
+    for i in range(50):
+        tr.instant(f"ev{i}", tid=0)
+    assert len(tr) == 16
+    assert tr.dropped == 50 - 16
+    names = [e["name"] for e in tr.events()]
+    assert names == [f"ev{i}" for i in range(34, 50)]   # oldest fell off
+
+
+def test_tracer_disabled_is_inert():
+    tr = SpanTracer(capacity=8, enabled=False)
+    assert tr.t0() == 0.0                # no clock read when disabled
+    tr.instant("x")
+    tr.complete("y", 0.0)
+    assert len(tr) == 0 and tr.events() == []
+
+
+def _check_chrome(trace):
+    """Schema check for the Chrome trace-event JSON object format —
+    the invariants Perfetto / chrome://tracing need to load a file."""
+    assert set(trace) == {"traceEvents", "displayTimeUnit"}
+    assert trace["displayTimeUnit"] == "ms"
+    for ev in trace["traceEvents"]:
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert isinstance(ev["cat"], str)
+        assert isinstance(ev["ts"], (int, float))       # microseconds
+        assert isinstance(ev["pid"], int)
+        assert isinstance(ev["tid"], int)
+        assert isinstance(ev["args"], dict)
+        if ev["ph"] == "X":                             # complete span
+            assert ev["dur"] >= 0.0
+        else:
+            assert ev["ph"] == "i" and ev["s"] == "g"   # global instant
+    return [e["name"] for e in trace["traceEvents"]]
+
+
+def test_chrome_trace_schema_roundtrip(tmp_path):
+    tr = SpanTracer(capacity=64, enabled=True)
+    tr.instant("submit", tid=1, rid=7)
+    t0 = tr.t0()
+    tr.complete("prefill", t0, tid=1, tokens=12)
+    tr.instant("admit", tid=0, cat="sched")
+    path = tmp_path / "trace.json"
+    assert tr.write(str(path)) == 3
+    with open(path) as fh:
+        trace = json.load(fh)
+    names = _check_chrome(trace)
+    assert names == ["submit", "prefill", "admit"]
+    spans = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert spans[0]["args"] == {"tokens": 12}
+
+
+# ---------------------------------------------------------------------------
+# counters + registry export
+# ---------------------------------------------------------------------------
+
+
+def test_counter_view_backward_compatible_surface():
+    reg = MetricsRegistry()
+    view = reg.counter_scope(rank=0).declare(["admitted", "failed"])
+    view["admitted"] += 2
+    view.update(failed=1)
+    view["memory"] = {"pages": 4}        # non-int side object
+    assert dict(view, extra=9)["extra"] == 9
+    assert view["memory"] == {"pages": 4}
+    assert ("memory", 4) not in view.int_items()
+    # declare-if-absent: a revived rank re-declaring must not zero
+    again = reg.counter_scope(rank=0).declare(["admitted", "failed"])
+    assert again is view and again["admitted"] == 2
+    # distinct label sets are distinct scopes
+    assert reg.counter_scope(rank=1)["admitted"] == 0 \
+        if "admitted" in reg.counter_scope(rank=1) else True
+
+
+def test_registry_prometheus_export():
+    reg = MetricsRegistry()
+    view = reg.counter_scope(rank=0).declare(["admitted"])
+    view["admitted"] += 3
+    reg.gauge("serve_queue_depth", 5)
+    reg.gauge("serve_none_gauge", lambda: None)          # skipped
+    reg.histogram("serve_ttft_seconds", (0.1, 1.0),
+                  slo="interactive").observe(0.05)
+    reg.histogram("serve_ttft_seconds", (0.1, 1.0),
+                  slo="interactive").observe(0.5)
+    reg.register_collector(lambda: {"serve_custom_total": 7}, key="c")
+    reg.register_collector(lambda: {"serve_custom_total": 8}, key="c")
+    text = reg.prometheus()
+    assert 'serve_admitted_total{rank="0"} 3' in text
+    assert "# TYPE serve_admitted_total counter" in text
+    assert "serve_queue_depth 5" in text
+    assert "serve_none_gauge" not in text
+    assert 'le="0.1"' in text and 'le="+Inf"' in text
+    assert 'serve_ttft_seconds_count{slo="interactive"} 2' in text
+    # keyed collector registration is idempotent — the replacement wins
+    assert "serve_custom_total 8" in text
+    assert "serve_custom_total 7" not in text
+
+
+def test_path_gauges_and_accept_ema():
+    tel = Telemetry()
+    assert tel.tok_s("packed") == 0.0
+    tel.note_tokens("packed", 40)
+    assert tel.tok_s("packed") > 0.0
+    text = tel.prometheus()
+    assert 'serve_path_tok_s{path="packed"}' in text
+    assert "serve_spec_accept_ema" not in text   # None until first round
+    tel.note_spec_round(3, 4)
+    assert tel.accept_ema.value == pytest.approx(0.75)
+    tel.note_spec_round(0, 0)                    # no division by zero
+    assert "serve_spec_accept_ema 0.75" in tel.prometheus()
+    assert "admitted" in DECLARED_STATS          # contract sanity
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: tracing armed must not move a single token
+# ---------------------------------------------------------------------------
+
+
+def _setup():
+    cfg = reduced(get_config("qwen3-32b"), layers=2, d_model=64, vocab=64)
+    params = lm.init_params(KEY, cfg)
+    params = jax.tree.map(lambda a: a * 3.0, params)  # see test_scheduler
+    return cfg, params
+
+
+def _mk_requests(n, rng, max_new=6):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 64, size=(int(
+                        rng.integers(4, 30)),)).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("kw", [
+    {},                                                        # plain
+    dict(kv_pages=16, kv_page_len=8),                          # paged
+    dict(kv_pages=16, kv_page_len=8, kv_share=True),           # share
+    dict(kv_pages=16, kv_page_len=8, draft_sparsity=0.75,      # spec
+         draft_k=4),
+], ids=["plain", "paged", "share", "spec"])
+def test_engine_streams_bit_identical_with_tracing(kw):
+    cfg, params = _setup()
+
+    def drive(trace):
+        rng = np.random.default_rng(0)
+        eng = Engine(params, cfg, batch_slots=2, cache_len=64,
+                     telemetry=Telemetry(trace=trace), **kw)
+        done = eng.run(_mk_requests(5, rng))
+        return {r.rid: r.out_tokens for r in done}, eng
+
+    ref, _ = drive(False)
+    got, eng = drive(True)
+    assert got == ref
+    names = set(_check_chrome(eng.telemetry.tracer.chrome()))
+    assert {"submit", "admit", "prefill", "token"} <= names, names
+    if "draft_sparsity" in kw:
+        assert "spec_round" in names, names
+
+
+def test_preempt_spill_resume_traced_and_bit_identical(tmp_path):
+    """The forced preempt→spill→fault cycle from test_memory.py, with
+    the tracer armed: streams still equal the (untraced) solo engine,
+    and the written trace file carries the full lifecycle."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    batch = Request(rid=0, prompt=rng.integers(0, 64, size=(18,))
+                    .astype(np.int32), max_new_tokens=14, slo="batch")
+    inter = Request(rid=1, prompt=rng.integers(0, 64, size=(40,))
+                    .astype(np.int32), max_new_tokens=3,
+                    slo="interactive", deadline=0.01)
+    ref = {}
+    for r in (batch, inter):
+        solo = Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+        ref[r.rid] = Engine(params, cfg, batch_slots=1,
+                            cache_len=64).run([solo])[0].out_tokens
+    sched = ShardedScheduler(
+        params, cfg, ranks=1,
+        sched=SchedulerConfig(slots_per_rank=1, cache_len=64,
+                              policy="edf", preempt=True,
+                              preempt_mode="kv", kv_pages=8,
+                              kv_page_len=8, kv_host_pages=8),
+        telemetry=Telemetry(trace=True))
+    assert sched.submit(batch)
+    for _ in range(4):
+        sched.step()
+    assert sched.submit(inter)
+    done = []
+    while sched.has_work():
+        done.extend(sched.step())
+    assert {r.rid: r.out_tokens for r in done} == ref
+    assert sched.stats()["preemptions"] >= 1
+    path = tmp_path / "sched_trace.json"
+    sched.telemetry.write_trace(str(path))
+    with open(path) as fh:
+        names = set(_check_chrome(json.load(fh)))
+    assert {"submit", "admit", "prefill", "token", "preempt",
+            "spill", "resume"} <= names, names
+    # TTFT histogram observed both SLO classes through the same run
+    ttft = sched.stats()["ttft"]
+    assert ttft["interactive"]["count"] >= 1
+    assert ttft["batch"]["count"] >= 1
+
+
+@pytest.mark.chaos
+def test_chaos_kill_trace_loads_and_carries_recovery(tmp_path):
+    """The acceptance trace: a ``kill:0@3`` chaos run (then a revive)
+    exports one Perfetto-loadable file whose events span both hosts'
+    rank activity (host pids) and the frontend's own retry/death/revive
+    instants (pid -1) — and the streams still finish bit-identically."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    reqs = _mk_requests(6, rng, max_new=4)
+    solo = {}
+    for r in reqs:
+        s = Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens)
+        solo[r.rid] = Engine(params, cfg, batch_slots=1,
+                             cache_len=64).run([s])[0].out_tokens
+    chaos = ChaosMonkey(ChaosConfig(kill_at_step={0: 3}))
+    hosts = make_local_hosts(
+        params, cfg, hosts=2,
+        sched=SchedulerConfig(slots_per_rank=2, cache_len=64),
+        chaos=chaos, trace=True)
+    fe = ClusterFrontend(hosts, FrontendConfig(retries=2,
+                                               backoff_base=0.001,
+                                               rng_seed=1))
+    completed = fe.run(reqs)
+    assert {r.rid: r.out_tokens for r in completed} == solo
+    assert fe.n_retries >= 1
+    fe.revive_host(0)
+
+    path = tmp_path / "chaos_trace.json"
+    n = fe.write_trace(str(path))
+    with open(path) as fh:
+        trace = json.load(fh)
+    assert len(trace["traceEvents"]) == n
+    names = set(_check_chrome(trace))
+    # (a host-level kill leaves its ranks intact, so host_revive — not
+    # the scheduler's revive_rank — is the recovery marker here)
+    assert {"submit", "admit", "prefill", "token", "host_kill",
+            "host_dead", "retry", "host_revive"} <= names, names
+    pids = {e["pid"] for e in trace["traceEvents"]}
+    assert {-1, 0, 1} <= pids, pids      # frontend + both hosts
+    # events are globally time-ordered (the exporter sorts the concat)
+    ts = [e["ts"] for e in trace["traceEvents"]]
+    assert ts == sorted(ts)
+    # cluster-level Prometheus: per-host counter series, no duplicates
+    text = fe.prometheus()
+    assert 'host="0"' in text and 'host="1"' in text
+    assert "serve_frontend_retries_total" in text
+    # merged TTFT view aggregates across hosts
+    ttft = fe.stats()["ttft"]
+    assert sum(d["count"] for d in ttft.values()) >= len(reqs)
+
+
+def test_exec_path_labels_feed_gauges():
+    from repro.configs import SASPConfig
+    from repro.serve.engine import _exec_path_label
+    cfg, params = _setup()
+    assert _exec_path_label(params, cfg) == "dense"
+    sasp = SASPConfig(enabled=True, block_k=8, block_n=8, sparsity=0.25)
+    assert _exec_path_label(
+        params, dataclasses.replace(cfg, sasp=sasp)) == sasp.path
+    assert _exec_path_label(
+        params, dataclasses.replace(
+            cfg, sasp=dataclasses.replace(sasp, quantize=True))) == "int8"
+    # decode tokens are credited to the engine's resolved label
+    eng = Engine(params, cfg, batch_slots=1, cache_len=64)
+    assert eng.path_label == "dense"
+    rng = np.random.default_rng(2)
+    eng.run(_mk_requests(1, rng, max_new=4))
+    assert eng.telemetry.tok_s("dense") > 0.0

@@ -1,12 +1,13 @@
 """Repo-specific static analysis suite (DESIGN.md §15).
 
-Five passes over the serving stack's implicit contracts:
+Six passes over the serving stack's implicit contracts:
 
 1. ``trace_safety`` — host/trace confusion reachable from jax.jit roots
 2. ``shim``         — shard_map must route through distribution/context
 3. ``recompile``    — admission jit-cache budget + cache-key hazards
 4. ``concurrency``  — declared lock-protection map for the frontend
 5. ``packed``       — PackedSASPWeight/PackedFFN format invariants
+6. ``telemetry``    — stats keys must be declared in DECLARED_STATS
 
 Run ``python -m tools.analyze [--strict] [--baseline FILE]``.
 
@@ -30,7 +31,7 @@ __all__ = [
 def run_all(root=None, passes=None):
     """Run the requested passes (default: all). Returns findings."""
     from . import (concurrency, packed, recompile, shim,
-                   trace_safety)
+                   telemetry, trace_safety)
     from .common import REPO_ROOT
 
     mods = {
@@ -39,6 +40,7 @@ def run_all(root=None, passes=None):
         "recompile": recompile,
         "concurrency": concurrency,
         "packed": packed,
+        "telemetry": telemetry,
     }
     root = root or REPO_ROOT
     out = []

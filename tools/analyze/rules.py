@@ -96,8 +96,16 @@ PACK_KIND = _rule(
     "shard carrying a fused activation, or bias shape not matching "
     "the declared sharding.")
 
+# ---- pass 6: telemetry declaration discipline ------------------------------
+TELEMETRY_DECLARED = _rule(
+    "TELEMETRY-DECLARED", "error", "telemetry",
+    "stats[...] key written in src/repro/serve/ but not declared in "
+    "repro.serve.telemetry.DECLARED_STATS (would be invisible to the "
+    "Prometheus / cluster-summary export surface).")
+
 PASS_NAMES: Tuple[str, ...] = (
-    "trace_safety", "shim", "recompile", "concurrency", "packed")
+    "trace_safety", "shim", "recompile", "concurrency", "packed",
+    "telemetry")
 
 
 def rules_for_pass(pass_name: str) -> Tuple[Rule, ...]:
